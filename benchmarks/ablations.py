@@ -1,0 +1,123 @@
+"""Beyond-paper ablations of the three CroSatFL mechanisms.
+
+  1. StarMask policy: trained RL policy vs untrained vs greedy fallback —
+     terminal reward (Eq. 17) on held-out instances.
+  2. Skip-One: on vs off — per-session train energy + compute barrier.
+  3. random-k: k_nbr in {0, 1, 2, 4} — rounds-to-accuracy (k_nbr=0
+     disables cross-aggregation entirely: clusters drift).
+
+    PYTHONPATH=src python -m benchmarks.ablations [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import BenchSetup, print_csv, save_rows
+from repro.core.session import Session, SessionConfig
+from repro.core.skipone import SkipOneParams
+from repro.core.starmask import (Instance, StarMaskParams, cluster,
+                                 greedy_fallback, reward, train_policy)
+
+
+def make_instances(n_sats, count, seed0=100):
+    out = []
+    for s in range(count):
+        rng = np.random.default_rng(seed0 + s)
+        out.append(Instance(
+            share=rng.dirichlet(np.ones(n_sats)),
+            hw=rng.integers(0, 2, n_sats),
+            t_comp=rng.lognormal(2.0, 0.6, n_sats),
+            e_train=rng.lognormal(4.0, 0.5, n_sats),
+            fanout=rng.integers(3, 8, n_sats),
+            lisl_e=rng.uniform(1, 5, (n_sats, n_sats))))
+    return out
+
+
+def ablate_starmask(n_sats=20, episodes=150):
+    p = StarMaskParams(k_max=8, m_min=2)
+    train_insts = make_instances(n_sats, 4, seed0=0)
+    test_insts = make_instances(n_sats, 6, seed0=500)
+    params, hist = train_policy(train_insts, p, jax.random.PRNGKey(0),
+                                episodes=episodes)
+    rows = []
+    for variant in ("greedy-fallback", "rl-untrained", "rl-trained"):
+        rewards = []
+        for i, inst in enumerate(test_insts):
+            if variant == "greedy-fallback":
+                cl = greedy_fallback(inst, p)
+                r, _ = reward(cl, inst, p)
+            else:
+                pp = params if variant == "rl-trained" else None
+                res = cluster(inst, p, jax.random.PRNGKey(i), params=pp,
+                              n_samples=6)
+                r = res.reward
+            rewards.append(r)
+        rows.append({"mechanism": "starmask", "variant": variant,
+                     "mean_reward": float(np.mean(rewards)),
+                     "std": float(np.std(rewards))})
+        print(f"starmask {variant:16s} reward {np.mean(rewards):+.4f} "
+              f"± {np.std(rewards):.4f}")
+    return rows
+
+
+def ablate_skipone(setup: BenchSetup):
+    rows = []
+    for on in (True, False):
+        env, model = setup.build()
+        cfg = setup.session_config(model)
+        if not on:
+            cfg = dataclasses.replace(
+                cfg, skip_one=SkipOneParams(theta_T=0, theta_E=0,
+                                            theta_H=1e9))  # never skips
+        _, ledger, _ = Session(cfg, env, model).run()
+        rows.append({"mechanism": "skip-one", "variant": "on" if on else "off",
+                     "train_energy_kj": ledger.train_energy_j / 1e3,
+                     "compute_time_s": ledger.compute_time_s})
+        print(f"skip-one {'on ' if on else 'off'}: "
+              f"E={ledger.train_energy_j/1e3:.3f}kJ "
+              f"barrier={ledger.compute_time_s:.1f}s")
+    assert rows[0]["compute_time_s"] <= rows[1]["compute_time_s"] + 1e-9
+    return rows
+
+
+def ablate_knbr(setup: BenchSetup):
+    rows = []
+    for k_nbr in (0, 1, 2, 4):
+        s = dataclasses.replace(setup, k_nbr=k_nbr)
+        env, model = s.build()
+        sess = Session(s.session_config(model), env, model)
+        _, ledger, hist = sess.run(eval_fn=lambda p, r: model.evaluate(p))
+        rows.append({"mechanism": "random-k", "variant": f"k={k_nbr}",
+                     "final_acc": hist[-1]["acc"],
+                     "inter_lisl": ledger.inter_lisl_count})
+        print(f"random-k k_nbr={k_nbr}: acc={hist[-1]['acc']:.3f} "
+              f"inter-LISL={ledger.inter_lisl_count}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rows = []
+    rows += ablate_starmask(n_sats=12 if args.quick else 20,
+                            episodes=40 if args.quick else 150)
+    setup = BenchSetup(dataset="eurosat-sim",
+                       n_clients=8 if args.quick else 20,
+                       n_train=600 if args.quick else 2000,
+                       rounds=3 if args.quick else 10,
+                       local_epochs=1 if args.quick else 3,
+                       k_max=4 if args.quick else 8)
+    rows += ablate_skipone(setup)
+    rows += ablate_knbr(setup)
+    save_rows("ablations_quick" if args.quick else "ablations", rows)
+    for mech in ("starmask", "skip-one", "random-k"):
+        print_csv([r for r in rows if r["mechanism"] == mech])
+
+
+if __name__ == "__main__":
+    main()

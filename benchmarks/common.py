@@ -1,0 +1,100 @@
+"""Shared benchmark scaffolding: the paper's experimental setup scaled to
+the CPU container (same protocol structure, smaller models/data), with a
+``--full`` flag for paper-scale runs on real hardware.
+
+All benchmarks print CSV to stdout and write under ``results/``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.constellation import ConstellationEnv
+from repro.core.session import Session, SessionConfig
+from repro.core.starmask import StarMaskParams
+from repro.data.synth import dirichlet_partition, iid_partition, make_dataset
+from repro.fl.baselines import BASELINES, BaselineConfig
+from repro.fl.client import ImageFLModel
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+DATASETS = ("mnist-sim", "cifar10-sim", "eurosat-sim")
+TARGET_ACC = {"mnist-sim": 0.95, "cifar10-sim": 0.75, "eurosat-sim": 0.80}
+
+
+@dataclass
+class BenchSetup:
+    dataset: str
+    iid: bool = True
+    n_clients: int = 40
+    n_train: int = 4000
+    n_test: int = 800
+    rounds: int = 40
+    local_epochs: int = 10
+    k_max: int = 12
+    k_nbr: int = 2
+    seed: int = 0
+    gpu_fraction: float = 0.5
+
+    def build(self):
+        ds = make_dataset(self.dataset, n=self.n_train, seed=self.seed)
+        test = make_dataset(self.dataset, n=self.n_test, seed=self.seed + 99)
+        if self.iid:
+            parts = iid_partition(len(ds.y), self.n_clients, self.seed)
+        else:
+            parts = dirichlet_partition(ds.y, self.n_clients, alpha=0.5,
+                                        seed=self.seed)
+        env = ConstellationEnv(
+            n_clients=self.n_clients,
+            n_samples=np.array([len(p) for p in parts], float),
+            gpu_fraction=self.gpu_fraction, seed=self.seed)
+        model = ImageFLModel(ds, parts, test)
+        return env, model
+
+    def session_config(self, model) -> SessionConfig:
+        return SessionConfig(
+            edge_rounds=self.rounds, local_epochs=self.local_epochs,
+            k_nbr=self.k_nbr, model_bits=model.model_bits(),
+            seed=self.seed, starmask=StarMaskParams(k_max=self.k_max,
+                                                    m_min=2))
+
+    def baseline_config(self, model) -> BaselineConfig:
+        return BaselineConfig(
+            rounds=self.rounds, local_epochs=self.local_epochs,
+            model_bits=model.model_bits(), seed=self.seed)
+
+
+def run_crosatfl(setup: BenchSetup, eval_every: bool = True):
+    env, model = setup.build()
+    sess = Session(setup.session_config(model), env, model)
+    eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
+    return sess.run(eval_fn=eval_fn)
+
+
+def run_baseline(name: str, setup: BenchSetup, eval_every: bool = True):
+    env, model = setup.build()
+    eng = BASELINES[name](setup.baseline_config(model), env, model)
+    eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
+    return eng.run(eval_fn=eval_fn)
+
+
+def save_rows(name: str, rows: list[dict]):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.jsonl")
+    with open(path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r, default=float) + "\n")
+    return path
+
+
+def print_csv(rows: list[dict]):
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(f"{r.get(k, '')}" if not isinstance(r.get(k), float)
+                       else f"{r[k]:.6g}" for k in keys))

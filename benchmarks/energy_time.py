@@ -1,0 +1,69 @@
+"""Fig. 4: total energy consumption and end-to-end training time to reach
+a common target accuracy per dataset (MNIST 95%, CIFAR-10 75%, EuroSAT
+80% in the paper; the simulated datasets use the same targets).
+
+    PYTHONPATH=src python -m benchmarks.energy_time [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (BenchSetup, DATASETS, TARGET_ACC, print_csv,
+                               run_baseline, run_crosatfl, save_rows)
+from repro.fl.baselines import BASELINES
+
+
+def _to_target(hist, target):
+    """First round reaching target (None if never)."""
+    for h in hist:
+        if h["acc"] >= target:
+            return h
+    return None
+
+
+def run(datasets, rounds, n_train, n_clients, local_epochs, scale=1.0):
+    rows = []
+    for dataset in datasets:
+        target = TARGET_ACC[dataset] * scale
+        setup = BenchSetup(dataset=dataset, iid=True, rounds=rounds,
+                           n_train=n_train, n_clients=n_clients,
+                           local_epochs=local_epochs)
+        for method in ["CroSatFL"] + list(BASELINES):
+            if method == "CroSatFL":
+                _, ledger, hist = run_crosatfl(setup)
+            else:
+                _, ledger, hist = run_baseline(method, setup)
+            hit = _to_target(hist, target)
+            at = hit if hit is not None else hist[-1]
+            rows.append({
+                "method": method, "dataset": dataset, "target": target,
+                "reached": hit is not None,
+                "rounds_to_target": at["round"] + 1,
+                "total_energy_kj": at["tx_energy_kj"] + at["train_energy_kj"],
+                "tx_energy_kj": at["tx_energy_kj"],
+                "train_energy_kj": at["train_energy_kj"],
+                "train_time_h": at["wall_clock_h"] + at["waiting_h"],
+                "final_acc": hist[-1]["acc"],
+            })
+            print(f"{method:10s} {dataset}: reached={rows[-1]['reached']} "
+                  f"E={rows[-1]['total_energy_kj']:.2f}kJ "
+                  f"T={rows[-1]['train_time_h']:.1f}h")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    if args.quick:
+        rows = run(list(DATASETS)[:1], rounds=4, n_train=800, n_clients=10,
+                   local_epochs=1, scale=0.5)
+    else:
+        rows = run(list(DATASETS), rounds=15, n_train=2400, n_clients=20,
+                   local_epochs=3, scale=1.0)
+    save_rows("energy_time", rows)
+    print_csv(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Roofline table (deliverable g): reads results/dryrun.jsonl produced by
+``python -m repro.launch.dryrun --all --both-meshes`` and renders the
+per-(arch x shape x mesh) three-term roofline with dominant bottleneck and
+one-line recommendations.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--json results/dryrun.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+RECOMMEND = {
+    "compute": "compute-bound: raise MXU utilization (bigger block shapes, "
+               "bf16 dots, fewer replicated-compute regions)",
+    "memory": "memory-bound: fuse elementwise chains, cut remat recompute, "
+              "keep activations bf16, widen per-step batch per device",
+    "collective": "collective-bound: reduce TP activation all-reduces "
+                  "(pure-DP/FSDP for small-d archs, sequence-parallel "
+                  "norms), overlap grad reduce with backward",
+}
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") == "ok":
+                rows.append(r)
+    # dedupe, keep last per (arch, shape, mesh)
+    uniq = {}
+    for r in rows:
+        uniq[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(uniq.values())
+
+
+def render(rows):
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} "
+           f"{'t_comp(s)':>10s} {'t_mem(s)':>10s} {'t_coll(s)':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'frac':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+              f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:6.3f}")
+    print()
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:3]
+    print("Hillclimb candidates (worst roofline fraction):")
+    for r in worst:
+        print(f"  {r['arch']} x {r['shape']} [{r['mesh']}] "
+              f"frac={r['roofline_fraction']:.4f} dom={r['dominant']}: "
+              f"{RECOMMEND[r['dominant']]}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=os.path.join(RESULTS, "dryrun.jsonl"))
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.json):
+        print(f"no dry-run results at {args.json}; run "
+              f"`python -m repro.launch.dryrun --all --both-meshes` first")
+        return 1
+    rows = load(args.json)
+    render(rows)
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark aggregator: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the QUICK profile (CPU-container-sized: fewer rounds/clients);
+``--full`` runs the paper-scale protocol (40 clients, 40 edge rounds,
+10 local epochs) — hours on this CPU, intended for real hardware.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args(argv)
+    quick = [] if args.full else ["--quick"]
+
+    from benchmarks import (ablations, comm_breakdown, convergence,
+                            energy_time, hardware_mix, roofline)
+
+    suite = [
+        ("convergence (Figs. 2-3)", convergence.main, quick),
+        ("energy_time (Fig. 4)", energy_time.main, quick),
+        ("comm_breakdown (Table II)", comm_breakdown.main, quick),
+        ("hardware_mix (Fig. 5)", hardware_mix.main, quick),
+        ("ablations (beyond-paper)", ablations.main, quick),
+        ("roofline baseline (EXPERIMENTS §Roofline)", roofline.main, []),
+    ]
+    import os
+    opt = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_opt.jsonl")
+    if os.path.exists(opt):
+        suite.append(("roofline optimized (EXPERIMENTS §Perf)",
+                      roofline.main, ["--json", opt]))
+    failures = 0
+    for name, fn, fargs in suite:
+        if any(s in name for s in args.skip):
+            continue
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            fn(fargs)
+        except Exception as e:  # keep the suite running
+            failures += 1
+            print(f"FAILED {name}: {type(e).__name__}: {e}")
+        print(f"--- {name} done in {time.time() - t0:.0f}s ---")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

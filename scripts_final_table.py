@@ -1,0 +1,27 @@
+"""Regenerate the EXPERIMENTS.md optimized-vs-baseline summary (run after
+sweeps complete): prints per-cell bound seconds and speedups."""
+import json
+
+def load(path):
+    uniq = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("status") == "ok":
+            uniq[(r["arch"], r["shape"], r["mesh"])] = r
+    return uniq
+
+base = load("results/dryrun.jsonl")
+opt = load("results/dryrun_opt.jsonl")
+print(f"{'cell':55s} {'base bound':>10s} {'opt bound':>10s} {'x':>6s} {'opt frac':>8s}")
+speedups = []
+for key in sorted(base):
+    if key not in opt:
+        continue
+    b = max(base[key][k] for k in ("t_compute_s","t_memory_s","t_collective_s"))
+    o = max(opt[key][k] for k in ("t_compute_s","t_memory_s","t_collective_s"))
+    x = b / o if o else float("inf")
+    speedups.append(x)
+    tag = f"{key[0]} {key[1]} [{key[2]}]"
+    print(f"{tag:55s} {b:10.3f} {o:10.3f} {x:6.2f} {opt[key]['roofline_fraction']:8.3f}")
+import statistics
+print(f"\ngeomean speedup: {statistics.geometric_mean(speedups):.2f}x over {len(speedups)} cells")

@@ -1,0 +1,2 @@
+from repro.ckpt.store import (load_pytree, load_session, save_pytree,
+                              save_session)  # noqa: F401

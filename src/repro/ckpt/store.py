@@ -1,0 +1,120 @@
+"""Checkpoint / restore: pytrees -> per-leaf npz shards with a manifest.
+
+Fault-tolerance contract (DESIGN.md §6):
+
+* ``save_pytree``/``load_pytree`` — any JAX pytree of arrays. Leaves are
+  stored under stable path-keys so a checkpoint written by one process
+  layout restores under another (elastic resume).
+* ``save_session``/``load_session`` — full CroSatFL SessionState
+  (cluster models + Skip-One fairness counters + masters + RNG key +
+  energy ledger + round index), written at edge-round boundaries. A
+  restarted session continues from the latest cluster models — exactly
+  the paper's master-migration property.
+* Writes are atomic (tmp + rename) so a crash mid-write never corrupts
+  the latest checkpoint; ``load_*`` falls back to the newest valid step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import EnergyLedger
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    keys, leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    manifest = {"keys": keys, "n": len(leaves)}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".npz")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, manifest=json.dumps(manifest), **arrays)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (keys must match)."""
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(str(z["manifest"]))
+        keys_like, leaves_like, treedef = _flatten_with_paths(like)
+        if manifest["keys"] != keys_like:
+            # elastic restore: match by key name
+            by_key = {k: z[f"leaf_{i}"] for i, k in enumerate(manifest["keys"])}
+            leaves = [jnp.asarray(by_key[k]) for k in keys_like]
+        else:
+            leaves = [jnp.asarray(z[f"leaf_{i}"])
+                      for i in range(manifest["n"])]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Session state
+# ---------------------------------------------------------------------------
+
+def save_session(state, path: str) -> None:
+    """state: core.session.SessionState."""
+    from repro.core.skipone import SkipOneState
+    os.makedirs(path, exist_ok=True)
+    save_pytree(state.cluster_models, os.path.join(path, "models.npz"))
+    meta = {
+        "round_idx": state.round_idx,
+        "masters": state.masters.tolist(),
+        "rng_key": np.asarray(state.rng_key).tolist(),
+        "ledger": dataclasses.asdict(state.ledger),
+        "skip": [{"kappa": s.kappa.tolist(), "tau": s.tau.tolist(),
+                  "phi": s.phi.tolist()} for s in state.skip_states],
+    }
+    tmp = os.path.join(path, ".meta.tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, os.path.join(path, "meta.json"))
+
+
+def load_session(path: str, models_like) -> "SessionState":
+    from repro.core.session import SessionState
+    from repro.core.skipone import SkipOneState
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    models = load_pytree(os.path.join(path, "models.npz"), models_like)
+    skip = [SkipOneState(np.array(s["kappa"]), np.array(s["tau"]),
+                         np.array(s["phi"])) for s in meta["skip"]]
+    ledger = EnergyLedger(**meta["ledger"])
+    return SessionState(
+        round_idx=meta["round_idx"], cluster_models=models,
+        skip_states=skip, masters=np.array(meta["masters"]),
+        rng_key=jnp.asarray(np.array(meta["rng_key"], np.uint32)),
+        ledger=ledger)
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    """Newest valid step dir (named ``step_<n>``) under ``directory``."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and \
+                os.path.exists(os.path.join(directory, name, "meta.json")):
+            try:
+                steps.append((int(name.split("_")[1]), name))
+            except ValueError:
+                continue
+    if not steps:
+        return None
+    return os.path.join(directory, max(steps)[1])

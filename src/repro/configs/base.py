@@ -1,0 +1,271 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture gets a module in ``repro.configs`` exposing
+``CONFIG: ArchConfig``. The registry maps ``--arch <id>`` names to configs.
+
+Shapes are the four assigned input-shape cells. ``input_specs()`` builds
+``jax.ShapeDtypeStruct`` stand-ins for every model input so the multi-pod
+dry-run can lower/compile without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Layer-kind vocabulary for hybrid block patterns.
+#   mixer kinds: "attn", "attn_local", "attn_global", "mamba", "slstm", "mlstm"
+#   ffn kinds:   "mlp", "moe", "none"
+# A pattern is a tuple of (mixer, ffn) pairs; the full layer list is
+#   prefix_pattern + pattern * num_periods + suffix_pattern
+# --------------------------------------------------------------------------
+
+LayerKind = tuple[str, str]
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # ---- attention variants -------------------------------------------------
+    attn_type: str = "gqa"           # gqa | mla
+    rope_variant: str = "rope"       # rope | mrope | none
+    rope_theta: float = 10_000.0
+    rope_pct: float = 1.0            # partial rotary (stablelm: 0.25)
+    sliding_window: int = 0          # 0 = full attention (applies to attn_local too)
+    qk_norm: bool = False
+
+    # ---- MLA (deepseek) ------------------------------------------------------
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # ---- MoE -----------------------------------------------------------------
+    num_experts: int = 0             # routed experts
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_groups: int = 0              # >0: group-local dispatch (see layers.moe_fwd)
+
+    # ---- hybrid / pattern ----------------------------------------------------
+    prefix_pattern: tuple[LayerKind, ...] = ()
+    pattern: tuple[LayerKind, ...] = ()   # one period; empty -> (("attn","mlp"),)
+    num_periods: int = 0                  # 0 -> num_layers // len(pattern)
+    suffix_pattern: tuple[LayerKind, ...] = ()
+
+    # ---- SSM (mamba) ---------------------------------------------------------
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0           # 0 -> ceil(d_model/16)
+
+    # ---- xLSTM ---------------------------------------------------------------
+    xlstm_proj_factor: float = 2.0   # mLSTM up-projection factor
+    xlstm_conv: int = 4
+
+    # ---- encoder-decoder (whisper) -------------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq: int = 1500          # post-conv audio frames
+    max_positions: int = 32_768      # learned-position table (decoder)
+
+    # ---- modality frontend stub ----------------------------------------------
+    frontend: str = "none"           # none | patches | audio_frames
+    num_patches: int = 0             # vlm: patch embeddings per sample
+
+    # ---- misc ----------------------------------------------------------------
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    sandwich_norm: bool = False      # gemma3 pre+post norms
+    mlp_gated: bool = True
+    act: str = "silu"                # silu | gelu
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    # long-context applicability: archs with pure full attention skip long_500k
+    supports_long_context: bool = False
+    # sharding policy: False -> pure DP/FSDP for single-pod training (small
+    # d_model archs where TP means replicated attention compute and
+    # Megatron-style activation all-reduces; see EXPERIMENTS.md §Perf)
+    prefer_tp: bool = True
+    notes: str = ""
+
+    # -------------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def layer_kinds(self) -> tuple[LayerKind, ...]:
+        pat = self.pattern or (("attn", "mlp"),)
+        periods = self.num_periods or (
+            (self.num_layers - len(self.prefix_pattern) - len(self.suffix_pattern))
+            // len(pat)
+        )
+        kinds = self.prefix_pattern + pat * periods + self.suffix_pattern
+        assert len(kinds) == self.num_layers, (
+            f"{self.name}: pattern yields {len(kinds)} layers, want {self.num_layers}"
+        )
+        return kinds
+
+    @property
+    def resolved_num_periods(self) -> int:
+        pat = self.pattern or (("attn", "mlp"),)
+        return self.num_periods or (
+            (self.num_layers - len(self.prefix_pattern) - len(self.suffix_pattern))
+            // len(pat)
+        )
+
+    @property
+    def resolved_pattern(self) -> tuple[LayerKind, ...]:
+        return self.pattern or (("attn", "mlp"),)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (exact for our implementation)."""
+        from repro.models.api import count_params  # lazy: avoid cycle
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.api import count_params
+        return count_params(self, active_only=True)
+
+    def reduced(self, **over) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        pat = self.resolved_pattern
+        small: dict[str, Any] = dict(
+            num_layers=len(self.prefix_pattern) + len(pat) * 2 + len(self.suffix_pattern),
+            num_periods=2,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads > 1 else 1,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=128,
+            encoder_seq=16 if self.is_encoder_decoder else self.encoder_seq,
+            num_encoder_layers=2 if self.is_encoder_decoder else 0,
+            max_positions=64,
+            num_patches=4 if self.frontend == "patches" else 0,
+            sliding_window=8 if self.sliding_window else 0,
+        )
+        if self.num_experts:
+            small.update(num_experts=8, num_shared_experts=min(self.num_shared_experts, 2),
+                         moe_top_k=min(self.moe_top_k, 2), moe_d_ff=32)
+        if self.attn_type == "mla":
+            small.update(kv_lora_rank=32, q_lora_rank=48, qk_nope_head_dim=16,
+                         qk_rope_head_dim=8, v_head_dim=16, head_dim=0)
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+ARCH_IDS: tuple[str, ...] = (
+    "qwen2-vl-7b", "stablelm-3b", "granite-34b", "gemma3-1b", "h2o-danube-1.8b",
+    "whisper-large-v3", "deepseek-v2-236b", "qwen2-moe-a2.7b",
+    "jamba-1.5-large-398b", "xlstm-125m",
+)
+
+_MODULE_FOR: dict[str, str] = {
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "stablelm-3b": "stablelm_3b",
+    "granite-34b": "granite_34b",
+    "gemma3-1b": "gemma3_1b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "whisper-large-v3": "whisper_large_v3",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "xlstm-125m": "xlstm_125m",
+}
+
+
+def get_config(arch: str) -> ArchConfig:
+    if arch not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch]}")
+    return mod.CONFIG
+
+
+def cells(include_long: bool = True) -> list[tuple[str, str]]:
+    """All assigned (arch, shape) dry-run cells — 40 total."""
+    out: list[tuple[str, str]] = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            out.append((a, s))
+    if not include_long:
+        out = [(a, s) for a, s in out if s != "long_500k"]
+    return out
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k only runs for sub-quadratic archs (see DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: long_500k skipped per assignment"
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Model inputs for one step of the given kind.
+
+    train:   tokens/labels (B, S) [+ frontend embeds, + mrope positions]
+    prefill: tokens (B, S) [+ ...]; returns logits for the last position
+    decode:  token (B, 1) + pos (B,) + KV cache holding ``seq_len`` context
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    specs: dict[str, Any] = {}
+
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = sd((B, S), i32)
+        if shape.kind == "train":
+            specs["labels"] = sd((B, S), i32)
+        if cfg.frontend == "patches":
+            specs["patch_embeds"] = sd((B, cfg.num_patches, cfg.d_model), cfg.dtype)
+        if cfg.rope_variant == "mrope":
+            specs["position_ids"] = sd((3, B, S), i32)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = sd((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    else:  # decode
+        from repro.models.api import cache_specs  # lazy import
+        specs["token"] = sd((B, 1), i32)
+        specs["pos"] = sd((B,), i32)
+        specs["cache"] = cache_specs(cfg, batch=B, max_seq=S)
+        if cfg.rope_variant == "mrope":
+            specs["position_ids"] = sd((3, B, 1), i32)
+        # enc-dec: the cross-attention k/v live inside the cache (computed at
+        # prefill); no frames are re-encoded per decode step.
+    return specs

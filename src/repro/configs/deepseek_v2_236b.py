@@ -1,0 +1,37 @@
+"""deepseek-v2-236b [moe] — 60L d_model=5120 128H d_ff=1536(expert)
+vocab=102400, MoE 160 routed top-6 + 2 shared, MLA kv_lora=512.
+
+MLA: compressed kv cache (kv_lora_rank + rope_head_dim per token), absorbed
+projections at decode. First layer dense (d_ff=12288). EP shards routed
+experts over the `model` axis. [arXiv:2405.04434; hf]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,           # MLA: per-head values decoded from shared latent
+    d_ff=12288,                 # dense (first) layer FFN
+    vocab_size=102400,
+    attn_type="mla",
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    num_experts=160,
+    num_shared_experts=2,
+    moe_top_k=6,
+    moe_groups=16,    # group-local dispatch (§Perf deepseek EXP-A)
+    moe_d_ff=1536,
+    prefix_pattern=(("attn", "mlp"),),
+    pattern=(("attn", "moe"),),
+    num_periods=59,
+    act="silu",
+    mlp_gated=True,
+    supports_long_context=True,
+    notes="MLA cache is (S, 512+64) per layer — O(seq·576); seq-sharded at 500k",
+)

@@ -1,0 +1,34 @@
+"""gemma3-1b [dense] — 26L d_model=1152 4H (MQA kv=1) d_ff=6912 vocab=262144.
+
+5:1 local:global attention interleave (local = 512-token sliding window),
+head_dim=256, qk-norm, sandwich norms, gated GeLU. 128k+ context capable;
+SWA keeps long_500k sub-quadratic. [hf:google/gemma-3-1b-pt; unverified]
+"""
+from repro.configs.base import ArchConfig
+
+_PERIOD = (("attn_local", "mlp"),) * 5 + (("attn_global", "mlp"),)
+
+CONFIG = ArchConfig(
+    prefer_tp=False,
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    rope_theta=1_000_000.0,
+    sliding_window=512,
+    qk_norm=True,
+    sandwich_norm=True,
+    pattern=_PERIOD,
+    num_periods=4,
+    suffix_pattern=(("attn_local", "mlp"), ("attn_local", "mlp")),
+    act="gelu",
+    mlp_gated=True,
+    tie_embeddings=True,
+    supports_long_context=True,
+    notes="local layers SWA(512); 4 global layers carry the 500k cache (kv=1)",
+)

@@ -1,0 +1,23 @@
+"""granite-34b [dense] — 88L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.
+
+Code model, GPTBigCode-style: MQA (single kv head), non-gated GeLU MLP
+(2-matrix FFN keeps the listed config at ~34B params). [arXiv:2405.04324; hf]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    norm="layernorm",
+    act="gelu",
+    mlp_gated=False,
+    supports_long_context=False,
+    notes="MQA kv=1: kv proj replicated under TP; q heads sharded",
+)

@@ -1,0 +1,24 @@
+"""h2o-danube-1.8b [dense] — 24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000.
+
+Llama+Mistral mix with sliding-window attention (4096) on all layers —
+cache is window-bounded, so long_500k runs. [arXiv:2401.16818; hf]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    prefer_tp=False,
+    name="h2o-danube-1.8b",
+    family="dense",
+    num_layers=24,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6912,
+    vocab_size=32000,
+    sliding_window=4096,
+    pattern=(("attn_local", "mlp"),),
+    act="silu",
+    mlp_gated=True,
+    supports_long_context=True,
+    notes="SWA(4096) everywhere: decode cache bounded by the window",
+)

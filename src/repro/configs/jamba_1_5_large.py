@@ -1,0 +1,40 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2.
+
+Mamba:attention 7:1 interleave (attention mid-block), MoE every other layer.
+9 periods x 8 layers. Mamba state is O(1) in sequence; the 9 attention
+layers' 500k cache is head_dim-sharded. [arXiv:2403.19887; hf]
+"""
+from repro.configs.base import ArchConfig
+
+_PERIOD = (
+    ("mamba", "mlp"), ("mamba", "moe"), ("mamba", "mlp"), ("mamba", "moe"),
+    ("attn",  "mlp"), ("mamba", "moe"), ("mamba", "mlp"), ("mamba", "moe"),
+)
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    rope_variant="none",        # jamba uses no positional encoding in attn
+    num_experts=16,
+    num_shared_experts=0,
+    moe_top_k=2,
+    moe_groups=16,    # group-local dispatch (single-pod; §Perf)
+    moe_d_ff=24576,
+    pattern=_PERIOD,
+    num_periods=9,
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+    act="silu",
+    mlp_gated=True,
+    supports_long_context=True,
+    notes="1:7 attn:mamba; 398B total / ~94B active",
+)

@@ -1,0 +1,28 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (GQA kv=16) d_ff=1408(expert)
+vocab=151936, MoE 60 routed top-4 + 4 shared (each 1408).
+
+Routed experts padded 60->64 for clean EP over the 16-way model axis.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    prefer_tp=False,
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    num_experts=64,   # 60 routed padded to 64 for clean 16-way EP
+    num_shared_experts=4,
+    moe_top_k=4,
+    moe_groups=16,    # group-local dispatch (§Perf)
+    moe_d_ff=1408,
+    pattern=(("attn", "moe"),),
+    act="silu",
+    mlp_gated=True,
+    supports_long_context=False,
+)

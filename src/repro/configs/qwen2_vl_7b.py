@@ -1,0 +1,28 @@
+"""qwen2-vl-7b [vlm] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+
+M-RoPE (3-section rotary over t/h/w), dynamic resolution handled by the
+(stubbed) vision frontend: ``input_specs()`` supplies precomputed patch
+embeddings spliced at the sequence head. [arXiv:2409.12191; hf]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    prefer_tp=False,
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    rope_variant="mrope",
+    rope_theta=1_000_000.0,
+    frontend="patches",
+    num_patches=256,
+    act="silu",
+    mlp_gated=True,
+    supports_long_context=False,
+    notes="M-RoPE sections (16,24,24) over head_dim/2; patch embeds stubbed",
+)

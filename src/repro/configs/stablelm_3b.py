@@ -1,0 +1,23 @@
+"""stablelm-3b [dense] — 32L d_model=2560 32H (GQA kv=32) d_ff=6912 vocab=50304.
+
+StableLM family: partial rotary (25%), LayerNorm, gated SiLU MLP.
+[hf:stabilityai/stablelm-2-1_6b; unverified]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    prefer_tp=False,
+    name="stablelm-3b",
+    family="dense",
+    num_layers=32,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=6912,
+    vocab_size=50304,
+    rope_pct=0.25,
+    norm="layernorm",
+    act="silu",
+    mlp_gated=True,
+    supports_long_context=False,
+)

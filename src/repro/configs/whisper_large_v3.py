@@ -1,0 +1,28 @@
+"""whisper-large-v3 [audio] — enc-dec, 32L(+32 enc) d_model=1280 20H d_ff=5120
+vocab=51866. Conv frontend is a STUB: ``input_specs()`` provides precomputed
+frame embeddings (1500 frames). Non-gated GeLU MLP, LayerNorm, learned
+positions (rope off). [arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    prefer_tp=False,
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    rope_variant="none",
+    is_encoder_decoder=True,
+    num_encoder_layers=32,
+    encoder_seq=1500,
+    frontend="audio_frames",
+    norm="layernorm",
+    act="gelu",
+    mlp_gated=False,
+    supports_long_context=False,
+    notes="decoder self-attn full; cross-attn to 1500 encoder frames",
+)

@@ -1,0 +1,25 @@
+"""xlstm-125m [ssm] — 12L d_model=768 4H d_ff=0 vocab=50304.
+
+Alternating sLSTM / mLSTM blocks (6 periods of 2). No separate FFN (d_ff=0):
+blocks carry their own up/down projections. Constant-size recurrent state
+=> long_500k runs trivially. [arXiv:2405.04517; unverified]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    prefer_tp=False,
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    rope_variant="none",
+    pattern=(("slstm", "none"), ("mlstm", "none")),
+    num_periods=6,
+    xlstm_proj_factor=2.0,
+    act="gelu",
+    supports_long_context=True,
+)

@@ -1,0 +1,4 @@
+"""Orbital substrate: Walker-Delta geometry, LISL graph, GS windows,
+hardware heterogeneity, and the simulation env for the session controller."""
+from repro.constellation.sim import ConstellationEnv  # noqa: F401
+from repro.constellation.walker import WalkerDelta  # noqa: F401

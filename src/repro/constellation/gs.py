@@ -1,0 +1,111 @@
+"""Ground-station visibility (paper §III-B, Canberra GS).
+
+GS at latitude -35.40139, longitude 148.98167 (paper §V-A). The GS position
+rotates with the Earth in ECI; a satellite is visible when its elevation
+above the local horizon exceeds the mask angle.
+
+``next_window`` scans forward in time for the next visibility window —
+the paper's "waiting time" for GS-bound transfers comes from here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.constellation.walker import OMEGA_EARTH, R_EARTH, WalkerDelta
+
+CANBERRA_LAT = -35.40139
+CANBERRA_LON = 148.98167
+
+
+@dataclass(frozen=True)
+class GroundStation:
+    lat_deg: float = CANBERRA_LAT
+    lon_deg: float = CANBERRA_LON
+    elevation_mask_deg: float = 10.0
+    rate_bps: float = 8e6
+
+    def position(self, t: float | np.ndarray) -> np.ndarray:
+        """ECI position (…, 3); Earth rotation carries the GS eastward."""
+        t = np.asarray(t, np.float64)
+        lat = np.deg2rad(self.lat_deg)
+        lon = np.deg2rad(self.lon_deg) + OMEGA_EARTH * t
+        clat = np.cos(lat)
+        return R_EARTH * np.stack(
+            [clat * np.cos(lon), clat * np.sin(lon),
+             np.full_like(np.asarray(lon, np.float64), np.sin(lat))], -1)
+
+    def elevation(self, sat_pos: np.ndarray, t: float | np.ndarray) -> np.ndarray:
+        """Elevation angle (deg) of satellite(s) above the GS horizon."""
+        gs = self.position(t)
+        rel = sat_pos - gs
+        up = gs / np.linalg.norm(gs, axis=-1, keepdims=True)
+        rng = np.linalg.norm(rel, axis=-1)
+        sin_el = (rel * up).sum(-1) / np.maximum(rng, 1e-9)
+        return np.rad2deg(np.arcsin(np.clip(sin_el, -1.0, 1.0)))
+
+    def visible(self, sat_pos: np.ndarray, t: float | np.ndarray) -> np.ndarray:
+        return self.elevation(sat_pos, t) > self.elevation_mask_deg
+
+    def slant_range(self, sat_pos: np.ndarray, t: float | np.ndarray) -> np.ndarray:
+        return np.linalg.norm(sat_pos - self.position(t), axis=-1)
+
+    def next_window(self, constellation: WalkerDelta, sat: int, t0: float,
+                    step_s: float = 30.0, horizon_s: float = 86_400.0,
+                    ) -> tuple[float, float]:
+        """(wait_s, slant_range_m at contact) for satellite ``sat`` from t0.
+
+        Scans forward in ``step_s`` increments (a 570 km pass lasts minutes,
+        so 30 s resolution is adequate for the energy model)."""
+        ts = t0 + np.arange(0.0, horizon_s, step_s)
+        pos = constellation.positions(ts)[:, sat, :]
+        vis = self.visible(pos, ts)
+        idx = np.argmax(vis)
+        if not vis[idx]:
+            # no contact in horizon: report horizon as wait, nominal range
+            return horizon_s, 2_000_000.0
+        return float(ts[idx] - t0), float(self.slant_range(pos[idx], ts[idx]))
+
+
+class WindowTable:
+    """Precomputed GS-visibility table for fast repeated window queries.
+
+    Baselines query ``next_window`` thousands of times (per client, per
+    round); scanning the orbit each time is O(horizon) per call. This
+    precomputes visibility + slant range on a ``step_s`` grid over one
+    table period and answers queries by index arithmetic, wrapping
+    periodically (the constellation/GS geometry repeats on the order of
+    the orbital/ground-track period; the wrap approximation only affects
+    the tail of multi-day sessions).
+    """
+
+    def __init__(self, gs: GroundStation, constellation: WalkerDelta,
+                 step_s: float = 30.0, horizon_s: float = 86_400.0):
+        self.gs, self.step_s, self.horizon_s = gs, step_s, horizon_s
+        ts = np.arange(0.0, horizon_s, step_s)
+        pos = constellation.positions(ts)                    # (T, n, 3)
+        gp = gs.position(ts)[:, None, :]                     # (T, 1, 3)
+        rel = pos - gp
+        rng = np.linalg.norm(rel, axis=-1)
+        up = gp / np.linalg.norm(gp, axis=-1, keepdims=True)
+        sin_el = (rel * up).sum(-1) / np.maximum(rng, 1e-9)
+        el = np.rad2deg(np.arcsin(np.clip(sin_el, -1, 1)))
+        self.vis = el > gs.elevation_mask_deg                # (T, n)
+        self.rng = rng.astype(np.float32)
+        self.n_steps = len(ts)
+
+    def next_window(self, sat: int, t0: float) -> tuple[float, float]:
+        i0 = int(t0 / self.step_s)
+        col_v = self.vis[:, sat]
+        col_r = self.rng[:, sat]
+        for wrap in range(2):
+            start = (i0 if wrap == 0 else 0) % self.n_steps
+            seg = col_v[start:] if wrap == 0 else col_v
+            hit = np.argmax(seg)
+            if seg[hit]:
+                idx = start + hit if wrap == 0 else hit
+                wait = (hit if wrap == 0
+                        else (self.n_steps - start) + hit) * self.step_s
+                return float(wait), float(col_r[idx % self.n_steps])
+        return self.horizon_s, 2_000_000.0

@@ -1,0 +1,85 @@
+"""Walker-Delta constellation geometry (paper Table I).
+
+720 LEO satellites: 36 orbital planes x 20 satellites, 570 km altitude,
+70 deg inclination (Starlink-like shell). Circular orbits; positions are
+computed in ECI with standard rotation composition
+
+    r(t) = Rz(RAAN_p) @ Rx(incl) @ [R cos u, R sin u, 0]
+
+with argument of latitude u = u0 + n t, mean motion n = sqrt(mu / R^3).
+Walker phasing: in-plane spacing 360/20 = 18 deg; inter-plane phase offset
+F * 360 / 720 per plane (relative spacing between adjacent planes).
+
+Vectorized numpy — the simulation is host-side orchestration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+MU_EARTH = 3.986004418e14        # m^3/s^2
+R_EARTH = 6_371_000.0            # m
+OMEGA_EARTH = 7.2921159e-5       # rad/s
+
+
+@dataclass(frozen=True)
+class WalkerDelta:
+    n_planes: int = 36
+    sats_per_plane: int = 20
+    altitude_m: float = 570_000.0
+    inclination_deg: float = 70.0
+    phasing_f: int = 1           # Walker F in [0, n_planes)
+
+    @property
+    def n_sats(self) -> int:
+        return self.n_planes * self.sats_per_plane
+
+    @property
+    def radius_m(self) -> float:
+        return R_EARTH + self.altitude_m
+
+    @property
+    def mean_motion(self) -> float:
+        return float(np.sqrt(MU_EARTH / self.radius_m ** 3))
+
+    @property
+    def period_s(self) -> float:
+        return 2 * np.pi / self.mean_motion
+
+    def plane_of(self, sat: np.ndarray | int):
+        return np.asarray(sat) // self.sats_per_plane
+
+    def positions(self, t: float | np.ndarray) -> np.ndarray:
+        """ECI positions (..., n_sats, 3) in meters at time(s) t (s)."""
+        t = np.asarray(t, np.float64)
+        squeeze = t.ndim == 0
+        t = np.atleast_1d(t)
+
+        p = np.arange(self.n_planes)
+        s = np.arange(self.sats_per_plane)
+        raan = 2 * np.pi * p / self.n_planes                       # (P,)
+        u0 = (2 * np.pi * s[None, :] / self.sats_per_plane
+              + 2 * np.pi * self.phasing_f * p[:, None] / self.n_sats)  # (P,S)
+        u = u0[None] + self.mean_motion * t[:, None, None]         # (T,P,S)
+
+        inc = np.deg2rad(self.inclination_deg)
+        cu, su = np.cos(u), np.sin(u)
+        # orbital-plane coords -> ECI
+        x_orb, y_orb = cu, su
+        x_i = x_orb
+        y_i = y_orb * np.cos(inc)
+        z_i = y_orb * np.sin(inc)
+        cr, sr = np.cos(raan), np.sin(raan)                        # (P,)
+        x = cr[None, :, None] * x_i - sr[None, :, None] * y_i
+        y = sr[None, :, None] * x_i + cr[None, :, None] * y_i
+        z = z_i
+        pos = np.stack([x, y, z], -1).reshape(t.shape[0], self.n_sats, 3)
+        pos = pos * self.radius_m
+        return pos[0] if squeeze else pos
+
+    def pairwise_distances(self, t: float) -> np.ndarray:
+        """(n_sats, n_sats) meters at time t."""
+        pos = self.positions(t)
+        diff = pos[:, None, :] - pos[None, :, :]
+        return np.linalg.norm(diff, axis=-1)

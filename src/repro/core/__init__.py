@@ -1,0 +1,10 @@
+"""CroSatFL core: the paper's contribution.
+
+starmask  — RL-based LISL-feasible clustering (Alg. 1)
+skipone   — per-round single-straggler skipping (Alg. 2)
+crossagg  — random-k cross-aggregation + consolidation (Eq. 34-38)
+energy    — computation / LISL / GS energy + latency model (Eq. 2-13)
+session   — full on-orbit session controller (GS bootstrap -> R edge
+            rounds -> consolidation -> GS downlink)
+"""
+from repro.core import crossagg, energy, skipone, starmask  # noqa: F401

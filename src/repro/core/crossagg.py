@@ -1,0 +1,124 @@
+"""Random-k cross-aggregation (paper §IV-C, Eq. 34-38).
+
+Cluster masters hold models w_k. In each edge round every master samples up
+to ``k_nbr`` reachable masters from the instantaneous cross-plane LISL
+topology and takes a sample-size-weighted average over {self} + sample.
+
+Two equivalent implementations:
+
+* ``mixing_matrix`` + ``apply_mixing`` — builds the (K, K) row-stochastic
+  matrix M with M[k, j] = N_j / sum_{l in group_k} N_l and applies it to
+  stacked models ``(K, ...)``. This is the jittable/datacenter form: one
+  einsum per leaf (and the Pallas ``cross_agg`` kernel fuses it).
+* ``sample_groups`` — host-side sampling used by the constellation
+  simulation (numpy RNG on the observed reachability graph).
+
+Consolidation (Eq. 38) is the special case of one group containing all
+clusters.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Sampling (Eq. 35-36)
+# ---------------------------------------------------------------------------
+
+def sample_groups(reach: np.ndarray, k_nbr: int,
+                  rng: np.random.Generator) -> list[np.ndarray]:
+    """Per-cluster mixing groups M_k = {k} ∪ N_k (Eq. 36).
+
+    reach: (K, K) bool reachability of master graph at this edge round
+    (diagonal ignored). Samples min(k_nbr, |reach_k|) neighbors uniformly
+    without replacement (Eq. 35).
+    """
+    K = reach.shape[0]
+    groups = []
+    for k in range(K):
+        nbrs = np.flatnonzero(reach[k] & (np.arange(K) != k))
+        take = min(k_nbr, nbrs.size)
+        sel = rng.choice(nbrs, size=take, replace=False) if take else np.array([], int)
+        groups.append(np.concatenate([[k], sel]).astype(int))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Mixing matrix (Eq. 37)
+# ---------------------------------------------------------------------------
+
+def mixing_matrix(groups: Sequence[np.ndarray], n_samples: np.ndarray) -> np.ndarray:
+    """Row-stochastic (K, K): row k averages over group_k weighted by N_j."""
+    K = len(groups)
+    M = np.zeros((K, K), np.float64)
+    for k, g in enumerate(groups):
+        w = n_samples[g].astype(np.float64)
+        M[k, g] = w / w.sum()
+    return M
+
+
+def mixing_matrix_jax(reach: jax.Array, n_samples: jax.Array, k_nbr: int,
+                      key: jax.Array) -> jax.Array:
+    """Jittable Eq. 35-37: per-row uniform sample of k_nbr reachable
+    neighbors via Gumbel top-k over the reach mask, then N_j-weighted
+    row normalization. reach: (K,K) bool; n_samples: (K,) float."""
+    K = reach.shape[0]
+    eye = jnp.eye(K, dtype=bool)
+    cand = reach & ~eye
+    g = jax.random.gumbel(key, (K, K))
+    # rank candidates per row; non-candidates get -inf
+    scores = jnp.where(cand, g, -jnp.inf)
+    thresh = -jnp.sort(-scores, axis=1)[:, k_nbr - 1] if k_nbr > 0 else jnp.inf
+    chosen = cand & (scores >= thresh[:, None]) if k_nbr > 0 else jnp.zeros_like(cand)
+    sel = chosen | eye                                   # {k} ∪ N_k
+    w = jnp.where(sel, n_samples[None, :].astype(F32), 0.0)
+    return w / w.sum(axis=1, keepdims=True)
+
+
+def apply_mixing(M, stacked_models):
+    """w'_k = sum_j M[k,j] w_j for every leaf of the stacked (K, ...) pytree."""
+    Mj = jnp.asarray(M, F32)
+
+    def mix(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1)
+        out = (Mj @ flat.astype(F32)).astype(leaf.dtype)
+        return out.reshape(leaf.shape)
+
+    return jax.tree.map(mix, stacked_models)
+
+
+# ---------------------------------------------------------------------------
+# Consolidation (Eq. 38)
+# ---------------------------------------------------------------------------
+
+def consolidate(stacked_models, n_samples):
+    """w_final = sum_k (N_k / sum N) w_k."""
+    w = jnp.asarray(n_samples, F32)
+    w = w / w.sum()
+
+    def avg(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1).astype(F32)
+        return (w @ flat).astype(leaf.dtype).reshape(leaf.shape[1:])
+
+    return jax.tree.map(avg, stacked_models)
+
+
+# ---------------------------------------------------------------------------
+# Gossip diagnostics (beyond-paper: consensus-rate bound)
+# ---------------------------------------------------------------------------
+
+def consensus_contraction(M: np.ndarray, n_samples: np.ndarray) -> float:
+    """Second-largest singular value of the pi-weighted mixing operator —
+    an upper bound on per-round disagreement contraction. Used by tests and
+    the convergence benchmark to sanity-check that random-k mixing actually
+    propagates information (sigma_2 < 1 on a connected average graph)."""
+    pi = n_samples / n_samples.sum()
+    # project out the consensus direction in the pi-weighted inner product
+    P = np.eye(len(pi)) - np.outer(np.ones_like(pi), pi)
+    return float(np.linalg.svd(P @ M @ P, compute_uv=False)[0])

@@ -1,0 +1,181 @@
+"""End-to-end energy / latency model (paper §III-B, §III-C, Eq. 2-13).
+
+All quantities are SI (seconds, joules, bits). Functions are pure and
+vectorized over satellites so round-level accounting is a handful of
+`jnp`/`np` reductions; the session controller (core/session.py) sums them
+into the Table-II ledger.
+
+Hardware profiles come from constellation/hardware.py; link rates/latencies
+from constellation/lisl.py + gs.py. Paper parameter values (Table I) are the
+defaults in LinkParams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+CPU, GPU = 0, 1  # hardware type codes (h_i)
+
+
+# ---------------------------------------------------------------------------
+# Parameters (paper Table I defaults)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LinkParams:
+    """Communication constants. Rates in bit/s, powers in W, delays in s."""
+    lisl_rate: float = 16e6          # paper data rate: 16 Mbps
+    gs_rate: float = 8e6             # GS: half LISL (bandwidth 1.25 vs 2.5 GHz)
+    lisl_power: float = 10.0         # LISL Tx power (laser terminals ~10 W)
+    gs_power: float = 40.0           # paper transmission power p = 40 W
+    light_speed: float = 299_792_458.0
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    """Per-satellite compute profile x_i (paper Eq. 2-4, 8-9).
+
+    alpha: effective FLOP/s throughput; cycles_per_sample C_i^CPU;
+    freq f_i^CPU (Hz); kappa: switched capacitance gamma_i;
+    gpu_power P_i^avg (W).
+    """
+    hw_type: int                     # CPU | GPU
+    alpha: float                     # FLOP/s
+    cycles_per_sample: float = 4e7   # C_i^CPU
+    freq: float = 1.5e9              # f_i^CPU
+    kappa: float = 1e-27             # gamma_i (effective switched capacitance)
+    gpu_power: float = 30.0          # P_i^avg (space-rated GPU, e.g. Jetson class)
+
+
+# ---------------------------------------------------------------------------
+# Computation (Eq. 2-4, 7-11)
+# ---------------------------------------------------------------------------
+
+def flops_per_epoch(n_samples, c_flop: float):
+    """Eq. 2: FLOPs_i = n_i * c_flop."""
+    return np.asarray(n_samples, np.float64) * c_flop
+
+
+def t_comp(n_samples, c_flop: float, alpha):
+    """Eq. 4: per-epoch runtime = FLOPs_i / alpha_i."""
+    return flops_per_epoch(n_samples, c_flop) / np.asarray(alpha, np.float64)
+
+
+def t_train(n_samples, c_flop: float, alpha, local_epochs: int):
+    """Eq. 3: T_i^train = L_loc * T_i^comp."""
+    return local_epochs * t_comp(n_samples, c_flop, alpha)
+
+
+def e_train(n_samples, c_flop: float, profiles, local_epochs: int):
+    """Eq. 7-11: per-round computation energy per satellite.
+
+    CPU: gamma * C_cpu * N_i * f^2   (Eq. 8) with N_i = L_loc * n_i (Eq. 7)
+    GPU: P_avg * T_train             (Eq. 9)
+    """
+    n = np.asarray(n_samples, np.float64)
+    N_i = local_epochs * n                                     # Eq. 7
+    hw = np.array([p.hw_type for p in profiles])
+    kappa = np.array([p.kappa for p in profiles])
+    cyc = np.array([p.cycles_per_sample for p in profiles])
+    freq = np.array([p.freq for p in profiles])
+    gpu_p = np.array([p.gpu_power for p in profiles])
+    alpha = np.array([p.alpha for p in profiles])
+
+    e_cpu = kappa * cyc * N_i * freq ** 2                      # Eq. 8
+    e_gpu = gpu_p * t_train(n, c_flop, alpha, local_epochs)    # Eq. 9
+    return np.where(hw == CPU, e_cpu, e_gpu)                   # Eq. 10/11
+
+
+# ---------------------------------------------------------------------------
+# Communication (Eq. 5-6, 12-13)
+# ---------------------------------------------------------------------------
+
+def t_lisl(d_bits: float, rate, distance_m, lp: LinkParams):
+    """Eq. 5: d/R + L (propagation).  Unreachable -> inf handled by caller."""
+    return d_bits / np.asarray(rate, np.float64) + \
+        np.asarray(distance_m, np.float64) / lp.light_speed
+
+
+def e_lisl(d_bits: float, rate, distance_m, lp: LinkParams):
+    """Eq. 12: P_lisl * T_lisl."""
+    return lp.lisl_power * t_lisl(d_bits, rate, distance_m, lp)
+
+
+def t_gs(d_bits: float, rate, distance_m, lp: LinkParams):
+    """Eq. 6: d/R_gs + L_gs."""
+    return d_bits / np.asarray(rate, np.float64) + \
+        np.asarray(distance_m, np.float64) / lp.light_speed
+
+
+def e_gs(d_bits: float, rate, distance_m, lp: LinkParams):
+    """Eq. 13: P_gs * T_gs (effective power covers up+downlink)."""
+    return lp.gs_power * t_gs(d_bits, rate, distance_m, lp)
+
+
+# ---------------------------------------------------------------------------
+# Ledger: running account of a session (feeds Table II / Fig. 4)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EnergyLedger:
+    intra_lisl_count: int = 0
+    inter_lisl_count: int = 0
+    gs_count: int = 0
+    lisl_energy_j: float = 0.0
+    gs_energy_j: float = 0.0
+    train_energy_j: float = 0.0
+    transmission_time_s: float = 0.0   # serial link occupancy
+    compute_time_s: float = 0.0        # sum of per-round barriers (makespan-ish)
+    waiting_time_s: float = 0.0        # latency-only (no energy, §III-C)
+    wall_clock_s: float = 0.0
+
+    def add_intra(self, n: int, e_j: float, t_s: float):
+        self.intra_lisl_count += n
+        self.lisl_energy_j += e_j
+        self.transmission_time_s += t_s
+
+    def add_inter(self, n: int, e_j: float, t_s: float):
+        self.inter_lisl_count += n
+        self.lisl_energy_j += e_j
+        self.transmission_time_s += t_s
+
+    def add_gs(self, n: int, e_j: float, t_s: float):
+        self.gs_count += n
+        self.gs_energy_j += e_j
+        self.transmission_time_s += t_s
+
+    def add_train(self, e_j: float, barrier_s: float):
+        self.train_energy_j += e_j
+        self.compute_time_s += barrier_s
+
+    def add_wait(self, t_s: float):
+        self.waiting_time_s += t_s
+
+    @property
+    def transmission_energy_j(self) -> float:
+        return self.lisl_energy_j + self.gs_energy_j
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.transmission_energy_j + self.train_energy_j
+
+    def row(self) -> dict:
+        """Table-II row."""
+        return {
+            "intra_lisl": self.intra_lisl_count,
+            "inter_lisl": self.inter_lisl_count,
+            "gs_comm": self.gs_count,
+            "tx_energy_kj": self.transmission_energy_j / 1e3,
+            "train_energy_kj": self.train_energy_j / 1e3,
+            "tx_time_h": self.transmission_time_s / 3600,
+            "waiting_h": self.waiting_time_s / 3600,
+            "wall_clock_h": self.wall_clock_s / 3600,
+        }
+
+    def merged(self, other: "EnergyLedger") -> "EnergyLedger":
+        out = dataclasses.replace(self)
+        for f in dataclasses.fields(EnergyLedger):
+            setattr(out, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return out

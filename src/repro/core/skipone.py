@@ -1,0 +1,145 @@
+"""Skip-One client selection (paper §IV-B, Eq. 26-33, Algorithm 2).
+
+Per cluster, per edge round: skip at most ONE satellite when the utility
+
+    Psi({i}; r) = theta_T * dT_i + theta_E * dE_i - theta_H * H_i - theta_F * phi_i
+
+is positive over the fairness-constrained admissible set
+
+    U_k(r) = { i : kappa_i(r) = 0, tau_i(r) < tau_max }.
+
+State per satellite: cooldown kappa (rounds until skippable again),
+staleness tau (consecutive rounds skipped... tracked as rounds since last
+participation), participation history phi (EMA of skip indicator).
+
+Both a numpy host implementation (constellation sim) and a jittable mask
+builder (datacenter fl_train_step) are provided; tests assert they agree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SkipOneParams:
+    theta_T: float = 1.0       # latency-reduction weight
+    theta_E: float = 0.5       # energy-saving weight
+    theta_H: float = 0.3       # hardware-rarity penalty weight
+    theta_F: float = 0.5       # recent-skip fairness penalty weight
+    cooldown: int = 2          # kappa reset: rounds barred after a skip
+    tau_max: int = 4           # staleness bound (rounds since participation)
+    phi_decay: float = 0.5     # EMA decay of the skip-history term
+    all_participate_every: int = 10  # periodic full rounds reset counters
+
+
+@dataclass
+class SkipOneState:
+    """Per-satellite fairness state (Eq. 31)."""
+    kappa: np.ndarray          # (n,) cooldown counters
+    tau: np.ndarray            # (n,) rounds since last participation
+    phi: np.ndarray            # (n,) EMA of skip history
+
+    @staticmethod
+    def init(n: int) -> "SkipOneState":
+        return SkipOneState(np.zeros(n, int), np.zeros(n, int), np.zeros(n))
+
+
+def _normalize(x: np.ndarray) -> np.ndarray:
+    rng = x.max() - x.min()
+    return (x - x.min()) / rng if rng > 0 else np.zeros_like(x)
+
+
+def select(t_train: np.ndarray, e_train: np.ndarray, hw_penalty: np.ndarray,
+           state: SkipOneState, p: SkipOneParams, round_idx: int,
+           ) -> tuple[np.ndarray, SkipOneState]:
+    """Algorithm 2 for one cluster.
+
+    t_train/e_train/hw_penalty: (n,) realized this round.
+    Returns (participate_mask, new_state); at most one False in the mask.
+    """
+    n = len(t_train)
+    participate = np.ones(n, bool)
+    new = SkipOneState(state.kappa.copy(), state.tau.copy(), state.phi.copy())
+
+    full_round = p.all_participate_every and \
+        (round_idx % p.all_participate_every == p.all_participate_every - 1)
+    if full_round:
+        # periodic all-participation round resets cooldowns (paper §IV-B end)
+        new.kappa[:] = 0
+        new.tau[:] = 0
+        new.phi *= p.phi_decay
+        return participate, new
+
+    admissible = (state.kappa == 0) & (state.tau < p.tau_max)        # Eq. 31
+    skipped = -1
+    if admissible.any() and n > 1:
+        M = t_train.max()                                            # Eq. 27
+        # counterfactual barrier per candidate (Eq. 28-29)
+        order = np.argsort(t_train)
+        second = t_train[order[-2]]
+        dT = np.where(t_train == M, M - second, 0.0)                 # Eq. 29
+        dE = e_train.copy()                                          # Eq. 30
+        # normalize terms to comparable ranges (paper: min-max)
+        psi = (p.theta_T * _normalize(dT) + p.theta_E * _normalize(dE)
+               - p.theta_H * hw_penalty - p.theta_F * state.phi)     # Eq. 33
+        psi = np.where(admissible, psi, -np.inf)
+        i_star = int(np.argmax(psi))                                 # Eq. 32
+        if np.isfinite(psi[i_star]) and psi[i_star] > 0:
+            participate[i_star] = False
+            skipped = i_star
+
+    # state update
+    new.kappa = np.maximum(state.kappa - 1, 0)
+    if skipped >= 0:
+        new.kappa[skipped] = p.cooldown
+        new.tau[skipped] = state.tau[skipped] + 1
+        new.phi[skipped] = state.phi[skipped] * p.phi_decay + (1 - p.phi_decay)
+    part = participate
+    new.tau = np.where(part, 0, new.tau)
+    new.phi = np.where(part, state.phi * p.phi_decay, new.phi)
+    return participate, new
+
+
+# ---------------------------------------------------------------------------
+# Jittable mask (datacenter path): same rule over (K, n) cluster-major arrays
+# ---------------------------------------------------------------------------
+
+def select_jax(t_train: jax.Array, e_train: jax.Array, hw_penalty: jax.Array,
+               kappa: jax.Array, tau: jax.Array, phi: jax.Array,
+               p: SkipOneParams) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Vectorized over clusters: inputs (K, n). Returns (mask (K,n) f32,
+    (kappa', tau', phi'))."""
+    def _norm(x):
+        lo = x.min(-1, keepdims=True)
+        rng = x.max(-1, keepdims=True) - lo
+        return jnp.where(rng > 0, (x - lo) / jnp.maximum(rng, 1e-30), 0.0)
+
+    admissible = (kappa == 0) & (tau < p.tau_max)
+    M = t_train.max(-1, keepdims=True)                               # Eq. 27
+    top2 = -jnp.sort(-t_train, axis=-1)[:, 1:2]
+    dT = jnp.where(t_train == M, M - top2, 0.0)                      # Eq. 29
+    psi = (p.theta_T * _norm(dT) + p.theta_E * _norm(e_train)
+           - p.theta_H * hw_penalty - p.theta_F * phi)               # Eq. 33
+    psi = jnp.where(admissible, psi, -jnp.inf)
+    i_star = jnp.argmax(psi, -1)                                     # Eq. 32
+    do_skip = jnp.take_along_axis(psi, i_star[:, None], -1)[:, 0] > 0
+    onehot = jax.nn.one_hot(i_star, t_train.shape[-1], dtype=bool) & do_skip[:, None]
+    mask = ~onehot
+
+    kappa2 = jnp.maximum(kappa - 1, 0)
+    kappa2 = jnp.where(onehot, p.cooldown, kappa2)
+    tau2 = jnp.where(onehot, tau + 1, 0)
+    phi2 = jnp.where(onehot, phi * p.phi_decay + (1 - p.phi_decay),
+                     phi * p.phi_decay)
+    return mask.astype(jnp.float32), (kappa2, tau2, phi2)
+
+
+def barrier_reduction(t_train: np.ndarray, mask: np.ndarray) -> float:
+    """Realized dT of this round's decision (for the ledger)."""
+    M = t_train.max()
+    M_post = t_train[mask].max() if mask.any() else 0.0
+    return float(M - M_post)

@@ -1,0 +1,446 @@
+"""StarMask: RL-based clustering with action masking (paper §IV-A, Alg. 1).
+
+Finite-horizon MDP: one satellite assigned per step to an existing cluster
+(actions 1..K_max) or a new one (action K_max+1). The policy is a pointer-
+style single-head attention over (satellite query x cluster summaries)
+(Eq. 24), trained with advantage actor-critic (Eq. 21) on the terminal
+reward (Eq. 17). Action masking Γ (Eq. 22) enforces:
+
+  * master feasibility  |C_k| - 1 <= max_j c~_j          (Eq. 23)
+  * optional hardware homogeneity (else penalized via M_mix)
+  * OPENNEW masked at K = K_max
+  * completion feasibility: remaining satellites can still fill every
+    instantiated cluster to m_min and fit within remaining capacity.
+
+Deterministic greedy fallback constructs the smallest feasible partition
+(descending per-epoch runtime, first-fit) and reports K_min (Eq. 25) when
+nothing is feasible.
+
+Pure JAX policy; episode rollout is a host loop (N <= a few hundred).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+NEG = -1e9
+
+N_SAT_FEATS = 5       # share, hw, t_comp, e_train, fanout  (x_i)
+N_CL_FEATS = 8        # size, t_min, t_max, e_sum, share_sum, gpu_frac, cap_left, active
+
+
+# ---------------------------------------------------------------------------
+# Problem instance
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StarMaskParams:
+    k_max: int = 12
+    m_min: int = 2
+    hw_homogeneous: bool = False   # hard constraint vs M_mix penalty
+    # reward coefficients (Eq. 17) — fixed across experiments
+    theta_wait: float = 1.0
+    beta: float = 1.0
+    gamma: float = 1.0
+    nu_k: float = 0.1
+    lam_mix: float = 0.5
+    # hardware-dependent cap on manageable members for a master (Eq. 25)
+    l_cpu: int = 6
+    l_gpu: int = 10
+
+
+@dataclass
+class Instance:
+    """Satellite profiles x_i (+ link-energy matrix for E_tot)."""
+    share: np.ndarray        # (N,) n_i / sum n
+    hw: np.ndarray           # (N,) 0=CPU 1=GPU
+    t_comp: np.ndarray       # (N,) per-epoch seconds
+    e_train: np.ndarray      # (N,) per-round joules
+    fanout: np.ndarray       # (N,) c_i
+    lisl_e: Optional[np.ndarray] = None   # (N,N) intra-cluster link energy
+
+    @property
+    def n(self) -> int:
+        return len(self.share)
+
+    def feats(self) -> np.ndarray:
+        f = np.stack([self.share, self.hw.astype(float),
+                      self.t_comp, self.e_train, self.fanout.astype(float)], 1)
+        # min-max normalize continuous columns for the policy net
+        out = f.copy()
+        for c in (0, 2, 3, 4):
+            lo, hi = f[:, c].min(), f[:, c].max()
+            out[:, c] = (f[:, c] - lo) / (hi - lo) if hi > lo else 0.0
+        return out.astype(np.float32)
+
+
+def effective_capacity(inst: Instance, p: StarMaskParams) -> np.ndarray:
+    """c~_i = min(c_i - 1, L_{h_i})  (Eq. 25)."""
+    L = np.where(inst.hw == 1, p.l_gpu, p.l_cpu)
+    return np.minimum(inst.fanout - 1, L)
+
+
+def k_min(inst: Instance, p: StarMaskParams) -> int:
+    """Lower bound on clusters: greedily take best-capacity masters."""
+    cap = np.sort(effective_capacity(inst, p))[::-1]
+    covered, k = 0, 0
+    while covered < inst.n and k < inst.n:
+        covered += cap[k] + 1     # master + c~ members
+        k += 1
+    return k if covered >= inst.n else inst.n + 1   # n+1 => infeasible
+
+
+# ---------------------------------------------------------------------------
+# Partition bookkeeping + action masking Γ (Eq. 22-23)
+# ---------------------------------------------------------------------------
+
+class PartialPartition:
+    def __init__(self, inst: Instance, p: StarMaskParams):
+        self.inst, self.p = inst, p
+        self.assign = np.full(inst.n, -1, int)
+        self.members: list[list[int]] = [[] for _ in range(p.k_max)]
+        self.k_open = 0
+        self.cap = effective_capacity(inst, p)
+
+    def cluster_capacity(self, k: int) -> int:
+        """Max members supportable: best member acts as master (Eq. 23)."""
+        m = self.members[k]
+        return int(max(self.cap[m]) + 1) if m else 0
+
+    def feasible_actions(self, t: int) -> np.ndarray:
+        """Mask over K_max + 1 actions for satellite t."""
+        inst, p = self.inst, self.p
+        n_left = inst.n - t                       # including t
+        mask = np.zeros(p.k_max + 1, bool)
+        # capacity if t opens/joins — t itself could be the master
+        for k in range(self.k_open):
+            m = self.members[k]
+            new_cap = int(max(max(self.cap[m]), self.cap[t]) + 1)
+            if len(m) + 1 > new_cap:
+                continue                           # Eq. 23 violated
+            if p.hw_homogeneous and any(inst.hw[j] != inst.hw[t] for j in m):
+                continue
+            mask[k] = True
+        if self.k_open < p.k_max:
+            mask[p.k_max] = True                   # OPENNEW
+        # completion feasibility: after this assignment, can the remaining
+        # n_left-1 satellites still (a) fill every open cluster to m_min and
+        # (b) fit in remaining capacity?
+        cap_max = int(self.cap.max() + 1)
+        for a in np.flatnonzero(mask):
+            opens = self.k_open + (1 if a == p.k_max else 0)
+            deficit, cap_left = 0, 0
+            for k in range(self.k_open):
+                sz = len(self.members[k]) + (1 if a == k else 0)
+                deficit += max(0, p.m_min - sz)
+                cap_left += max(0, self.cluster_capacity(k)
+                                + (1 if a == k and self.cap[t] + 1 >
+                                   self.cluster_capacity(k) else 0) - sz)
+            if a == p.k_max:
+                deficit += max(0, p.m_min - 1)
+                cap_left += cap_max - 1
+            rem = n_left - 1
+            extra_cap = (p.k_max - opens) * cap_max
+            if deficit > rem or rem > cap_left + extra_cap:
+                mask[a] = False
+        return mask
+
+    def apply(self, t: int, a: int):
+        if a == self.p.k_max:
+            a = self.k_open
+            self.k_open += 1
+        self.members[a].append(t)
+        self.assign[t] = a
+
+    def summaries(self) -> np.ndarray:
+        """Φ(C_k) for all K_max slots (inactive slots zeroed)."""
+        inst, p = self.inst, self.p
+        out = np.zeros((p.k_max, N_CL_FEATS), np.float32)
+        t_hi = inst.t_comp.max() or 1.0
+        e_hi = inst.e_train.sum() or 1.0
+        for k in range(self.k_open):
+            m = self.members[k]
+            cap = self.cluster_capacity(k)
+            out[k] = [len(m) / inst.n,
+                      inst.t_comp[m].min() / t_hi,
+                      inst.t_comp[m].max() / t_hi,
+                      inst.e_train[m].sum() / e_hi,
+                      inst.share[m].sum(),
+                      inst.hw[m].mean(),
+                      (cap - len(m)) / inst.n,
+                      1.0]
+        return out
+
+    def clusters(self) -> list[np.ndarray]:
+        return [np.array(m, int) for m in self.members[: self.k_open]]
+
+
+# ---------------------------------------------------------------------------
+# Terminal reward (Eq. 17-20)
+# ---------------------------------------------------------------------------
+
+def reward(clusters: list[np.ndarray], inst: Instance, p: StarMaskParams,
+           ) -> tuple[float, dict]:
+    K = len(clusters)
+    t = inst.t_comp
+    W = sum(t[c].max() - t[c].min() for c in clusters)            # Eq. 18
+    e_comp = float(inst.e_train.sum())
+    e_link = 0.0
+    if inst.lisl_e is not None:
+        for c in clusters:
+            if len(c) > 1:
+                # members -> master (best-capacity member)
+                master = c[np.argmax(effective_capacity(inst, p)[c])]
+                e_link += float(inst.lisl_e[c, master].sum()
+                                - inst.lisl_e[master, master])
+    E_tot = e_comp + e_link
+    shares = np.array([inst.share[c].sum() for c in clusters])
+    var = float(((shares - shares.mean()) ** 2).mean())           # Eq. 19
+    mix = sum(1 for c in clusters if len(set(inst.hw[c])) > 1)    # Eq. 20
+
+    # min-max normalization ranges estimated from the instance
+    W_hi = (t.max() - t.min()) * max(K, 1) or 1.0
+    E_hi = inst.e_train.sum() * 2 or 1.0
+    terms = {
+        "W": W / W_hi, "E": E_tot / E_hi, "var": var * K ** 2,
+        "K": K / p.k_max, "mix": mix / max(K, 1),
+    }
+    r = -(p.theta_wait * terms["W"] + p.beta * terms["E"] +
+          p.gamma * terms["var"] + p.nu_k * terms["K"] +
+          p.lam_mix * terms["mix"])                               # Eq. 17
+    return float(r), terms
+
+
+# ---------------------------------------------------------------------------
+# Attention policy + value head (Eq. 24)
+# ---------------------------------------------------------------------------
+
+def policy_init(key: jax.Array, hidden: int = 32) -> dict:
+    k = iter(jax.random.split(key, 12))
+    g = lambda *s: jax.random.normal(next(k), s, F32) / math.sqrt(s[0])
+    return {
+        "sat_w": g(N_SAT_FEATS, hidden), "sat_b": jnp.zeros(hidden),
+        "cl_w": g(N_CL_FEATS, hidden), "cl_b": jnp.zeros(hidden),
+        "wq": g(hidden, hidden), "wk": g(hidden, hidden), "wv": g(hidden, hidden),
+        "ptr_w": g(hidden, hidden),          # pointer scores per cluster
+        "new_w": g(2 * hidden, 1),           # OPENNEW logit from [q, z]
+        "val_w": g(2 * hidden, hidden), "val_b": jnp.zeros(hidden),
+        "val_o": g(hidden, 1),
+    }
+
+
+def policy_apply(params: dict, sat_feat: jax.Array, cl_feats: jax.Array,
+                 mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """sat_feat: (F,), cl_feats: (K_max, Fc), mask: (K_max+1,) bool.
+    Returns (log_probs (K_max+1,), value ())."""
+    s = jnp.tanh(sat_feat @ params["sat_w"] + params["sat_b"])    # (h,)
+    c = jnp.tanh(cl_feats @ params["cl_w"] + params["cl_b"])      # (K,h)
+    q = s @ params["wq"]
+    kk = c @ params["wk"]
+    v = c @ params["wv"]
+    att = jax.nn.softmax(
+        jnp.where(mask[:-1], kk @ q / math.sqrt(q.shape[0]), NEG))
+    z = att @ v                                                   # Eq. 24
+    ptr = (c @ params["ptr_w"]) @ q / math.sqrt(q.shape[0])       # (K,)
+    new = (jnp.concatenate([q, z]) @ params["new_w"])[0]
+    logits = jnp.concatenate([ptr, new[None]])
+    logits = jnp.where(mask, logits, NEG)
+    logp = jax.nn.log_softmax(logits)
+    h = jnp.tanh(jnp.concatenate([q, z]) @ params["val_w"] + params["val_b"])
+    value = (h @ params["val_o"])[0]
+    return logp, value
+
+
+_policy_jit = jax.jit(policy_apply)
+
+
+# ---------------------------------------------------------------------------
+# Greedy fallback (Alg. 1 line 10)
+# ---------------------------------------------------------------------------
+
+def greedy_fallback(inst: Instance, p: StarMaskParams,
+                    ) -> Optional[list[np.ndarray]]:
+    """Descending per-epoch runtime, first-fit into feasible clusters."""
+    order = np.argsort(-inst.t_comp)
+    pp = PartialPartition(inst, p)
+    for t in order:
+        # best-fit: prefer the feasible cluster with the closest mean t_comp
+        placed = False
+        best, best_gap = -1, np.inf
+        for k in range(pp.k_open):
+            m = pp.members[k]
+            new_cap = int(max(max(pp.cap[m]), pp.cap[t]) + 1)
+            if len(m) + 1 > new_cap:
+                continue
+            if p.hw_homogeneous and any(inst.hw[j] != inst.hw[t] for j in m):
+                continue
+            gap = abs(inst.t_comp[m].mean() - inst.t_comp[t])
+            if gap < best_gap:
+                best, best_gap = k, gap
+        if best >= 0:
+            pp.members[best].append(int(t)); pp.assign[t] = best
+            placed = True
+        elif pp.k_open < p.k_max:
+            pp.members[pp.k_open].append(int(t)); pp.assign[t] = pp.k_open
+            pp.k_open += 1
+            placed = True
+        if not placed:
+            return None
+    # m_min repair: merge undersized clusters into nearest feasible one
+    clusters = pp.clusters()
+    small = [c for c in clusters if len(c) < p.m_min]
+    big = [c for c in clusters if len(c) >= p.m_min]
+    for c in small:
+        merged = False
+        for i, b in enumerate(big):
+            cap = int(effective_capacity(inst, p)[np.concatenate([b, c])].max() + 1)
+            if len(b) + len(c) <= cap and (
+                    not p.hw_homogeneous or len(set(inst.hw[np.concatenate([b, c])])) == 1):
+                big[i] = np.concatenate([b, c])
+                merged = True
+                break
+        if not merged:
+            big.append(c)   # keep as-is (m_min soft-violated) rather than fail
+    return big if big else None
+
+
+# ---------------------------------------------------------------------------
+# Rollout + A2C training (Eq. 21)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ClusteringResult:
+    clusters: list[np.ndarray]
+    assign: np.ndarray
+    reward: float
+    terms: dict
+    feasible: bool
+    k_min: int
+    used_fallback: bool = False
+
+
+def rollout(params: dict, inst: Instance, p: StarMaskParams,
+            key: jax.Array, greedy: bool = False):
+    """One episode. Returns (result, trajectory) where trajectory carries
+    (sat_feat, cl_feats, mask, action, logp_a, value) per step."""
+    feats = inst.feats()
+    pp = PartialPartition(inst, p)
+    traj = []
+    for t in range(inst.n):
+        mask_np = pp.feasible_actions(t)
+        if not mask_np.any():
+            kmin = k_min(inst, p)
+            if kmin > p.k_max:
+                return ClusteringResult([], pp.assign, -np.inf, {},
+                                        False, kmin), traj
+            fb = greedy_fallback(inst, p)
+            if fb is None:
+                return ClusteringResult([], pp.assign, -np.inf, {},
+                                        False, kmin), traj
+            r, terms = reward(fb, inst, p)
+            assign = np.full(inst.n, -1, int)
+            for k, c in enumerate(fb):
+                assign[c] = k
+            return ClusteringResult(fb, assign, r, terms, True, kmin,
+                                    used_fallback=True), traj
+        cl = pp.summaries()
+        mask = jnp.asarray(mask_np)
+        logp, value = _policy_jit(params, jnp.asarray(feats[t]),
+                                  jnp.asarray(cl), mask)
+        if greedy:
+            a = int(jnp.argmax(logp))
+        else:
+            key, sub = jax.random.split(key)
+            a = int(jax.random.categorical(sub, logp))
+        traj.append((feats[t], cl, mask_np, a, float(logp[a]), float(value)))
+        pp.apply(t, a)
+
+    clusters = pp.clusters()
+    r, terms = reward(clusters, inst, p)
+    return ClusteringResult(clusters, pp.assign, r, terms, True,
+                            k_min(inst, p)), traj
+
+
+def _a2c_loss(params, sat_f, cl_f, masks, actions, ret):
+    """Batched over a whole episode (terminal-only reward => same return)."""
+    logps, values = jax.vmap(lambda s, c, m: policy_apply(params, s, c, m)
+                             )(sat_f, cl_f, masks)
+    logp_a = jnp.take_along_axis(logps, actions[:, None], 1)[:, 0]
+    adv = ret - values
+    pol = -(logp_a * jax.lax.stop_gradient(adv)).mean()           # Eq. 21
+    val = (adv ** 2).mean()
+    ent = -(jnp.exp(logps) * jnp.where(jnp.isfinite(logps), logps, 0.0)
+            ).sum(-1).mean()
+    return pol + 0.5 * val - 0.01 * ent
+
+
+_a2c_grad = jax.jit(jax.value_and_grad(_a2c_loss))
+
+
+def train_policy(instances: list[Instance], p: StarMaskParams,
+                 key: jax.Array, episodes: int = 300, lr: float = 3e-3,
+                 ) -> tuple[dict, list[float]]:
+    """A2C over random instances; returns (params, reward history)."""
+    key, sub = jax.random.split(key)
+    params = policy_init(sub)
+    m = jax.tree.map(jnp.zeros_like, params)   # Adam moments
+    v = jax.tree.map(jnp.zeros_like, params)
+    hist = []
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    for ep in range(episodes):
+        inst = instances[ep % len(instances)]
+        key, sub = jax.random.split(key)
+        res, traj = rollout(params, inst, p, sub)
+        if not traj or not res.feasible:
+            continue
+        hist.append(res.reward)
+        sat_f = jnp.asarray(np.stack([s for s, *_ in traj]))
+        cl_f = jnp.asarray(np.stack([c for _, c, *_ in traj]))
+        masks = jnp.asarray(np.stack([mk for _, _, mk, *_ in traj]))
+        acts = jnp.asarray(np.array([a for *_, a, _, _ in traj]))
+        ret = jnp.float32(res.reward)
+        _, grads = _a2c_grad(params, sat_f, cl_f, masks, acts, ret)
+        t_ = ep + 1
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+        params = jax.tree.map(
+            lambda pa, mm, vv: pa - lr * (mm / (1 - b1 ** t_)) /
+            (jnp.sqrt(vv / (1 - b2 ** t_)) + eps), params, m, v)
+    return params, hist
+
+
+def cluster(inst: Instance, p: StarMaskParams, key: jax.Array,
+            params: Optional[dict] = None, n_samples: int = 8,
+            ) -> ClusteringResult:
+    """Top-level StarMask entry: best-of-n sampled rollouts (or greedy
+    decode when params given), greedy fallback when RL finds nothing."""
+    if params is None:
+        key, sub = jax.random.split(key)
+        params = policy_init(sub)
+    best: Optional[ClusteringResult] = None
+    res, _ = rollout(params, inst, p, key, greedy=True)
+    if res.feasible:
+        best = res
+    for i in range(n_samples):
+        key, sub = jax.random.split(key)
+        res, _ = rollout(params, inst, p, sub)
+        if res.feasible and (best is None or res.reward > best.reward):
+            best = res
+    if best is None:
+        kmin = k_min(inst, p)
+        fb = greedy_fallback(inst, p) if kmin <= p.k_max else None
+        if fb is None:
+            return ClusteringResult([], np.full(inst.n, -1), -np.inf, {},
+                                    False, kmin)
+        r, terms = reward(fb, inst, p)
+        assign = np.full(inst.n, -1, int)
+        for k, c in enumerate(fb):
+            assign[c] = k
+        return ClusteringResult(fb, assign, r, terms, True, kmin, True)
+    return best

@@ -1,0 +1,2 @@
+from repro.data.synth import (SynthImageDataset, SynthLMDataset,
+                              dirichlet_partition)  # noqa: F401

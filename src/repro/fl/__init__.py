@@ -1,0 +1,3 @@
+"""FL protocol runtime shared by CroSatFL and the baselines."""
+from repro.fl.client import ImageFLModel, fedavg  # noqa: F401
+from repro.fl.baselines import BASELINES  # noqa: F401

@@ -1,0 +1,144 @@
+"""FL model adapter: local training executor + cluster-round aggregation.
+
+Implements the ``model`` duck-type consumed by core/session.Session and
+fl/baselines.py:
+
+    init(key) -> params
+    cluster_round(w, participant_ids, n_samples, epochs, key) -> w'
+    local_update(w, client_id, epochs, key) -> w_i  (single client)
+    stack(list[params]) / unstack(stacked, K)
+    evaluate(params) -> {"acc": ..., "loss": ...}
+
+Local training is one jitted call per (client, round): data is padded to a
+fixed ``n_pad`` so every client shares a single compilation; padded rows
+are masked out of the loss. SGD-momentum, batch size 10 (paper Table I).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synth import SynthImageDataset
+from repro.fl.models_image import MODEL_ZOO
+from repro.optim.optimizers import sgd_init, sgd_update
+
+F32 = jnp.float32
+
+
+@partial(jax.jit, static_argnames=("apply_fn", "epochs", "batch", "lr",
+                                   "momentum"))
+def _local_train(params, x, y, mask, key, *, apply_fn, epochs: int,
+                 batch: int, lr: float, momentum: float):
+    """x: (n_pad, H, W, C); mask: (n_pad,) 1.0 for real rows."""
+    n_pad = x.shape[0]
+    steps = n_pad // batch
+
+    def loss_fn(p, xb, yb, mb):
+        logits = apply_fn(p, xb).astype(F32)
+        ce = -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                  yb[:, None], 1)[:, 0]
+        return (ce * mb).sum() / jnp.maximum(mb.sum(), 1.0)
+
+    def epoch(carry, ekey):
+        p, m = carry
+        perm = jax.random.permutation(ekey, n_pad)
+        xs = x[perm].reshape(steps, batch, *x.shape[1:])
+        ys = y[perm].reshape(steps, batch)
+        ms = mask[perm].reshape(steps, batch)
+
+        def step(carry, b):
+            p, mstate = carry
+            xb, yb, mb = b
+            g = jax.grad(loss_fn)(p, xb, yb, mb)
+            p, mstate = sgd_update(p, g, mstate, lr=lr, momentum=momentum)
+            return (p, mstate), ()
+
+        (p, m), _ = jax.lax.scan(step, (p, m), (xs, ys, ms))
+        return (p, m), ()
+
+    m0 = sgd_init(params)
+    (params, _), _ = jax.lax.scan(epoch, (params, m0),
+                                  jax.random.split(key, epochs))
+    return params
+
+
+@partial(jax.jit, static_argnames=("apply_fn",))
+def _evaluate(params, x, y, *, apply_fn):
+    logits = apply_fn(params, x).astype(F32)
+    pred = logits.argmax(-1)
+    ce = -jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], 1)[:, 0]
+    return (pred == y).mean(), ce.mean()
+
+
+def fedavg(params_list: list[Any], weights: np.ndarray):
+    w = jnp.asarray(weights / weights.sum(), F32)
+
+    def avg(*leaves):
+        stacked = jnp.stack([l.astype(F32) for l in leaves])
+        return jnp.einsum("k,k...->...", w, stacked).astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *params_list)
+
+
+class ImageFLModel:
+    def __init__(self, dataset: SynthImageDataset, partitions: list[np.ndarray],
+                 test: SynthImageDataset, model: str = "small-cnn",
+                 batch: int = 10, lr: float = 0.02, momentum: float = 0.9,
+                 n_pad: Optional[int] = None, **model_kw):
+        self.ds, self.parts, self.test = dataset, partitions, test
+        self.init_fn, self.apply_fn = MODEL_ZOO[model]
+        self.model_kw = dict(in_ch=dataset.x.shape[-1],
+                             n_classes=dataset.n_classes, **model_kw)
+        self.batch, self.lr, self.momentum = batch, lr, momentum
+        sizes = [len(p) for p in partitions]
+        self.n_pad = n_pad or batch * math.ceil(max(sizes) / batch)
+        self._xt = jnp.asarray(test.x)
+        self._yt = jnp.asarray(test.y.astype(np.int32))
+
+    # ---- duck-type ---------------------------------------------------------
+    def init(self, key):
+        return self.init_fn(key, **self.model_kw)
+
+    def _padded(self, cid: int):
+        idx = self.parts[cid]
+        n = len(idx)
+        x = np.zeros((self.n_pad,) + self.ds.x.shape[1:], np.float32)
+        y = np.zeros((self.n_pad,), np.int32)
+        m = np.zeros((self.n_pad,), np.float32)
+        x[:n], y[:n], m[:n] = self.ds.x[idx], self.ds.y[idx], 1.0
+        return jnp.asarray(x), jnp.asarray(y), jnp.asarray(m)
+
+    def local_update(self, w, cid: int, epochs: int, key):
+        x, y, m = self._padded(cid)
+        return _local_train(w, x, y, m, key, apply_fn=self.apply_fn,
+                            epochs=epochs, batch=self.batch, lr=self.lr,
+                            momentum=self.momentum)
+
+    def cluster_round(self, w, participant_ids, n_samples, epochs: int, key):
+        if len(participant_ids) == 0:
+            return w
+        updated = []
+        for cid, sub in zip(participant_ids,
+                            jax.random.split(key, len(participant_ids))):
+            updated.append(self.local_update(w, int(cid), epochs, sub))
+        return fedavg(updated, np.asarray(n_samples, np.float64))
+
+    def stack(self, params_list: list[Any]):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+    def unstack(self, stacked, k: int):
+        return [jax.tree.map(lambda x: x[i], stacked) for i in range(k)]
+
+    def evaluate(self, params) -> dict:
+        acc, loss = _evaluate(params, self._xt, self._yt,
+                              apply_fn=self.apply_fn)
+        return {"acc": float(acc), "loss": float(loss)}
+
+    def model_bits(self, key=None) -> int:
+        p = self.init(key if key is not None else jax.random.PRNGKey(0))
+        return int(sum(l.size * 4 for l in jax.tree.leaves(p)) * 8)

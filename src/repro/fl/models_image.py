@@ -1,0 +1,130 @@
+"""Image classifiers for the FL simulation (pure JAX).
+
+``SmallCNN`` is the default client model for CPU-speed simulation runs;
+``ResNet18`` is the paper's model (width-scalable so tests stay fast).
+Both are functional: ``init(key, ...) -> params``, ``apply(params, x) ->
+logits`` with x (B, H, W, C) float32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def _conv(x, w, stride: int = 1):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _he(key, *shape):
+    fan_in = math.prod(shape[:-1])
+    return jax.random.normal(key, shape, F32) * math.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# SmallCNN
+# ---------------------------------------------------------------------------
+
+def cnn_init(key, in_ch: int = 3, n_classes: int = 10, width: int = 16):
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "c1": _he(next(ks), 3, 3, in_ch, width),
+        "b1": jnp.zeros(width),
+        "c2": _he(next(ks), 3, 3, width, 2 * width),
+        "b2": jnp.zeros(2 * width),
+        "c3": _he(next(ks), 3, 3, 2 * width, 2 * width),
+        "b3": jnp.zeros(2 * width),
+        "w": _he(next(ks), 2 * width, n_classes),
+        "b": jnp.zeros(n_classes),
+    }
+
+
+def cnn_apply(params, x):
+    h = jax.nn.relu(_conv(x, params["c1"]) + params["b1"])
+    h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                          "VALID")
+    h = jax.nn.relu(_conv(h, params["c2"]) + params["b2"])
+    h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                          "VALID")
+    h = jax.nn.relu(_conv(h, params["c3"]) + params["b3"])
+    h = h.mean((1, 2))                       # global average pool
+    return h @ params["w"] + params["b"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (width-scalable; GroupNorm so FL averaging is sound — BN running
+# stats are notoriously ill-defined under FedAvg)
+# ---------------------------------------------------------------------------
+
+def _gn_init(ch):
+    return {"scale": jnp.ones(ch), "bias": jnp.zeros(ch)}
+
+
+def _gn(p, x, groups: int = 8):
+    B, H, W, C = x.shape
+    g = math.gcd(groups, C)
+    xg = x.reshape(B, H, W, g, C // g).astype(F32)
+    mu = xg.mean((1, 2, 4), keepdims=True)
+    var = xg.var((1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * lax.rsqrt(var + 1e-5)).reshape(B, H, W, C)
+    return (xn * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _block_init(key, cin, cout, stride):
+    ks = iter(jax.random.split(key, 4))
+    p = {
+        "c1": _he(next(ks), 3, 3, cin, cout), "n1": _gn_init(cout),
+        "c2": _he(next(ks), 3, 3, cout, cout), "n2": _gn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _he(next(ks), 1, 1, cin, cout)
+    return p
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(_gn(p["n1"], _conv(x, p["c1"], stride)))
+    h = _gn(p["n2"], _conv(h, p["c2"]))
+    sc = _conv(x, p["proj"], stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+STAGES = ((2, 1), (2, 2), (2, 2), (2, 2))   # (blocks, first-stride) x 4
+
+
+def resnet18_init(key, in_ch: int = 3, n_classes: int = 10, width: int = 64):
+    ks = iter(jax.random.split(key, 32))
+    p: dict[str, Any] = {"stem": _he(next(ks), 3, 3, in_ch, width),
+                         "stem_n": _gn_init(width)}
+    cin = width
+    for s, (blocks, stride) in enumerate(STAGES):
+        cout = width * (2 ** s)
+        for b in range(blocks):
+            p[f"s{s}b{b}"] = _block_init(next(ks), cin, cout,
+                                         stride if b == 0 else 1)
+            cin = cout
+    p["head_w"] = _he(next(ks), cin, n_classes)
+    p["head_b"] = jnp.zeros(n_classes)
+    return p
+
+
+def resnet18_apply(params, x):
+    h = jax.nn.relu(_gn(params["stem_n"], _conv(x, params["stem"])))
+    for s, (blocks, stride) in enumerate(STAGES):
+        for b in range(blocks):
+            h = _block_apply(params[f"s{s}b{b}"], h, stride if b == 0 else 1)
+    h = h.mean((1, 2))
+    return h @ params["head_w"] + params["head_b"]
+
+
+MODEL_ZOO = {
+    "small-cnn": (cnn_init, cnn_apply),
+    "resnet18": (resnet18_init, resnet18_apply),
+}

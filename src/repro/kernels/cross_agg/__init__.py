@@ -1,0 +1,4 @@
+from repro.kernels.cross_agg.kernel import cross_agg_flat  # noqa: F401
+from repro.kernels.cross_agg.ops import cross_agg_tree  # noqa: F401
+from repro.kernels.cross_agg.ref import (cross_agg_flat_ref,  # noqa: F401
+                                         cross_agg_tree_ref)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel for fused cross-aggregation (paper Eq. 37/38).
+
+Computes ``out = M @ W`` where W is the (K, N) stack of K flattened cluster
+models and M the (K, K) row-stochastic mixing matrix. The op is strongly
+memory-bound (arithmetic intensity ~K FLOPs/byte with tiny K), so the win
+over a naive per-pair implementation is HBM traffic: every W tile is read
+ONCE from HBM into VMEM and all K output rows are produced in-register,
+instead of K separate axpy passes re-reading the stack.
+
+TPU adaptation (DESIGN.md §2/§5): tiles are (K_pad, TILE_N) with TILE_N a
+multiple of 128 (lane dim) and K padded to the 8-row sublane granularity;
+the (K_pad x K_pad) @ (K_pad x TILE_N) contraction maps onto the MXU.
+VMEM claim per grid step = (K_pad*TILE_N in + K_pad^2 + K_pad*TILE_N out)
+* 4 B; with K_pad = 16, TILE_N = 2048 that is ~0.26 MB — far under the
+~16 MB VMEM budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 2048
+SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _cross_agg_kernel(m_ref, w_ref, o_ref):
+    # m_ref: (K_pad, K_pad); w_ref: (K_pad, TILE_N); o_ref: (K_pad, TILE_N)
+    o_ref[...] = jnp.dot(m_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def cross_agg_flat(M: jax.Array, W: jax.Array, *, tile_n: int = TILE_N,
+                   interpret: bool = True) -> jax.Array:
+    """M: (K, K) f32; W: (K, N) any float dtype. Returns (K, N) of W.dtype."""
+    K, N = W.shape
+    K_pad = _round_up(max(K, 1), SUBLANE)
+    N_pad = _round_up(max(N, 1), tile_n)
+
+    Mp = jnp.zeros((K_pad, K_pad), jnp.float32).at[:K, :K].set(
+        M.astype(jnp.float32))
+    Wp = jnp.zeros((K_pad, N_pad), W.dtype).at[:K, :N].set(W)
+
+    out = pl.pallas_call(
+        _cross_agg_kernel,
+        grid=(N_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((K_pad, K_pad), lambda i: (0, 0)),
+            pl.BlockSpec((K_pad, tile_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((K_pad, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((K_pad, N_pad), W.dtype),
+        interpret=interpret,
+    )(Mp, Wp)
+    return out[:K, :N]

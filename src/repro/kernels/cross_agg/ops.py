@@ -1,0 +1,32 @@
+"""Jitted public wrapper: apply the fused mixing kernel to a stacked
+(K, ...) model pytree (the datacenter path of core/crossagg.apply_mixing).
+
+Leaves are flattened and concatenated into one (K, N_total) buffer so the
+kernel makes a single pass over HBM regardless of how fragmented the
+parameter tree is, then split back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cross_agg.kernel import cross_agg_flat
+
+
+def cross_agg_tree(M: jax.Array, stacked, *, interpret: bool = True):
+    """stacked: pytree with leading cluster dim K on every leaf."""
+    leaves, treedef = jax.tree.flatten(stacked)
+    K = leaves[0].shape[0]
+    dtype = leaves[0].dtype
+    sizes = [int(np.prod(l.shape[1:])) for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(K, -1).astype(dtype) for l in leaves], axis=1)
+    mixed = cross_agg_flat(M, flat, interpret=interpret)
+    outs, off = [], 0
+    for l, s in zip(leaves, sizes):
+        outs.append(mixed[:, off:off + s].reshape(l.shape).astype(l.dtype))
+        off += s
+    return jax.tree.unflatten(treedef, outs)

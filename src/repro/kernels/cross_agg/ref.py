@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the cross-aggregation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_agg_flat_ref(M: jax.Array, W: jax.Array) -> jax.Array:
+    """out[k] = sum_j M[k, j] * W[j] in f32, cast back to W.dtype."""
+    return (M.astype(jnp.float32) @ W.astype(jnp.float32)).astype(W.dtype)
+
+
+def cross_agg_tree_ref(M: jax.Array, stacked):
+    def mix(leaf):
+        K = leaf.shape[0]
+        return cross_agg_flat_ref(M, leaf.reshape(K, -1)).reshape(leaf.shape)
+    return jax.tree.map(mix, stacked)

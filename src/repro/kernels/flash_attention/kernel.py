@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (blocked causal GQA, online softmax).
+
+TPU adaptation of the CUDA flash-attention idea (DESIGN.md §2): instead of
+warp-level softmax reductions, the kernel tiles (block_q x block_k) score
+panels through VMEM with fp32 running (m, l, acc) scratch carried across
+the sequential k-block grid dimension, and feeds the MXU with
+(block_q x d) @ (d x block_k) panels. Block sizes are multiples of the
+128-lane / 8-sublane tile and chosen so the per-step working set
+
+    q(bq*d) + k(bk*d) + v(bk*d) + acc(bq*d) + scores(bq*bk)   (fp32)
+
+stays a few MB under the ~16 MB VMEM budget (bq = bk = 512, d = 128 ->
+~1.8 MB). Causality skips whole (i, j) panels above the diagonal — the
+triangular schedule halves the visited panels; the diagonal panel applies
+the elementwise mask.
+
+GQA: grid dim 0 enumerates (batch x q-heads); the k/v index map folds the
+q-head onto its kv head (h // group). The kernel never materializes the
+(Sq, Sk) matrix.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, block_q: int, block_k: int, causal: bool,
+                  nk: int):
+    i = pl.program_id(1)          # q block
+    j = pl.program_id(2)          # k block (sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (j <= i) if causal else True
+
+    @pl.when(run if causal else (j >= 0))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    last = jnp.minimum(i, nk - 1) if causal else nk - 1
+
+    @pl.when(j == last)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = DEFAULT_BQ,
+                    block_k: int = DEFAULT_BK,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Sk, d); Hq % Hkv == 0.
+
+    Returns (B, Hq, Sq, d) in q.dtype.
+    """
+    B, Hq, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    qf = q.reshape(B * Hq, Sq, d)
+    kf = k.reshape(B * Hkv, Sk, d)
+    vf = v.reshape(B * Hkv, Sk, d)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, block_q=bq,
+                               block_k=bk, causal=causal, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, G=G: (b // G, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, G=G: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, d)

@@ -1,0 +1,21 @@
+"""Public op: (B, S, H, d)-layout wrapper used by the model stack.
+
+On TPU targets this is the drop-in replacement for
+``models.layers.chunked_attention`` on full-causal archs; on this CPU
+container the model stack keeps the jnp path and the kernel is validated
+in interpret mode (tests/test_kernels.py sweeps shapes and dtypes).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def attention_bshd(q, k, v, *, causal: bool = True, interpret: bool = True):
+    """q: (B, Sq, H, d); k, v: (B, Sk, Hkv, d) — model-stack layout."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

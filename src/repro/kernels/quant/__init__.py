@@ -1,0 +1,5 @@
+from repro.kernels.quant.kernel import int8_dequantize, int8_quantize  # noqa: F401
+from repro.kernels.quant.ops import (compress_tree, compressed_bytes,  # noqa: F401
+                                     decompress_tree)
+from repro.kernels.quant.ref import (int8_dequantize_ref,  # noqa: F401
+                                     int8_quantize_ref)

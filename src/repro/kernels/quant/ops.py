@@ -1,0 +1,34 @@
+"""Public pytree-level compressed-payload ops over the quant kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.kernels.quant.kernel import int8_dequantize, int8_quantize
+
+
+def compress_tree(tree, *, interpret: bool = True):
+    def comp(x):
+        q, s = int8_quantize(x, interpret=interpret)
+        return {"q": q, "scale": s, "shape": tuple(x.shape),
+                "n": int(x.size), "dtype": x.dtype}
+    return jax.tree.map(comp, tree)
+
+
+def decompress_tree(ctree, *, interpret: bool = True):
+    def dec(c):
+        return int8_dequantize(c["q"], c["scale"], n=c["n"],
+                               shape=c["shape"], dtype=c["dtype"],
+                               interpret=interpret)
+    return jax.tree.map(dec, ctree,
+                        is_leaf=lambda t: isinstance(t, dict) and "q" in t)
+
+
+def compressed_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        from repro.kernels.quant.kernel import CHUNK
+        n = leaf.size
+        total += n + 4 * math.ceil(n / CHUNK)
+    return total

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the int8 quantization kernel (matches
+optim/compression.py semantics with ROWS-granular padding)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.quant.kernel import CHUNK, ROWS
+
+
+def int8_quantize_ref(x, *, chunk: int = CHUNK):
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    per_step = ROWS * chunk
+    n_pad = (n + per_step - 1) // per_step * per_step
+    flat = jnp.pad(flat, (0, n_pad - n))
+    blocks = flat.reshape(-1, chunk)
+    scale = jnp.maximum(jnp.abs(blocks).max(1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize_ref(q, s, *, n: int, shape, dtype):
+    flat = (q.astype(jnp.float32) * s[:, None]).reshape(-1)
+    return flat[:n].reshape(shape).astype(dtype)

@@ -1,0 +1,161 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs   / (chips * 197 TFLOP/s)
+    memory term     = HLO_bytes   / (chips * 819 GB/s)
+    collective term = coll_bytes  / (chips * 50 GB/s)
+
+cost_analysis() gives FLOPs/bytes; collective bytes are parsed from the
+compiled HLO text by summing the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|"
+                       r"f64|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective kind over the (SPMD-partitioned)
+    module. Start/done pairs are counted once (the -start form)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        kind = None
+        for k in _COLLECTIVES:
+            if rhs.startswith(k + "(") or rhs.startswith(k + "-start("):
+                kind = k
+                break
+            # shape-prefixed form: "bf16[...] all-gather(...)"
+            m = re.match(r"^[\w\[\],{}: ]*?\b" + k + r"(-start)?\(", rhs)
+            if m:
+                kind = k
+                break
+        if kind is None:
+            continue
+        if kind + "-done" in rhs:
+            continue
+        # result shapes live on the LHS (may be a tuple)
+        total = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(lhs))
+        if total == 0:   # fall back to operand shapes on the RHS
+            total = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(rhs))
+        out[kind] += total
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float
+    bytes_accessed: float
+    coll_bytes: dict[str, int]
+    model_flops: float
+    per_device_mem: float = 0.0
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.total_coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the step is to the compute roofline: the fraction of
+        the bound time spent on useful model FLOPs."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        return ideal / self.bound_time if self.bound_time else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "coll_bytes": self.total_coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "per_device_mem_gb": self.per_device_mem / 1e9,
+        }
+
+
+def analyse(compiled, lowered, *, arch: str, shape: str, mesh_name: str,
+            chips: int, model_flops: float) -> Roofline:
+    """Roofline terms from the while-aware HLO cost model (hlo_cost.py);
+    global quantities = per-partition totals x chips (uniform SPMD)."""
+    from repro.launch.hlo_cost import analyze_hlo
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    tot = analyze_hlo(hlo)
+    flops = tot.flops * chips
+    bytes_accessed = tot.bytes * chips
+    coll = {k: int(v * chips) for k, v in tot.coll.items()}
+    mem = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = float(getattr(ma, "temp_size_in_bytes", 0) +
+                        getattr(ma, "argument_size_in_bytes", 0) +
+                        getattr(ma, "output_size_in_bytes", 0) -
+                        getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    flops=flops, bytes_accessed=bytes_accessed,
+                    coll_bytes=coll, model_flops=model_flops,
+                    per_device_mem=mem)

@@ -1,0 +1,92 @@
+"""Attribution tool for §Perf: where do the collective / memory bytes of a
+compiled dry-run cell come from?
+
+    PYTHONPATH=src python -m repro.launch.breakdown results/hlo/<cell>.hlo
+
+Groups execution-count-weighted collective bytes by (kind, op_name metadata
+prefix) and memory bytes by computation, so each hillclimb hypothesis can
+be checked against the actual dominant source.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from collections import defaultdict
+
+from repro.launch.hlo_cost import (_COLLECTIVES, _call_edges, _comp_cost,
+                                   _fusion_out_bytes, _fusion_param_bytes,
+                                   _instr_bytes, _shape_bytes, _SKIP_OPS,
+                                   parse_hlo)
+
+
+def _counts(comps, entry):
+    counts = {c: 0.0 for c in comps}
+
+    def visit(name, mult, seen):
+        if name in seen:
+            return
+        counts[name] += mult
+        for callee, w in _call_edges(comps[name], comps):
+            visit(callee, mult * w, seen + (name,))
+
+    visit(entry, 1.0, ())
+    return counts
+
+
+def _opname(line: str) -> str:
+    m = re.search(r'op_name="([^"]*)"', line)
+    if not m:
+        return "(none)"
+    name = m.group(1)
+    # keep the semantic tail: jit(step)/jvp()/while/body/...  -> last 2 parts
+    parts = [p for p in name.split("/") if p and not p.startswith("jit(")]
+    return "/".join(parts[-3:]) if parts else name[:60]
+
+
+def breakdown(path: str, top: int = 15):
+    text = open(path).read()
+    comps, entry = parse_hlo(text)
+    counts = _counts(comps, entry)
+    fusion_names = set()
+    for comp in comps.values():
+        for inst in comp.instrs:
+            if inst.op == "fusion":
+                m = re.search(r"calls=(%[\w.\-]+)", inst.line)
+                if m:
+                    fusion_names.add(m.group(1))
+    fp = {n: _fusion_param_bytes(comps[n]) for n in fusion_names if n in comps}
+    fo = {n: _fusion_out_bytes(comps[n]) for n in fusion_names if n in comps}
+
+    coll = defaultdict(float)
+    mem = defaultdict(float)
+    for name, comp in comps.items():
+        c = counts[name]
+        if c == 0:
+            continue
+        for inst in comp.instrs:
+            base = inst.op[:-6] if inst.op.endswith("-start") else inst.op
+            if base in _COLLECTIVES:
+                rb = _shape_bytes(inst.result_type)
+                mult = 2.0 if base == "all-reduce" else 1.0
+                coll[(base, _opname(inst.line))] += c * rb * mult
+            if name not in fusion_names and inst.op not in _SKIP_OPS:
+                b = _instr_bytes(inst, comp, fp, fo)
+                if b:
+                    mem[(inst.op, _opname(inst.line))] += c * b
+
+    print(f"== {path}")
+    print(f"-- collective bytes by (kind, op_name), per device, top {top}:")
+    tot = sum(coll.values())
+    for (k, o), v in sorted(coll.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {v:12.3e} ({v/max(tot,1e-9)*100:5.1f}%) {k:20s} {o}")
+    print(f"  total: {tot:.3e} B/device -> t_coll {tot/50e9:.3f}s")
+    print(f"-- memory bytes by (op, op_name), per device, top {top}:")
+    tot = sum(mem.values())
+    for (k, o), v in sorted(mem.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {v:12.3e} ({v/max(tot,1e-9)*100:5.1f}%) {k:20s} {o}")
+    print(f"  total: {tot:.3e} B/device -> t_mem {tot/819e9:.3f}s")
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        breakdown(p)

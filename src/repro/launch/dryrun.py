@@ -1,0 +1,270 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+        --shape train_4k [--multi-pod] [--all] [--json out.jsonl]
+
+The XLA_FLAGS lines below MUST run before any jax import (jax locks the
+device count on first init); nothing else in the repo sets it globally.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ShapeConfig, cell_is_runnable,
+                                get_config, input_specs)
+from repro.dist.sharding import (batch_specs, cache_specs_sharding,
+                                 data_axes, param_specs)
+from repro.launch import steps as S
+from repro.launch.analysis import Roofline, analyse
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+
+K_CLUSTERS = 2          # FL clusters on the multi-pod mesh (= #pods)
+
+
+def _sds(tree, f):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(f(s.shape), s.dtype),
+                        tree)
+
+
+def _with_leading(tree, k: int):
+    return _sds(tree, lambda shp: (k,) + tuple(shp))
+
+
+def _clustered_batch(specs: dict[str, Any], k: int) -> dict[str, Any]:
+    """(B, ...) -> (K, B/K, ...); mrope position_ids (3,B,S) -> (K,3,B/K,S)."""
+    out = {}
+    for name, s in specs.items():
+        shp = list(s.shape)
+        bdim = 1 if name == "position_ids" else 0
+        assert shp[bdim] % k == 0, (name, shp)
+        shp[bdim] //= k
+        if name == "position_ids":
+            shp = [k] + shp
+        else:
+            shp = [k] + shp
+        out[name] = jax.ShapeDtypeStruct(tuple(shp), s.dtype)
+    return out
+
+
+def prepare_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+                 causal_skip: bool = False, remat: bool = True,
+                 fsdp: bool = True, mix: bool = True, tp=None,
+                 moe_groups: int = 0):
+    """Returns (jitted_fn, arg_specs) ready to .lower(*arg_specs).
+
+    tp: True/False forces tensor parallelism; None applies the per-arch
+    policy — prefer_tp=False archs run pure-DP, but ONLY for single-pod
+    training (decode/prefill batches are too small to spread over the
+    whole chip count, and clustered multi-pod batches shard over the
+    in-pod data axis only)."""
+    cfg = get_config(arch)
+    shape_ = SHAPES[shape_name]
+    if tp is None:
+        tp = not (not cfg.prefer_tp and shape_.kind == "train"
+                  and not multi_pod)
+    if moe_groups < 0:
+        cfg = dataclasses.replace(cfg, moe_groups=0)     # force flat dispatch
+    elif moe_groups:
+        cfg = dataclasses.replace(cfg, moe_groups=moe_groups)
+    elif cfg.moe_groups and multi_pod and shape_.kind == "train":
+        # grouped dispatch REGRESSES under the pod-vmapped clustered step
+        # (GSPMD partitions the nested-vmapped scatter by replication;
+        # measured 800s vs 225s collective term on deepseek-v2 — see
+        # EXPERIMENTS.md §Perf). Multi-pod FL training uses flat dispatch.
+        cfg = dataclasses.replace(cfg, moe_groups=0)
+    elif cfg.moe_groups:
+        # dispatch groups must MATCH the width of the batch sharding
+        # (16 groups on a 32-wide dp axis leaves the group dim unsharded —
+        # measured 10x worse collectives on jamba-mp prefill, §Perf)
+        dp_total = mesh.shape["data"]
+        if not tp:
+            dp_total *= mesh.shape["model"]
+        if multi_pod and shape_.kind != "train":
+            dp_total *= mesh.shape["pod"]
+        cfg = dataclasses.replace(cfg, moe_groups=dp_total)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    if shape.kind == "train":
+        specs["weights"] = jax.ShapeDtypeStruct((shape.global_batch,),
+                                                jnp.float32)
+        params = api.param_specs(cfg)
+        clustered = multi_pod
+        if clustered:
+            params = _with_leading(params, K_CLUSTERS)
+            batch = _clustered_batch(specs, K_CLUSTERS)
+        else:
+            batch = specs
+        mom = params
+        p_spec = param_specs(params, mesh, cluster_dim=clustered, fsdp=fsdp,
+                             cfg=cfg, tp=tp)
+        b_spec = batch_specs(batch, mesh, cluster_dim=clustered, tp=tp)
+        step = S.build_fl_train_step(cfg, mesh, clustered=clustered,
+                                     causal_skip=causal_skip, remat=remat,
+                                     mix=mix, tp=tp)
+        p_sh = jax.tree.map(ns, p_spec)
+        b_sh = jax.tree.map(ns, b_spec)
+        if clustered:
+            m_spec = jax.ShapeDtypeStruct((K_CLUSTERS, K_CLUSTERS), jnp.float32)
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, p_sh, b_sh, ns(P())),
+                         out_shardings=(p_sh, p_sh, ns(P())))
+            args = (params, mom, batch, m_spec)
+        else:
+            fn = jax.jit(step, in_shardings=(p_sh, p_sh, b_sh),
+                         out_shardings=(p_sh, p_sh, ns(P())))
+            args = (params, mom, batch)
+        tokens = shape.global_batch * shape.seq_len
+        mflops = api.model_flops(cfg, tokens, "train")
+        return fn, args, mflops
+
+    params = api.param_specs(cfg)
+    p_spec = param_specs(params, mesh, cluster_dim=False, fsdp=fsdp,
+                         cfg=cfg, tp=tp)
+    p_sh = jax.tree.map(ns, p_spec)
+
+    if shape.kind == "prefill":
+        b_spec = batch_specs(specs, mesh, tp=tp)
+        b_sh = jax.tree.map(ns, b_spec)
+        step = S.build_prefill_step(cfg, mesh, causal_skip=causal_skip, tp=tp)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=None)
+        tokens = shape.global_batch * shape.seq_len
+        mflops = api.model_flops(cfg, tokens, "prefill")
+        return fn, (params, specs), mflops
+
+    # decode
+    cache = specs.pop("cache")
+    b_spec = batch_specs(specs, mesh, tp=tp)
+    c_spec = cache_specs_sharding(cache, mesh)
+    b_sh = jax.tree.map(ns, b_spec)
+    c_sh = jax.tree.map(ns, c_spec)
+    step = S.build_decode_step(cfg, mesh, tp=tp)
+
+    def step2(params, batch, cache):
+        return step(params, {**batch, "cache": cache})
+
+    fn = jax.jit(step2, in_shardings=(p_sh, b_sh, c_sh),
+                 out_shardings=(None, c_sh))
+    tokens = shape.global_batch          # one new token per sequence
+    mflops = api.model_flops(cfg, tokens, "decode")
+    return fn, (params, specs, cache), mflops
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True, save_hlo: str = None, **kw) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_runnable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        if verbose:
+            print(f"SKIP  {arch} x {shape_name} [{mesh_name}]: {reason}")
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    with mesh:
+        fn, args, mflops = prepare_cell(arch, shape_name, mesh,
+                                        multi_pod=multi_pod, **kw)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    if save_hlo:
+        os.makedirs(save_hlo, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_name.replace('x', '-')}"
+        with open(os.path.join(save_hlo, tag + ".hlo"), "w") as f:
+            f.write(compiled.as_text())
+    rl = analyse(compiled, lowered, arch=arch, shape=shape_name,
+                 mesh_name=mesh_name, chips=chips, model_flops=mflops)
+    row = rl.row()
+    row.update({"status": "ok", "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1)})
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            row["memory_analysis"] = {
+                k: int(getattr(ma, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")}
+    except Exception:
+        pass
+    if verbose:
+        print(f"OK    {arch} x {shape_name} [{mesh_name}] "
+              f"flops={row['flops']:.3e} bytes={row['bytes']:.3e} "
+              f"coll={row['coll_bytes']:.3e} dom={row['dominant']} "
+              f"frac={row['roofline_fraction']:.3f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all 40 cells")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-tp", action="store_true")
+    ap.add_argument("--force-tp", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--no-mix", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--causal-skip", action="store_true")
+    ap.add_argument("--json", default=None, help="append JSONL rows here")
+    ap.add_argument("--save-hlo", default=None, help="dir for compiled HLO text")
+    args = ap.parse_args(argv)
+
+    tp = None
+    if args.no_tp:
+        tp = False
+    if args.force_tp:
+        tp = True
+    kw = dict(fsdp=not args.no_fsdp, remat=not args.no_remat,
+              causal_skip=args.causal_skip, tp=tp,
+              moe_groups=args.moe_groups, mix=not args.no_mix)
+    cells = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rows = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rows.append(run_cell(arch, shape, multi_pod=mp,
+                                     save_hlo=args.save_hlo, **kw))
+            except Exception as e:
+                print(f"FAIL  {arch} x {shape} "
+                      f"[{'2x16x16' if mp else '16x16'}]: {type(e).__name__}: "
+                      f"{str(e)[:300]}")
+                rows.append({"arch": arch, "shape": shape,
+                             "mesh": "2x16x16" if mp else "16x16",
+                             "status": "fail", "error": str(e)[:500]})
+            if args.json:
+                with open(args.json, "a") as f:
+                    f.write(json.dumps(rows[-1]) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_fail = sum(r["status"] == "fail" for r in rows)
+    print(f"\n{n_ok} ok / {n_skip} skip / {n_fail} fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,371 @@
+"""While-aware cost model over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — `while` loop
+bodies (every ``lax.scan``: the layer stack, chunked attention, chunked CE,
+SSM scans) are counted a single time regardless of trip count, so FLOPs /
+bytes / collective bytes are all undercounted by the loop trip counts.
+
+This parser rebuilds the call graph from the HLO text and weights every
+computation by its execution count:
+
+  * ``while(...)`` bodies/conditions x trip count — recovered from the
+    loop-bound ``constant(N)`` + ``compare(..), direction=LT`` in the
+    condition computation (the shape lax.scan lowers to).
+  * ``fusion(...), calls=%c`` and ``call``/``to_apply`` x 1.
+  * conditional branches x 1 (upper bound).
+
+Per computation it counts:
+  * dot FLOPs: 2 * |result| * prod(lhs contracting dims)  (MXU work)
+  * bytes: result + operand bytes of every top-level instruction
+    (post-fusion HLO: one HBM write per instruction output, one read per
+    operand — fusion internals excluded)
+  * collective bytes by kind, with ring-traffic multipliers
+    (all-reduce 2x result, reduce-scatter = operand bytes, others =
+    result bytes).
+
+All quantities are PER-PARTITION (the HLO is the SPMD-partitioned module);
+multiply by chip count for globals.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_NAME_RE = re.compile(r"%[\w.\-]+")
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "domain"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(text: str):
+    """All (dtype, elems) shapes in a type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * n for dt, n in _shape_list(text))
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],:{}/* ]+?))\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = ""
+    for raw in text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw)
+        m = _COMP_HDR.match(line.strip())
+        if m:
+            cur = Computation(m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rtype, op, rest = mi.groups()
+        # operands: names inside the first balanced paren chunk
+        depth, i, args = 1, 0, ""
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = rest[:i]
+                    break
+        operands = _NAME_RE.findall(args)
+        inst = Instr(name, rtype, op, operands, line)
+        cur.instrs.append(inst)
+        cur.by_name[name] = inst
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """lax.scan conditions: compare(induction, constant(N)), direction=LT."""
+    consts = {}
+    for inst in cond.instrs:
+        if inst.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", inst.line)
+            if m:
+                consts[inst.name] = int(m.group(1))
+    for inst in cond.instrs:
+        if inst.op == "compare" and "direction=LT" in inst.line:
+            for o in inst.operands:
+                if o in consts and consts[o] > 0:
+                    return consts[o]
+    pos = [v for v in consts.values() if v > 0]
+    return max(pos) if pos else 1
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    res = _shape_list(inst.result_type)
+    n_out = sum(n for _, n in res)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    if not m or not inst.operands:
+        return 2.0 * n_out
+    lhs = comp.by_name.get(inst.operands[0])
+    if lhs is None:
+        return 2.0 * n_out
+    lhs_shapes = _SHAPE_RE.findall(lhs.result_type)
+    if not lhs_shapes:
+        return 2.0 * n_out
+    dims = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+    k = 1
+    for ci in m.group(1).split(","):
+        if ci and int(ci) < len(dims):
+            k *= dims[int(ci)]
+    return 2.0 * n_out * k
+
+
+_NO_BYTES_OPS = {"while", "conditional", "call"}
+
+
+def _fusion_param_bytes(comp: Computation) -> dict[str, int]:
+    """Effective read bytes per parameter of a fusion computation.
+
+    XLA fuses (dynamic-)slice into consumers and dynamic-update-slice into
+    producers:
+      * a param used only by slices is read at slice size;
+      * a param used only as the BASE of dynamic-update-slice is aliased
+        in place — zero read traffic."""
+    uses: dict[str, list[Instr]] = {}
+    for inst in comp.instrs:
+        for o in inst.operands:
+            uses.setdefault(o, []).append(inst)
+    out = {}
+    for inst in comp.instrs:
+        if inst.op != "parameter":
+            continue
+        full = _shape_bytes(inst.result_type)
+        us = uses.get(inst.name, [])
+        if us and all(u.op in ("dynamic-slice", "slice") and
+                      u.operands and u.operands[0] == inst.name for u in us):
+            full = sum(_shape_bytes(u.result_type) for u in us)
+        elif us and all(u.op == "dynamic-update-slice" and
+                        u.operands and u.operands[0] == inst.name
+                        for u in us):
+            full = 0
+        out[inst.name] = full
+    return out
+
+
+def _fusion_out_bytes(comp: Computation) -> int:
+    """Effective write bytes of a fusion: a dynamic-update-slice root only
+    writes the update slice (the base aliases in place)."""
+    root = None
+    for inst in comp.instrs:
+        if "ROOT" in inst.line:
+            root = inst
+    if root is None:
+        root = comp.instrs[-1] if comp.instrs else None
+    if root is None:
+        return 0
+    # walk through trivial wrappers to find a DUS
+    seen, cur = set(), root
+    while cur is not None and cur.name not in seen:
+        seen.add(cur.name)
+        if cur.op == "dynamic-update-slice":
+            if len(cur.operands) >= 2:
+                upd = comp.by_name.get(cur.operands[1])
+                if upd is not None:
+                    return _shape_bytes(upd.result_type)
+            return _shape_bytes(cur.result_type)
+        if cur.op in ("bitcast", "copy", "tuple") and cur.operands:
+            cur = comp.by_name.get(cur.operands[0])
+        else:
+            break
+    return _shape_bytes(root.result_type)
+
+
+def _instr_bytes(inst: Instr, comp: Computation,
+                 fusion_params: dict[str, dict[str, int]],
+                 fusion_outs: dict[str, int]) -> float:
+    """HBM traffic estimate for one top-level instruction."""
+    if inst.op in _NO_BYTES_OPS:
+        return 0.0
+    if inst.op == "dynamic-slice" or inst.op == "slice":
+        return 2.0 * _shape_bytes(inst.result_type)        # read + write slice
+    if inst.op == "dynamic-update-slice":
+        upd = 0
+        if len(inst.operands) >= 2:
+            src = comp.by_name.get(inst.operands[1])
+            if src is not None:
+                upd = _shape_bytes(src.result_type)
+        return 2.0 * (upd or _shape_bytes(inst.result_type))
+    b = float(_shape_bytes(inst.result_type))
+    if inst.op == "fusion":
+        m = re.search(r"calls=(%[\w.\-]+)", inst.line)
+        fname = m.group(1) if m else None
+        eff = fusion_params.get(fname, {})
+        eff_list = list(eff.values())
+        out_eff = fusion_outs.get(fname)
+        b = float(out_eff if out_eff is not None
+                  else _shape_bytes(inst.result_type))
+        for idx, o in enumerate(inst.operands):
+            src = comp.by_name.get(o)
+            if src is None or src.op == "constant":
+                continue
+            b += (eff_list[idx] if idx < len(eff_list)
+                  else _shape_bytes(src.result_type))
+        return b
+    for o in inst.operands:
+        src = comp.by_name.get(o)
+        if src is not None and src.op not in ("constant",):
+            b += _shape_bytes(src.result_type)
+    return b
+
+
+def _comp_cost(comp: Computation,
+               fusion_params: dict[str, dict[str, int]],
+               fusion_outs: dict[str, int]) -> CostTotals:
+    t = CostTotals()
+    for inst in comp.instrs:
+        if inst.op in _SKIP_OPS:
+            continue
+        if inst.op in ("dot",):
+            t.flops += _dot_flops(inst, comp)
+        kind = None
+        base = inst.op[:-6] if inst.op.endswith("-start") else inst.op
+        if base in _COLLECTIVES:
+            kind = base
+        if kind:
+            rb = _shape_bytes(inst.result_type)
+            if kind == "all-reduce":
+                t.coll[kind] += 2.0 * rb
+            elif kind == "reduce-scatter":
+                ob = sum(_shape_bytes(comp.by_name[o].result_type)
+                         for o in inst.operands if o in comp.by_name)
+                t.coll[kind] += float(ob or rb)
+            else:
+                t.coll[kind] += float(rb)
+        if inst.op.endswith("-done"):
+            continue
+        t.bytes += _instr_bytes(inst, comp, fusion_params, fusion_outs)
+    return t
+
+
+def _call_edges(comp: Computation, comps: dict) -> list[tuple[str, float]]:
+    edges = []
+    for inst in comp.instrs:
+        if inst.op == "while":
+            mb = re.search(r"body=(%[\w.\-]+)", inst.line)
+            mc = re.search(r"condition=(%[\w.\-]+)", inst.line)
+            trips = _trip_count(comps[mc.group(1)]) if mc and \
+                mc.group(1) in comps else 1
+            if mb and mb.group(1) in comps:
+                edges.append((mb.group(1), float(max(trips, 1))))
+        elif inst.op == "fusion":
+            m = re.search(r"calls=(%[\w.\-]+)", inst.line)
+            if m and m.group(1) in comps:
+                edges.append((m.group(1), 1.0))
+        elif inst.op in ("call", "custom-call"):
+            m = re.search(r"to_apply=(%[\w.\-]+)", inst.line)
+            if m and m.group(1) in comps:
+                edges.append((m.group(1), 1.0))
+        elif inst.op == "conditional":
+            for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                 r"true_computation=(%[\w.\-]+)|"
+                                 r"false_computation=(%[\w.\-]+))", inst.line):
+                for g in m.groups():
+                    if g:
+                        for name in _NAME_RE.findall(g) or [g]:
+                            if name in comps:
+                                edges.append((name, 1.0))
+    return edges
+
+
+def analyze_hlo(text: str) -> CostTotals:
+    """Execution-count-weighted totals for the whole module (per device).
+
+    Fusion computations contribute their dot FLOPs but not their internal
+    byte traffic (inputs/outputs are counted at the call site)."""
+    comps, entry = parse_hlo(text)
+    if not entry:
+        return CostTotals()
+
+    counts: dict[str, float] = {c: 0.0 for c in comps}
+
+    def visit(name: str, mult: float, seen: tuple):
+        if name in seen:            # defensive: HLO has no recursion
+            return
+        counts[name] += mult
+        for callee, w in _call_edges(comps[name], comps):
+            visit(callee, mult * w, seen + (name,))
+
+    visit(entry, 1.0, ())
+
+    total = CostTotals()
+    fusion_names = set()
+    for comp in comps.values():
+        for inst in comp.instrs:
+            if inst.op == "fusion":
+                m = re.search(r"calls=(%[\w.\-]+)", inst.line)
+                if m:
+                    fusion_names.add(m.group(1))
+    fusion_params = {name: _fusion_param_bytes(comps[name])
+                     for name in fusion_names if name in comps}
+    fusion_outs = {name: _fusion_out_bytes(comps[name])
+                   for name in fusion_names if name in comps}
+    for name, comp in comps.items():
+        c = counts[name]
+        if c == 0:
+            continue
+        t = _comp_cost(comp, fusion_params, fusion_outs)
+        total.flops += c * t.flops
+        for k, v in t.coll.items():
+            total.coll[k] += c * v
+        if name not in fusion_names:
+            total.bytes += c * t.bytes
+    return total

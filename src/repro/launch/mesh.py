@@ -1,0 +1,32 @@
+"""Production meshes (see MULTI-POD DRY-RUN spec).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing
+jax; smoke tests and benches see the 1 real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Tiny mesh over however many devices exist (tests on 1-8 CPU devs)."""
+    n = len(jax.devices())
+    if multi_pod:
+        if n >= 4:
+            return jax.make_mesh((2, n // 2, 1), ("pod", "data", "model"))
+        return jax.make_mesh((1, n, 1), ("pod", "data", "model"))
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

@@ -1,0 +1,115 @@
+"""Jit-able datacenter step functions (Level B of DESIGN.md §2).
+
+``fl_train_step`` maps the CroSatFL hierarchy onto the production mesh:
+
+  * cluster  = pod. Cluster models carry a leading K dim sharded over
+    "pod" (each pod holds its own model; vmap(spmd_axis_name="pod")
+    partitions the per-cluster computation with zero cross-pod traffic).
+  * intra-cluster aggregation = the data-axis gradient all-reduce (ICI).
+    Skip-One enters as per-example ``weights`` — a skipped client's batch
+    shard is zero-weighted and the weighted mean renormalizes (Eq. 26).
+  * random-k cross-aggregation = the (K, K) mixing einsum over the pod
+    axis (DCN) — the only cross-pod collective, carrying
+    |group|/K-sparse rows (Eq. 37).
+
+Single-pod meshes have exactly one cluster: no leading K dim and no
+mixing term (the mesh IS the cluster).
+
+``prefill_step`` / ``decode_step`` serve the consolidated model (Eq. 38):
+params sharded (FSDP x TP), batch over all data axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ctx import use_rules
+from repro.dist.sharding import activation_rules
+from repro.models import api
+
+F32 = jnp.float32
+
+
+def _sgd(params, grads, mom, lr: float, momentum: float = 0.9):
+    """Momentum SGD keeping state in the params dtype (memory: the giant
+    archs hold momentum in bf16; DESIGN.md §6)."""
+    def upd(p, g, m):
+        m2 = (momentum * m.astype(F32) + g.astype(F32)).astype(m.dtype)
+        return (p.astype(F32) - lr * m2.astype(F32)).astype(p.dtype), m2
+    out = jax.tree.map(upd, params, grads, mom)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, new_m
+
+
+def build_fl_train_step(cfg, mesh, *, clustered: bool, lr: float = 1e-2,
+                        causal_skip: bool = False, remat: bool = True,
+                        mix: bool = True, tp: bool = True):
+    """Returns step(params, mom, batch[, mix_matrix]) -> (params', mom',
+    loss). ``clustered``: leading K cluster dim on params/batch (multi-pod).
+    """
+    rules = activation_rules(mesh, cluster_vmapped=clustered, tp=tp)
+
+    def loss_fn(params, batch):
+        with use_rules(mesh, rules):
+            return api.train_loss(params, batch, cfg, remat=remat,
+                                  causal_skip=causal_skip)
+
+    if not clustered:
+        def step(params, mom, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            new_p, new_m = _sgd(params, grads, mom, lr)
+            return new_p, new_m, loss
+        return step
+
+    grad_one = jax.value_and_grad(loss_fn)
+
+    def step(params, mom, batch, mix_matrix):
+        losses, grads = jax.vmap(grad_one, spmd_axis_name="pod")(params, batch)
+        new_p, new_m = _sgd(params, grads, mom, lr)
+        if mix:
+            # Eq. 37 over the pod axis: w'_k = sum_j M[k, j] w_j
+            def mix_leaf(x):
+                return jnp.einsum("kj,j...->k...", mix_matrix.astype(F32),
+                                  x.astype(F32)).astype(x.dtype)
+            new_p = jax.tree.map(mix_leaf, new_p)
+        return new_p, new_m, losses
+
+    return step
+
+
+def build_prefill_step(cfg, mesh, *, causal_skip: bool = False,
+                       tp: bool = True):
+    rules = activation_rules(mesh, tp=tp)
+
+    def step(params, batch):
+        with use_rules(mesh, rules):
+            return api.prefill(params, batch, cfg, causal_skip=causal_skip)
+
+    return step
+
+
+def build_decode_step(cfg, mesh, *, tp: bool = True):
+    rules = activation_rules(mesh, tp=tp)
+
+    def step(params, batch):
+        with use_rules(mesh, rules):
+            return api.decode_step(params, batch, cfg)
+
+    return step
+
+
+def consolidate_step(cluster_params, n_samples):
+    """Eq. 38 on the mesh: weighted average over the leading pod dim."""
+    w = n_samples.astype(F32)
+    w = w / w.sum()
+
+    def avg(leaf):
+        return jnp.einsum("k,k...->...", w, leaf.astype(F32)).astype(leaf.dtype)
+
+    return jax.tree.map(avg, cluster_params)

@@ -1,0 +1,102 @@
+"""Unified model API over the assigned architecture zoo.
+
+Entry points (all functional, params are pytrees):
+
+    init(cfg, key)                  -> params (real arrays)
+    param_specs(cfg)                -> params (ShapeDtypeStructs, no alloc)
+    train_loss(params, batch, cfg)  -> scalar CE (+ MoE aux)
+    prefill(params, batch, cfg)     -> last-position logits (B, V)
+    decode_step(params, batch, cfg) -> (logits, new_cache)
+    cache_specs(cfg, batch, max_seq)-> KV/state cache ShapeDtypeStructs
+    count_params(cfg)               -> analytic parameter count
+
+Decoder-only archs route through ``models.transformer``; whisper routes
+through ``models.encdec``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import transformer as T
+
+
+def init(cfg, key: jax.Array):
+    if cfg.is_encoder_decoder:
+        return ED.encdec_params(cfg, key)
+    return T.lm_params(cfg, key)
+
+
+def param_specs(cfg):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    if cfg.is_encoder_decoder:
+        return ED.encdec_params(cfg, None)
+    return T.lm_params(cfg, None)
+
+
+def train_loss(params, batch, cfg, *, remat: bool = True,
+               causal_skip: bool = False):
+    if cfg.is_encoder_decoder:
+        return ED.encdec_loss(params, batch, cfg, remat=remat,
+                              causal_skip=causal_skip)
+    return T.lm_loss(params, batch, cfg, remat=remat, causal_skip=causal_skip)
+
+
+def prefill(params, batch, cfg, *, causal_skip: bool = False):
+    if cfg.is_encoder_decoder:
+        return ED.encdec_prefill(params, batch, cfg, causal_skip=causal_skip)
+    return T.lm_prefill(params, batch, cfg, causal_skip=causal_skip)
+
+
+def decode_step(params, batch, cfg):
+    if cfg.is_encoder_decoder:
+        return ED.encdec_decode_step(params, batch, cfg)
+    return T.lm_decode_step(params, batch, cfg)
+
+
+def cache_specs(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    if cfg.is_encoder_decoder:
+        return ED.encdec_cache_specs(cfg, batch, max_seq, dtype)
+    return T.build_stack_cache_spec(cfg, batch, max_seq, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter count (exact: sums the spec tree)
+# ---------------------------------------------------------------------------
+
+def _tree_size(tree) -> int:
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    total = _tree_size(param_specs(cfg))
+    if not active_only or not cfg.num_experts:
+        return total
+    # Routed-expert weights: 3 matrices (gate/up/down) of (E, D, F) per MoE
+    # layer; only top_k/E of them are active per token.
+    n_moe = sum(1 for _, ffn in cfg.layer_kinds if ffn == "moe")
+    per_layer_routed = 3 * cfg.num_experts * cfg.d_model * cfg.moe_d_ff
+    inactive = n_moe * per_layer_routed * (1 - cfg.moe_top_k / cfg.num_experts)
+    return int(total - inactive)
+
+
+def model_bytes(cfg) -> int:
+    """Payload size d (bytes) for the FL communication/energy model."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return count_params(cfg) * itemsize
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS for the roofline usefulness ratio (6·N·D tokens rule)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, tokens: int, kind: str = "train") -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params)."""
+    n_active = count_params(cfg, active_only=True)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

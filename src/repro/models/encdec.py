@@ -1,0 +1,230 @@
+"""Whisper-style encoder-decoder assembly.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings of shape (B, encoder_seq, d_model).
+The encoder is a bidirectional transformer over the frames; the decoder is
+a causal transformer with interleaved cross-attention to the encoder output.
+
+Decode-time contract: the cross-attention k/v are computed once at prefill
+and live in the cache (`xk`/`xv` per decoder layer); per-step decode never
+re-touches the encoder.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.ctx import shard
+from repro.models import layers as L
+from repro.models.layers import ParamFactory
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _enc_layer_params(pf: ParamFactory, cfg):
+    return {
+        "norm1": L.norm_params(pf, cfg.d_model, cfg.norm),
+        "attn": L.attn_params(pf, cfg),
+        "norm2": L.norm_params(pf, cfg.d_model, cfg.norm),
+        "mlp": L.mlp_params(pf, cfg.d_model, cfg.d_ff, cfg.mlp_gated),
+    }
+
+
+def _dec_layer_params(pf: ParamFactory, cfg):
+    return {
+        "norm1": L.norm_params(pf, cfg.d_model, cfg.norm),
+        "self_attn": L.attn_params(pf, cfg),
+        "norm_x": L.norm_params(pf, cfg.d_model, cfg.norm),
+        "cross_attn": L.attn_params(pf, cfg, cross=True),
+        "norm2": L.norm_params(pf, cfg.d_model, cfg.norm),
+        "mlp": L.mlp_params(pf, cfg.d_model, cfg.d_ff, cfg.mlp_gated),
+    }
+
+
+def _stacked(pf: ParamFactory, n: int, builder):
+    if pf.key is None:
+        one = builder()
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one)
+    reps = [builder() for _ in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+
+def encdec_params(cfg, key: Optional[jax.Array]):
+    pf = ParamFactory(key, cfg.dtype)
+    return {
+        "embed": pf.dense(cfg.vocab_size, cfg.d_model, scale=0.02),
+        "dec_pos": pf.dense(cfg.max_positions, cfg.d_model, scale=0.01),
+        "enc_pos": pf.dense(cfg.encoder_seq, cfg.d_model, scale=0.01),
+        "enc_layers": _stacked(pf, cfg.num_encoder_layers,
+                               lambda: _enc_layer_params(pf, cfg)),
+        "enc_norm": L.norm_params(pf, cfg.d_model, cfg.norm),
+        "dec_layers": _stacked(pf, cfg.num_layers,
+                               lambda: _dec_layer_params(pf, cfg)),
+        "final_norm": L.norm_params(pf, cfg.d_model, cfg.norm),
+        # whisper ties the output head to the token embedding
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, frames, cfg, *, remat: bool = True):
+    """frames: (B, Se, D) stubbed conv-frontend output."""
+    Se = frames.shape[1]
+    h = frames + params["enc_pos"][:Se].astype(frames.dtype)
+    h = shard(h, "act_btd")
+    positions = jnp.arange(Se)
+
+    def body(h, lp):
+        a = L.apply_norm(lp["norm1"], h, cfg.norm, cfg.norm_eps)
+        a, _ = L.attn_fwd(lp["attn"], a, cfg, local=False, positions=positions,
+                          causal=False)
+        h = shard(h + a, "act_btd")
+        m = L.apply_norm(lp["norm2"], h, cfg.norm, cfg.norm_eps)
+        m = L.mlp_fwd(lp["mlp"], m, cfg.act, cfg.mlp_gated)
+        h = shard(h + m, "act_btd")
+        return h, ()
+
+    fn = jax.checkpoint(body) if remat else body
+    h, _ = lax.scan(fn, h, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], h, cfg.norm, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _dec_block(lp, x, ctx, cfg, *, positions, self_cache, pos, xkv,
+               causal_skip=False):
+    """One decoder block. xkv: precomputed cross-attn {"k","v"} (decode) or
+    None (train/prefill: projected from ctx)."""
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+
+    a = L.apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+    a, new_self = L.attn_fwd(lp["self_attn"], a, cfg, local=False,
+                             positions=positions, cache=self_cache, pos=pos,
+                             causal=True, causal_skip=causal_skip)
+    x = shard(x + a, "act_btd")
+
+    c = L.apply_norm(lp["norm_x"], x, cfg.norm, cfg.norm_eps)
+    cp = lp["cross_attn"]
+    q = (c @ cp["wq"]).reshape(B, S, H, hd)
+    if xkv is None:
+        Sk = ctx.shape[1]
+        k = (ctx @ cp["wk"]).reshape(B, Sk, Hkv, hd)
+        v = (ctx @ cp["wv"]).reshape(B, Sk, Hkv, hd)
+        out = L.chunked_attention(q, k, v, causal=False)
+        new_xkv = {"k": k, "v": v}
+    else:
+        Sk = xkv["k"].shape[1]
+        out = L.decode_attention(q, xkv["k"], xkv["v"],
+                                 jnp.full((B,), Sk - 1, jnp.int32))
+        new_xkv = xkv
+    c = out.reshape(B, S, H * hd) @ cp["wo"]
+    x = shard(x + c, "act_btd")
+
+    m = L.apply_norm(lp["norm2"], x, cfg.norm, cfg.norm_eps)
+    m = L.mlp_fwd(lp["mlp"], m, cfg.act, cfg.mlp_gated)
+    x = shard(x + m, "act_btd")
+    return x, new_self, new_xkv
+
+
+def decode_stack(params, tokens, ctx, cfg, *, cache=None, pos=None,
+                 remat: bool = True, causal_skip: bool = False):
+    """tokens: (B,S) int; ctx: (B,Se,D) encoder output (or None at decode).
+
+    Returns (h, new_cache). Cache pytree per layer:
+      {"k","v"} self-attn ring + {"xk","xv"} cross k/v.
+    """
+    B, S = tokens.shape
+    decode = cache is not None
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if decode:
+        h = h + jnp.take(params["dec_pos"], pos, axis=0)[:, None, :].astype(h.dtype)
+        positions = pos[:, None]
+    else:
+        h = h + params["dec_pos"][:S].astype(h.dtype)
+        positions = jnp.arange(S)
+    h = shard(h, "act_btd")
+
+    def body(carry, xs):
+        x = carry
+        if decode:
+            lp, lc = xs
+            self_cache = {"k": lc["k"], "v": lc["v"]}
+            xkv = {"k": lc["xk"], "v": lc["xv"]}
+        else:
+            (lp,) = xs
+            self_cache, xkv = None, None
+        x, new_self, new_xkv = _dec_block(lp, x, ctx, cfg, positions=positions,
+                                          self_cache=self_cache, pos=pos,
+                                          xkv=xkv, causal_skip=causal_skip)
+        if decode:
+            out = {"k": new_self["k"], "v": new_self["v"],
+                   "xk": new_xkv["k"], "xv": new_xkv["v"]}
+        elif new_xkv is not None:
+            out = {"xk": new_xkv["k"], "xv": new_xkv["v"]}
+        else:
+            out = 0.0
+        return x, out
+
+    fn = jax.checkpoint(body) if (remat and not decode) else body
+    xs = (params["dec_layers"], cache) if decode else (params["dec_layers"],)
+    h, layer_out = lax.scan(fn, h, xs)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    return h, layer_out
+
+
+# ---------------------------------------------------------------------------
+# Top-level entry points
+# ---------------------------------------------------------------------------
+
+def encdec_loss(params, batch, cfg, *, remat: bool = True,
+                causal_skip: bool = False):
+    ctx = encode(params, batch["frames"], cfg, remat=remat)
+    h, _ = decode_stack(params, batch["tokens"], ctx, cfg, remat=remat,
+                        causal_skip=causal_skip)
+    mask = None
+    if "weights" in batch:
+        B, S = batch["tokens"].shape
+        mask = jnp.broadcast_to(batch["weights"][:, None].astype(F32), (B, S))
+    return L.chunked_ce_loss(h, params["embed"].T, batch["labels"], mask=mask)
+
+
+def encdec_prefill(params, batch, cfg, *, causal_skip: bool = False):
+    ctx = encode(params, batch["frames"], cfg, remat=False)
+    h, _ = decode_stack(params, batch["tokens"], ctx, cfg, remat=False,
+                        causal_skip=causal_skip)
+    return h[:, -1, :] @ params["embed"].T
+
+
+def encdec_decode_step(params, batch, cfg):
+    """cache: stacked per-layer {"k","v","xk","xv"} (leading num_layers dim)."""
+    h, new_cache = decode_stack(params, batch["token"], None, cfg,
+                                cache=batch["cache"], pos=batch["pos"],
+                                remat=False)
+    logits = h[:, -1, :] @ params["embed"].T
+    return logits, new_cache
+
+
+def encdec_cache_specs(cfg, batch: int, max_seq: int, dtype):
+    nl = cfg.num_layers
+    Hkv, hd, Se = cfg.num_kv_heads, cfg.hd, cfg.encoder_seq
+    sd = jax.ShapeDtypeStruct
+    return {
+        "k": sd((nl, batch, max_seq, Hkv, hd), dtype),
+        "v": sd((nl, batch, max_seq, Hkv, hd), dtype),
+        "xk": sd((nl, batch, Se, Hkv, hd), dtype),
+        "xv": sd((nl, batch, Se, Hkv, hd), dtype),
+    }

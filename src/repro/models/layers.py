@@ -1,0 +1,644 @@
+"""Pure-JAX building blocks for the assigned model zoo.
+
+Everything is functional: params are nested dicts of arrays (or
+ShapeDtypeStructs when built for the dry-run). Compute runs in the config
+dtype (bf16) with fp32 softmax/norm internals.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.ctx import shard
+
+F32 = jnp.float32
+NEG = -1e30  # finite -inf stand-in (keeps online softmax NaN-free)
+
+
+# ===========================================================================
+# Parameter factory: real init (key given) or ShapeDtypeStruct specs (key=None)
+# ===========================================================================
+
+class ParamFactory:
+    def __init__(self, key: Optional[jax.Array], dtype):
+        self.key = key
+        self.dtype = dtype
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, *shape: int, scale: Optional[float] = None):
+        if self.key is None:
+            return jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(self._next(), tuple(shape), F32) * scale).astype(self.dtype)
+
+    def zeros(self, *shape: int):
+        if self.key is None:
+            return jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        return jnp.zeros(tuple(shape), self.dtype)
+
+    def ones(self, *shape: int):
+        if self.key is None:
+            return jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        return jnp.ones(tuple(shape), self.dtype)
+
+    def const(self, value, *shape: int):
+        if self.key is None:
+            return jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        return jnp.full(tuple(shape), value, self.dtype)
+
+
+# ===========================================================================
+# Norms
+# ===========================================================================
+
+def norm_params(pf: ParamFactory, dim: int, kind: str):
+    p = {"scale": pf.ones(dim)}
+    if kind == "layernorm":
+        p["bias"] = pf.zeros(dim)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(F32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(F32) + p["bias"].astype(F32)
+    else:  # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * lax.rsqrt(var + eps) * p["scale"].astype(F32)
+    return y.astype(x.dtype)
+
+
+def rms_headnorm(scale, x, eps: float = 1e-5):
+    """qk-norm over the head_dim axis (gemma3)."""
+    xf = x.astype(F32)
+    y = xf * lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps) * scale.astype(F32)
+    return y.astype(x.dtype)
+
+
+# ===========================================================================
+# RoPE (standard / partial / M-RoPE)
+# ===========================================================================
+
+def _rope_freqs(half: int, theta: float):
+    return theta ** (-jnp.arange(0, half, dtype=F32) / half)
+
+
+def rope_angles(positions, head_dim: int, theta: float, pct: float = 1.0,
+                mrope_sections: Optional[tuple[int, ...]] = None):
+    """positions: (..., S) int or (3, ..., S) for M-RoPE. Returns (cos, sin)
+    of shape (..., S, rot_half) where rot_half = int(head_dim*pct)//2."""
+    rot = int(head_dim * pct)
+    half = rot // 2
+    freqs = _rope_freqs(half, theta)
+    if mrope_sections is not None:
+        # positions: (3, ..., S); each frequency index belongs to one section.
+        # Sections are specified for the canonical head_dim and rescaled to
+        # the actual rotary half (reduced smoke configs have tiny head dims).
+        tot = sum(mrope_sections)
+        if tot != half:
+            scaled = [max(1, round(s * half / tot)) for s in mrope_sections]
+            scaled[-1] += half - sum(scaled)
+            mrope_sections = tuple(scaled)
+        sec_idx = jnp.concatenate([
+            jnp.full((s,), i, jnp.int32) for i, s in enumerate(mrope_sections)
+        ])  # (half,)
+        ang_all = positions[..., None].astype(F32) * freqs  # (3, ..., S, half)
+        ang = jnp.take_along_axis(
+            jnp.moveaxis(ang_all, 0, -1),  # (..., S, half, 3)
+            sec_idx[(None,) * (ang_all.ndim - 2) + (slice(None), None)], axis=-1,
+        )[..., 0]  # (..., S, half)
+    else:
+        ang = positions[..., None].astype(F32) * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, pct: float = 1.0):
+    """x: (B, S, H, hd); cos/sin: (B, S, half) or (S, half)."""
+    hd = x.shape[-1]
+    rot = 2 * cos.shape[-1]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr.astype(F32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if rot < hd:
+        out = jnp.concatenate([out, xp.astype(F32)], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ===========================================================================
+# Chunked (flash-style) attention — memory-safe at 32k in pure JAX
+# ===========================================================================
+
+def _pick_chunk(s: int, target: int = 512) -> int:
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk_q: int = 0, chunk_k: int = 0,
+                      scale: Optional[float] = None,
+                      causal_skip: bool = False):
+    """q: (B,Sq,H,hd)  k,v: (B,Sk,Hkv,hd/vd).  Online-softmax over kv chunks.
+
+    ``causal_skip``: triangular scan that only visits (q,kv) chunk pairs on or
+    below the diagonal — the beyond-paper FLOP-saving schedule (§Perf).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    cq = chunk_q or _pick_chunk(Sq)
+    ck = chunk_k or _pick_chunk(Sk)
+    nq, nk = Sq // cq, Sk // ck
+
+    qc = q.reshape(B, nq, cq, Hkv, G, hd).transpose(1, 0, 3, 4, 2, 5)  # (nq,B,Hkv,G,cq,hd)
+    kc = k.reshape(B, nk, ck, Hkv, hd).transpose(1, 0, 3, 2, 4)        # (nk,B,Hkv,ck,hd)
+    vc = v.reshape(B, nk, ck, Hkv, vd).transpose(1, 0, 3, 2, 4)
+
+    q_pos = jnp.arange(Sq).reshape(nq, cq)
+    k_pos = jnp.arange(Sk).reshape(nk, ck)
+
+    def block(qi, kj, q_blk, k_blk, v_blk, m, l, acc):
+        # NOTE (§Perf gemma EXP-D/D', both refuted): neither explicit bf16
+        # panel dots nor a bf16 p-downcast reduced traffic — XLA fuses the
+        # f32 converts into the dots already, and explicit casts ADD copies
+        # (+8% / +24% bytes). The f32-upcast form below measured best.
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk.astype(F32),
+                       k_blk.astype(F32)) * scale
+        qp = q_pos[qi][None, None, None, :, None]
+        kp = k_pos[kj][None, None, None, None, :]
+        mask = jnp.ones(s.shape, bool)
+        if causal:
+            mask &= kp <= qp
+        if window:
+            mask &= kp > qp - window
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        # NOTE (§Perf gemma EXP-D, refuted): explicitly downcasting p to
+        # bf16 before the pv dot ADDED 24% bytes — the cast materializes an
+        # unfused panel copy. Keeping p in f32 lets XLA fuse the exp chain
+        # straight into the dot operand.
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p, v_blk.astype(F32))
+        return m_new, l_new, acc_new
+
+    if causal and causal_skip and nq == nk and cq == ck:
+        # triangular schedule: per q block, scan only the qi+1 on/below-
+        # diagonal kv blocks (static prefix length per unrolled q block).
+        # NOTE (§Perf gemma): the earlier single-scan-over-pairs version
+        # threaded the FULL f32 output through the scan carry — at 32k
+        # (nq=64) that carry dominated memory traffic. Per-q scans keep
+        # only (m, l, acc) live.
+        outs = []
+        for qi in range(nq):
+            def kv_body(carry, kj, qi=qi):
+                m, l, acc = carry
+                return block(qi, kj, qc[qi], kc[kj], vc[kj], m, l, acc), ()
+
+            init = (jnp.full((B, Hkv, G, cq), NEG, F32),
+                    jnp.zeros((B, Hkv, G, cq), F32),
+                    jnp.zeros((B, Hkv, G, cq, vd), F32))
+            (m, l, acc), _ = lax.scan(kv_body, init, jnp.arange(qi + 1))
+            outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        out = jnp.stack(outs)                      # (nq, B, Hkv, G, cq, vd)
+    else:
+        def q_body(_, qi):
+            def kv_body(carry, kj):
+                m, l, acc = carry
+                return block(qi, kj, qc[qi], kc[kj], vc[kj], m, l, acc), ()
+
+            init = (jnp.full((B, Hkv, G, cq), NEG, F32),
+                    jnp.zeros((B, Hkv, G, cq), F32),
+                    jnp.zeros((B, Hkv, G, cq, vd), F32))
+            (m, l, acc), _ = lax.scan(kv_body, init, jnp.arange(nk))
+            return None, acc / jnp.maximum(l, 1e-30)[..., None]
+
+        _, out = lax.scan(q_body, None, jnp.arange(nq))  # (nq,B,Hkv,G,cq,vd)
+
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, vd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     scale: Optional[float] = None):
+    """Single-token attention over a cache.
+
+    q: (B,1,H,hd); caches: (B,Smax,Hkv,hd|vd); pos: (B,) current position.
+    With ``window``, the cache is a ring buffer of size Smax=window and slot
+    j holds absolute position pos - ((pos - j) mod window).
+    """
+    B, _, H, hd = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    vd = v_cache.shape[-1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(F32), k_cache.astype(F32)) * scale
+    slots = jnp.arange(Smax)
+    if window:
+        abs_pos = pos[:, None] - jnp.mod(pos[:, None] - slots[None, :], window)
+        valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    else:
+        valid = slots[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(F32))
+    return out.reshape(B, 1, H, vd).astype(q.dtype)
+
+
+# ===========================================================================
+# GQA attention layer (shared by dense / vlm / hybrid / encoder archs)
+# ===========================================================================
+
+def attn_params(pf: ParamFactory, cfg, cross: bool = False):
+    D, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    p = {
+        "wq": pf.dense(D, H * hd),
+        "wk": pf.dense(D, Hkv * hd),
+        "wv": pf.dense(D, Hkv * hd),
+        "wo": pf.dense(H * hd, D, scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = pf.ones(hd)
+        p["k_norm"] = pf.ones(hd)
+    return p
+
+
+def attn_fwd(p, x, cfg, *, local: bool, positions, kv_ctx=None,
+             cache=None, pos=None, causal=True, causal_skip=False):
+    """Full-sequence (train/prefill/encoder) or single-step decode attention.
+
+    kv_ctx: (B, Sk, D) cross-attention context (whisper decoder); when given,
+    k/v come from the context and no mask/rope is applied.
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    window = cfg.sliding_window if local else 0
+
+    q = shard((x @ p["wq"]).reshape(B, S, H, hd), "act_bthd")
+    src = x if kv_ctx is None else kv_ctx
+    Sk = src.shape[1]
+    k = (src @ p["wk"]).reshape(B, Sk, Hkv, hd)
+    v = (src @ p["wv"]).reshape(B, Sk, Hkv, hd)
+
+    if cfg.qk_norm and kv_ctx is None:
+        q = rms_headnorm(p["q_norm"], q)
+        k = rms_headnorm(p["k_norm"], k)
+
+    if cfg.rope_variant != "none" and kv_ctx is None:
+        sections = (16, 24, 24) if cfg.rope_variant == "mrope" else None
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta, cfg.rope_pct, sections)
+        q = apply_rope(q, cos, sin, cfg.rope_pct)
+        k = apply_rope(k, cos, sin, cfg.rope_pct)
+
+    new_cache = None
+    if cache is not None and kv_ctx is None:
+        # decode: write k/v into the (ring) cache, attend over it
+        assert S == 1
+        Smax = cache["k"].shape[1]
+        slot = jnp.mod(pos, Smax) if window else jnp.minimum(pos, Smax - 1)
+        bidx = jnp.arange(B)
+        ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        out = decode_attention(q, ck, cv, pos, window=window)
+    elif cache is not None:  # cross-attention decode: cache holds ctx k/v
+        out = decode_attention(q, cache["k"], cache["v"],
+                               jnp.full((B,), Sk - 1), window=0)
+        new_cache = cache
+    else:
+        out = chunked_attention(q, k, v, causal=causal and kv_ctx is None,
+                                window=window, causal_skip=causal_skip)
+    out = shard(out, "act_bthd")
+    return (out.reshape(B, S, H * hd) @ p["wo"]), new_cache
+
+
+def attn_cache_spec(cfg, batch: int, max_seq: int, local: bool, dtype):
+    window = cfg.sliding_window if local else 0
+    Smax = min(window, max_seq) if window else max_seq
+    shp = (batch, Smax, cfg.num_kv_heads, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype), "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+# ===========================================================================
+# MLA attention (deepseek-v2): low-rank kv compression, absorbed decode
+# ===========================================================================
+
+def mla_params(pf: ParamFactory, cfg):
+    D, H = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lkv, lq = cfg.kv_lora_rank, cfg.q_lora_rank
+    return {
+        "w_dq": pf.dense(D, lq),
+        "q_norm": pf.ones(lq),
+        "w_uq": pf.dense(lq, H * (dn + dr)),
+        "w_dkv": pf.dense(D, lkv),
+        "kv_norm": pf.ones(lkv),
+        "w_kr": pf.dense(D, dr),
+        "w_uk": pf.dense(lkv, H * dn),
+        "w_uv": pf.dense(lkv, H * dv),
+        "wo": pf.dense(H * dv, D, scale=1.0 / math.sqrt(H * dv)),
+    }
+
+
+def mla_fwd(p, x, cfg, *, positions, cache=None, pos=None, causal_skip=False):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lkv = cfg.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    cq = rms_headnorm(p["q_norm"], x @ p["w_dq"])
+    q = (cq @ p["w_uq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    c_kv = rms_headnorm(p["kv_norm"], x @ p["w_dkv"])          # (B,S,lkv)
+    k_rope = (x @ p["w_kr"]).reshape(B, S, 1, dr)
+
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    if cache is None:
+        # naive expanded form for train/prefill
+        k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, dn)
+        v = (c_kv @ p["w_uv"]).reshape(B, S, H, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], -1)
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        out = chunked_attention(qf, k, v, causal=True, scale=scale,
+                                causal_skip=causal_skip)
+        out = out.reshape(B, S, H * dv)
+        return out @ p["wo"], None
+
+    # ---- absorbed decode: score/value directly against the latent cache ----
+    assert S == 1
+    Smax = cache["c_kv"].shape[1]
+    bidx = jnp.arange(B)
+    c_cache = cache["c_kv"].at[bidx, pos].set(c_kv[:, 0].astype(cache["c_kv"].dtype))
+    r_cache = cache["k_rope"].at[bidx, pos].set(k_rope[:, 0, 0].astype(cache["k_rope"].dtype))
+    new_cache = {"c_kv": c_cache, "k_rope": r_cache}
+
+    w_uk = p["w_uk"].reshape(lkv, H, dn)
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(F32),
+                       w_uk.astype(F32))                        # (B,H,lkv)
+    s = (jnp.einsum("bhl,bsl->bhs", q_abs, c_cache.astype(F32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(F32),
+                      r_cache.astype(F32))) * scale
+    valid = jnp.arange(Smax)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", pattn, c_cache.astype(F32))  # (B,H,lkv)
+    w_uv = p["w_uv"].reshape(lkv, H, dv)
+    out = jnp.einsum("bhl,lhd->bhd", ctx, w_uv.astype(F32))
+    out = out.reshape(B, 1, H * dv).astype(x.dtype)
+    return out @ p["wo"], new_cache
+
+
+def mla_cache_spec(cfg, batch: int, max_seq: int, dtype):
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+# ===========================================================================
+# MLP + MoE
+# ===========================================================================
+
+def mlp_params(pf: ParamFactory, d_model: int, d_ff: int, gated: bool):
+    p = {"w_up": pf.dense(d_model, d_ff),
+         "w_down": pf.dense(d_ff, d_model, scale=1.0 / math.sqrt(d_ff))}
+    if gated:
+        p["w_gate"] = pf.dense(d_model, d_ff)
+    return p
+
+
+def _act(name: str):
+    return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+def mlp_fwd(p, x, act: str, gated: bool):
+    up = shard(x @ p["w_up"], "act_btf")
+    h = _act(act)(x @ p["w_gate"]) * up if gated else _act(act)(up)
+    return h @ p["w_down"]
+
+
+def moe_params(pf: ParamFactory, cfg):
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    p = {
+        "router": pf.dense(D, E, scale=0.02),
+        "w_gate": pf.dense(E, D, F),
+        "w_up": pf.dense(E, D, F),
+        "w_down": pf.dense(E, F, D, scale=1.0 / math.sqrt(F)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_params(pf, D, cfg.num_shared_experts * cfg.moe_d_ff, True)
+    return p
+
+
+def _moe_route(xt, router, E, K, aux_coef):
+    """Router: (T, D) -> (top_p, top_e (T,K), aux). Shared by both paths."""
+    T = xt.shape[0]
+    logits = (xt @ router).astype(F32)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = lax.top_k(probs, K)                    # (T,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    density = jnp.zeros((E,), F32).at[top_e.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(density * probs.mean(0)) * aux_coef
+    return top_p, top_e, aux
+
+
+def moe_fwd(p, x, cfg):
+    """Sort-based dropping MoE. Returns (out, aux_loss).
+
+    Two dispatch layouts:
+
+    * flat (moe_groups=0): one global sort over all T*K assignments,
+      capacity C = ceil(T*k*cf / E). Simple, but under GSPMD the global
+      argsort + scatter/gather across the (data x model) mesh all-gathers
+      the full token buffer — the dominant collective in the deepseek-v2
+      baseline (§Perf).
+    * grouped (moe_groups=G): tokens are split into G groups (= data
+      shards); routing, sort, capacity and dispatch are GROUP-LOCAL, the
+      dispatch buffer is (G, E, C_g, D) sharded (data, model) on (G, E),
+      expert matmuls contract locally against the E-sharded weights, and
+      the combine is a pre-weighted scatter-add back to (G, T_loc, D) —
+      lowering to one partial-sum all-reduce over the model axis instead
+      of full-buffer all-gathers.
+    """
+    orig_shape = x.shape
+    D, E, K = cfg.d_model, cfg.num_experts, cfg.moe_top_k
+    xt = x.reshape(-1, D)
+    T = xt.shape[0]
+    G = cfg.moe_groups
+    # grouped dispatch only pays off with enough tokens per group: decode
+    # steps (T = batch, ~8 tokens/group) regressed 2.1x under it (§Perf)
+    if G and T % G == 0 and T // G >= 64:
+        y, aux = _moe_grouped(p, xt, cfg, G)
+        if cfg.num_shared_experts:
+            y = y + mlp_fwd(p["shared"], xt, cfg.act, True)
+        return y.reshape(orig_shape), aux
+
+    top_p, top_e, aux = _moe_route(xt, p["router"], E, K,
+                                   cfg.router_aux_coef)
+    C = max(1, math.ceil(T * K * cfg.capacity_factor / E))
+    flat_e = top_e.reshape(-1)                            # (T*K,) token-major
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(T * K) - starts[sorted_e]
+    slot_sorted = jnp.where(rank_sorted < C, sorted_e * C + rank_sorted, E * C)
+
+    xs = xt[flat_t[order]]                                # (T*K, D)
+    buf = jnp.zeros((E * C, D), xt.dtype).at[slot_sorted].set(xs, mode="drop")
+    buf = shard(buf.reshape(E, C, D), "moe_ecd")
+
+    h = _act(cfg.act)(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = shard(h, "moe_ecf")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
+
+    y_sorted = jnp.take(out_buf, slot_sorted, axis=0, mode="fill", fill_value=0)
+    y_flat = jnp.zeros((T * K, D), xt.dtype).at[order].set(y_sorted)
+    y = (y_flat.reshape(T, K, D) * flat_w.reshape(T, K, 1).astype(xt.dtype)).sum(1)
+
+    if cfg.num_shared_experts:
+        y = y + mlp_fwd(p["shared"], xt, cfg.act, True)
+    return y.reshape(orig_shape), aux
+
+
+def _moe_grouped(p, xt, cfg, G: int):
+    """Group-local dispatch (see moe_fwd docstring)."""
+    D, E, K = cfg.d_model, cfg.num_experts, cfg.moe_top_k
+    T = xt.shape[0]
+    Tl = T // G
+    C = max(1, math.ceil(Tl * K * cfg.capacity_factor / E))
+
+    xg = shard(xt.reshape(G, Tl, D), "moe_gtd")
+
+    def dispatch(xt_g):
+        top_p, top_e, aux = _moe_route(xt_g, p["router"], E, K,
+                                       cfg.router_aux_coef)
+        flat_e = top_e.reshape(-1)
+        flat_w = top_p.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(Tl), K)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(Tl * K) - starts[sorted_e]
+        slot = jnp.where(rank < C, sorted_e * C + rank, E * C)
+        buf = jnp.zeros((E * C, D), xt_g.dtype).at[slot].set(
+            xt_g[flat_t[order]], mode="drop")
+        # slot -> (token, gate weight) maps for the scatter-add combine
+        tok_of = jnp.full((E * C,), Tl, jnp.int32).at[slot].set(
+            flat_t[order], mode="drop")
+        w_of = jnp.zeros((E * C,), F32).at[slot].set(
+            flat_w[order], mode="drop")
+        return buf.reshape(E, C, D), tok_of, w_of, aux
+
+    buf, tok_of, w_of, aux = jax.vmap(dispatch)(xg)       # (G,E,C,D)...
+    # NOTE (§Perf deepseek EXP-D, net-refuted): a model-REPLICATED buf
+    # ("moe_gbuf") removes the scatter's replicate+AR+slice fallback
+    # (coll -32%) but the 16x read amplification of the replicated buffer
+    # costs more than the AR saved (bytes +8%, bound 86.6s vs 80.0s).
+    buf = shard(buf, "moe_gecd")
+
+    h = _act(cfg.act)(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = shard(h, "moe_gecf")
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])    # (G,E,C,D)
+    out = shard(out, "moe_gecd")
+    # pre-weight rows by their token's gate weight, then scatter-add back:
+    # updates are E-sharded (model axis), destination is model-replicated
+    # -> partial local scatter + ONE all-reduce over the model axis.
+    out = out * w_of.reshape(G, E, C, 1).astype(out.dtype)
+
+    # combine accumulates in the compute dtype: at most top_k(<=8) summands
+    # per token, and keeping it bf16 halves the model-axis partial-sum
+    # all-reduce payload (§Perf deepseek EXP-C)
+    def combine(out_g, tok_g):
+        return jnp.zeros((Tl, D), out_g.dtype).at[tok_g].add(
+            out_g.reshape(E * C, D), mode="drop")
+
+    y = jax.vmap(combine)(out, tok_of.reshape(G, E * C))
+    y = shard(y.astype(xt.dtype), "moe_gtd")
+    return y.reshape(T, D), aux.mean()
+
+
+# ===========================================================================
+# Causal depthwise conv (mamba / mLSTM front conv)
+# ===========================================================================
+
+def causal_conv1d(x, w, b, state=None):
+    """x: (B,S,C), w: (ksize,C), b: (C,). state: (B,ksize-1,C) for decode.
+    Returns (y, new_state)."""
+    ksize = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], ksize - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(ksize - 1):, :] if ksize > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(ksize - 1):, :]
+    windows = jnp.stack([xp[:, i:i + x.shape[1], :] for i in range(ksize)], 2)
+    y = jnp.einsum("bskc,kc->bsc", windows, w.astype(x.dtype)) + b.astype(x.dtype)
+    return y, new_state
+
+
+# ===========================================================================
+# Chunked cross-entropy (never materializes (B,S,V) logits)
+# ===========================================================================
+
+def chunked_ce_loss(h, w_head, labels, *, chunk: int = 512, mask=None):
+    """h: (B,S,D); w_head: (D,V); labels: (B,S). Mean CE over unmasked tokens."""
+    B, S, D = h.shape
+    c = _pick_chunk(S, chunk)
+    n = S // c
+    hs = h.reshape(B, n, c, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, c).transpose(1, 0, 2)
+    ms = (mask.reshape(B, n, c).transpose(1, 0, 2) if mask is not None
+          else jnp.ones((n, B, c), F32))
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs
+        logits = (hc @ w_head).astype(F32)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, lc[..., None], -1)[..., 0]
+        tot = tot + ((logz - gold) * mc).sum()
+        return (tot, cnt + mc.sum()), ()
+
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), F32), jnp.zeros((), F32)),
+                             (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

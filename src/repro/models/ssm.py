@@ -1,0 +1,334 @@
+"""SSM-family mixers: Mamba (selective SSM) and xLSTM (sLSTM / mLSTM).
+
+TPU adaptation notes (DESIGN.md §2): the CUDA selective-scan kernel is
+re-thought as a *chunked* scan — `lax.scan` over sequence chunks with an
+`associative_scan` inside each chunk — which bounds the materialized
+(B, L, d_inner, d_state) tensor to one chunk and keeps the MXU busy on the
+within-chunk einsums. mLSTM uses the chunkwise-parallel stabilized form
+(quadratic inside a chunk, recurrent matrix-memory across chunks). sLSTM is
+inherently sequential (recurrent gate mixing) and runs as a plain scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (F32, ParamFactory, causal_conv1d, _act,
+                                 _pick_chunk)
+
+NEG = -1e30
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+def mamba_dims(cfg):
+    di = cfg.mamba_expand * cfg.d_model
+    dtr = cfg.mamba_dt_rank or max(1, math.ceil(cfg.d_model / 16))
+    return di, dtr, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def mamba_params(pf: ParamFactory, cfg):
+    D = cfg.d_model
+    di, dtr, ds, dc = mamba_dims(cfg)
+    return {
+        "in_proj": pf.dense(D, 2 * di),
+        "conv_w": pf.dense(dc, di, scale=1.0 / math.sqrt(dc)),
+        "conv_b": pf.zeros(di),
+        "x_proj": pf.dense(di, dtr + 2 * ds),
+        "dt_proj": pf.dense(dtr, di),
+        "dt_bias": pf.const(math.log(math.e - 1), di),  # softplus(bias)=1
+        "A_log": pf.const(math.log(1.0), di, ds),
+        "Dskip": pf.ones(di),
+        "out_proj": pf.dense(di, D, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _ssm_scan_chunk(decay, drive, h0):
+    """decay/drive: (B, L, di, ds); h0: (B, di, ds). Returns (h_seq, h_last)."""
+    def combine(a, b):
+        return (b[0] * a[0], b[0] * a[1] + b[1])
+
+    a_pref, b_pref = lax.associative_scan(combine, (decay, drive), axis=1)
+    h_seq = a_pref * h0[:, None] + b_pref
+    return h_seq, h_seq[:, -1]
+
+
+def mamba_fwd(p, x, cfg, *, cache=None, chunk: int = 128):
+    """x: (B,S,D). cache: {"conv": (B,dc-1,di), "h": (B,di,ds)} for decode."""
+    B, S, D = x.shape
+    di, dtr, ds, dc = mamba_dims(cfg)
+
+    xz = x @ p["in_proj"]
+    xt, z = jnp.split(xz, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xt, new_conv = causal_conv1d(xt, p["conv_w"], p["conv_b"], conv_state)
+    xt = jax.nn.silu(xt)
+
+    bcd = xt @ p["x_proj"]
+    dt_in, B_, C_ = jnp.split(bcd, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_proj"]).astype(F32) +
+                         p["dt_bias"].astype(F32))            # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(F32))                       # (di,ds)
+
+    decay_full = jnp.exp(dt[..., None] * A)                    # (B,S,di,ds)
+    drive_full = (dt * xt.astype(F32))[..., None] * B_.astype(F32)[:, :, None, :]
+
+    if cache is not None:
+        assert S == 1
+        h = decay_full[:, 0] * cache["h"].astype(F32) + drive_full[:, 0]
+        y = jnp.einsum("bds,bs->bd", h, C_[:, 0].astype(F32))[:, None, :]
+        new_cache = {"conv": new_conv, "h": h.astype(cache["h"].dtype)}
+    else:
+        c = _pick_chunk(S, chunk)
+        n = S // c
+        dec = decay_full.reshape(B, n, c, di, ds).transpose(1, 0, 2, 3, 4)
+        drv = drive_full.reshape(B, n, c, di, ds).transpose(1, 0, 2, 3, 4)
+        Cc = C_.reshape(B, n, c, ds).transpose(1, 0, 2, 3).astype(F32)
+
+        def body(h0, xs):
+            dch, drh, cch = xs
+            h_seq, h_last = _ssm_scan_chunk(dch, drh, h0)
+            yc = jnp.einsum("blds,bls->bld", h_seq, cch)
+            return h_last, yc
+
+        h0 = jnp.zeros((B, di, ds), F32)
+        h_last, ys = lax.scan(body, h0, (dec, drv, Cc))        # ys: (n,B,c,di)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+        new_cache = None
+
+    y = (y + p["Dskip"].astype(F32) * xt.astype(F32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if cache is not None:
+        return out, new_cache
+    return out, None
+
+
+def mamba_cache_spec(cfg, batch: int, dtype):
+    di, dtr, ds, dc = mamba_dims(cfg)
+    return {"conv": jax.ShapeDtypeStruct((batch, dc - 1, di), dtype),
+            "h": jax.ShapeDtypeStruct((batch, di, ds), F32)}
+
+
+# ===========================================================================
+# mLSTM (chunkwise-parallel, stabilized exponential gating)
+# ===========================================================================
+
+def mlstm_dims(cfg):
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    return di, H, di // H
+
+
+def mlstm_params(pf: ParamFactory, cfg):
+    D = cfg.d_model
+    di, H, dh = mlstm_dims(cfg)
+    return {
+        "w_up": pf.dense(D, 2 * di),
+        "conv_w": pf.dense(cfg.xlstm_conv, di, scale=0.5),
+        "conv_b": pf.zeros(di),
+        "w_q": pf.dense(di, di),
+        "w_k": pf.dense(di, di),
+        "w_v": pf.dense(di, di),
+        "w_i": pf.dense(di, H, scale=0.02),
+        "b_i": pf.zeros(H),
+        "w_f": pf.dense(di, H, scale=0.02),
+        "b_f": pf.const(3.0, H),       # forget-gate bias: start remembering
+        "gn_scale": pf.ones(di),
+        "skip": pf.ones(di),
+        "w_down": pf.dense(di, D, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _mlstm_chunk(q, k, v, logi, logf, C0, n0, m0):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,L,dh); logi,logf: (B,H,L); carry C0 (B,H,dh,dh),
+    n0 (B,H,dh), m0 (B,H). Returns (h, C1, n1, m1).
+    """
+    B, H, L, dh = q.shape
+    Fcum = jnp.cumsum(logf, axis=-1)                          # (B,H,L)
+    # pairwise log weights a[t,j] = Fcum_t - Fcum_j + logi_j  (j <= t)
+    a = Fcum[..., :, None] - Fcum[..., None, :] + logi[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    a = jnp.where(tri, a, NEG)
+    b = Fcum + m0[..., None]                                  # (B,H,L) carry weight
+    m_t = jnp.maximum(a.max(-1), b)                           # (B,H,L)
+
+    dmat = jnp.exp(a - m_t[..., None])                        # (B,H,L,L)
+    carry_w = jnp.exp(b - m_t)                                # (B,H,L)
+
+    scale = 1.0 / math.sqrt(dh)
+    qk = jnp.einsum("bhld,bhjd->bhlj", q, k) * scale          # (B,H,L,L)
+    num = jnp.einsum("bhlj,bhjd->bhld", qk * dmat, v) \
+        + carry_w[..., None] * jnp.einsum("bhld,bhde->bhle", q * scale, C0)
+    # denominator: n_t . q_t
+    nq = jnp.einsum("bhlj,bhjd,bhld->bhl", dmat, k, q) * scale \
+        + carry_w * jnp.einsum("bhd,bhld->bhl", n0, q) * scale
+    h = num / jnp.maximum(jnp.abs(nq), jnp.exp(-m_t))[..., None]
+
+    # end-of-chunk carries
+    m1 = m_t[..., -1]
+    wj = jnp.exp(Fcum[..., -1:] - Fcum + logi - m1[..., None])  # (B,H,L)
+    C1 = jnp.exp(Fcum[..., -1] + m0 - m1)[..., None, None] * C0 \
+        + jnp.einsum("bhl,bhld,bhle->bhde", wj, k, v)
+    n1 = jnp.exp(Fcum[..., -1] + m0 - m1)[..., None] * n0 \
+        + jnp.einsum("bhl,bhld->bhd", wj, k)
+    return h, C1, n1, m1
+
+
+def mlstm_fwd(p, x, cfg, *, cache=None, chunk: int = 128):
+    B, S, D = x.shape
+    di, H, dh = mlstm_dims(cfg)
+
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = causal_conv1d(xm, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    def heads(t):  # (B,S,di) -> (B,H,S,dh) fp32
+        return t.reshape(B, S, H, dh).transpose(0, 2, 1, 3).astype(F32)
+
+    q, k, v = heads(xc @ p["w_q"]), heads(xc @ p["w_k"]), heads(xm @ p["w_v"])
+    logi = (xc @ p["w_i"] + p["b_i"]).astype(F32).transpose(0, 2, 1)   # (B,H,S)
+    logf = jax.nn.log_sigmoid((xc @ p["w_f"] + p["b_f"]).astype(F32)).transpose(0, 2, 1)
+
+    if cache is not None:
+        assert S == 1
+        C0, n0, m0 = cache["C"].astype(F32), cache["n"].astype(F32), cache["m"]
+        m1 = jnp.maximum(logf[..., 0] + m0, logi[..., 0])
+        fw = jnp.exp(logf[..., 0] + m0 - m1)
+        iw = jnp.exp(logi[..., 0] - m1)
+        C1 = fw[..., None, None] * C0 + iw[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", k[:, :, 0], v[:, :, 0])
+        n1 = fw[..., None] * n0 + iw[..., None] * k[:, :, 0]
+        scale = 1.0 / math.sqrt(dh)
+        num = jnp.einsum("bhd,bhde->bhe", q[:, :, 0] * scale, C1)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n1, q[:, :, 0] * scale))
+        h = (num / jnp.maximum(den, jnp.exp(-m1))[..., None])[:, :, None, :]
+        new_cache = {"conv": new_conv, "C": C1.astype(cache["C"].dtype),
+                     "n": n1.astype(cache["n"].dtype), "m": m1}
+    else:
+        c = _pick_chunk(S, chunk)
+        n_chunks = S // c
+
+        def split(t):  # (B,H,S,dh) -> (n,B,H,c,dh)
+            return t.reshape(B, H, n_chunks, c, dh).transpose(2, 0, 1, 3, 4)
+
+        def split3(t):  # (B,H,S) -> (n,B,H,c)
+            return t.reshape(B, H, n_chunks, c).transpose(2, 0, 1, 3)
+
+        def body(carry, xs):
+            C0, n0, m0 = carry
+            qc, kc, vc, lic, lfc = xs
+            h, C1, n1, m1 = _mlstm_chunk(qc, kc, vc, lic, lfc, C0, n0, m0)
+            return (C1, n1, m1), h
+
+        init = (jnp.zeros((B, H, dh, dh), F32), jnp.zeros((B, H, dh), F32),
+                jnp.full((B, H), 0.0, F32))
+        _, hs = lax.scan(body, init,
+                         (split(q), split(k), split(v), split3(logi), split3(logf)))
+        h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+        new_cache = None
+
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, di)
+    # per-head group norm
+    hf = h.reshape(B, S, H, dh)
+    hf = hf * lax.rsqrt((hf ** 2).mean(-1, keepdims=True) + 1e-5)
+    h = hf.reshape(B, S, di) * p["gn_scale"].astype(F32)
+    h = h.astype(x.dtype) + p["skip"].astype(x.dtype) * xc
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    return out, new_cache
+
+
+def mlstm_cache_spec(cfg, batch: int, dtype):
+    di, H, dh = mlstm_dims(cfg)
+    return {"conv": jax.ShapeDtypeStruct((batch, cfg.xlstm_conv - 1, di), dtype),
+            "C": jax.ShapeDtypeStruct((batch, H, dh, dh), F32),
+            "n": jax.ShapeDtypeStruct((batch, H, dh), F32),
+            "m": jax.ShapeDtypeStruct((batch, H), F32)}
+
+
+# ===========================================================================
+# sLSTM (sequential scan, exponential gating with stabilizer)
+# ===========================================================================
+
+def slstm_params(pf: ParamFactory, cfg):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    ff = int(round(4 * D / 3 / 8)) * 8
+    return {
+        "w_x": pf.dense(D, 4 * D),
+        "b_x": pf.zeros(4 * D),
+        "r": pf.dense(H, dh, 4, dh, scale=1.0 / math.sqrt(dh)),
+        "gn_scale": pf.ones(D),
+        "mlp_up": pf.dense(D, ff),
+        "mlp_gate": pf.dense(D, ff),
+        "mlp_down": pf.dense(ff, D, scale=1.0 / math.sqrt(ff)),
+    }
+
+
+def _slstm_step(p, gx_t, state, H, dh):
+    """gx_t: (B,4D) precomputed input gates; state: (c,n,m,h) each (B,D)."""
+    c0, n0, m0, h0 = state
+    B = gx_t.shape[0]
+    D = H * dh
+    rec = jnp.einsum("bhd,hdge->bhge", h0.reshape(B, H, dh).astype(F32),
+                     p["r"].astype(F32))                       # (B,H,4,dh)
+    g = gx_t.astype(F32).reshape(B, 4, H, dh) + rec.transpose(0, 2, 1, 3)
+    zt, it, ft, ot = g[:, 0], g[:, 1], g[:, 2], g[:, 3]        # (B,H,dh)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    lf = jax.nn.log_sigmoid(ft)
+    m1 = jnp.maximum(lf + m0.reshape(B, H, dh), it)
+    fw = jnp.exp(lf + m0.reshape(B, H, dh) - m1)
+    iw = jnp.exp(it - m1)
+    c1 = fw * c0.reshape(B, H, dh) + iw * zt
+    n1 = fw * n0.reshape(B, H, dh) + iw
+    h1 = ot * c1 / jnp.maximum(n1, 1e-6)
+    flat = lambda t: t.reshape(B, D)
+    return (flat(c1), flat(n1), flat(m1), flat(h1))
+
+
+def slstm_fwd(p, x, cfg, *, cache=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    gx = x @ p["w_x"] + p["b_x"]                               # (B,S,4D)
+
+    if cache is not None:
+        assert S == 1
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+        state = _slstm_step(p, gx[:, 0], state, H, dh)
+        h = state[3][:, None, :]
+        new_cache = {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    else:
+        def body(state, gx_t):
+            s = _slstm_step(p, gx_t, state, H, dh)
+            return s, s[3]
+
+        init = tuple(jnp.zeros((B, D), F32) for _ in range(4))
+        _, hs = lax.scan(body, init, gx.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2)                              # (B,S,D)
+        new_cache = None
+
+    hf = h.reshape(B, -1, H, dh)
+    hf = hf * lax.rsqrt((hf ** 2).mean(-1, keepdims=True) + 1e-5)
+    h = (hf.reshape(B, -1, D) * p["gn_scale"].astype(F32)).astype(x.dtype)
+    out = (_act(cfg.act)(h @ p["mlp_gate"]) * (h @ p["mlp_up"])) @ p["mlp_down"]
+    return out, new_cache
+
+
+def slstm_cache_spec(cfg, batch: int, dtype):
+    D = cfg.d_model
+    sd = jax.ShapeDtypeStruct
+    return {"c": sd((batch, D), F32), "n": sd((batch, D), F32),
+            "m": sd((batch, D), F32), "h": sd((batch, D), F32)}

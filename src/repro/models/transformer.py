@@ -1,0 +1,295 @@
+"""Decoder-only / hybrid LM assembly from an ArchConfig.
+
+Layers are organized as ``prefix + pattern * num_periods + suffix``. The
+periods are executed with a single ``lax.scan`` over stacked parameters
+(one scan step = one period, its pattern unrolled inside the body) — this
+keeps the lowered HLO compact even for 60–88 layer models, which matters on
+the single-core CPU compile host and on real TPU compile times alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.ctx import shard
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.layers import ParamFactory
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Per-layer params by kind
+# ---------------------------------------------------------------------------
+
+def _layer_params(pf: ParamFactory, cfg, kind):
+    mixer, ffn = kind
+    p: dict[str, Any] = {"norm1": L.norm_params(pf, cfg.d_model, cfg.norm)}
+    if mixer in ("attn", "attn_local", "attn_global"):
+        p["attn"] = L.mla_params(pf, cfg) if cfg.attn_type == "mla" \
+            else L.attn_params(pf, cfg)
+    elif mixer == "mamba":
+        p["mamba"] = S.mamba_params(pf, cfg)
+    elif mixer == "mlstm":
+        p["mlstm"] = S.mlstm_params(pf, cfg)
+    elif mixer == "slstm":
+        p["slstm"] = S.slstm_params(pf, cfg)
+    else:
+        raise ValueError(mixer)
+
+    if ffn != "none":
+        p["norm2"] = L.norm_params(pf, cfg.d_model, cfg.norm)
+        if ffn == "mlp":
+            p["mlp"] = L.mlp_params(pf, cfg.d_model, cfg.d_ff, cfg.mlp_gated)
+        elif ffn == "moe":
+            p["moe"] = L.moe_params(pf, cfg)
+        else:
+            raise ValueError(ffn)
+    if cfg.sandwich_norm:
+        p["post_norm1"] = L.norm_params(pf, cfg.d_model, cfg.norm)
+        if ffn != "none":
+            p["post_norm2"] = L.norm_params(pf, cfg.d_model, cfg.norm)
+    return p
+
+
+def _layer_cache_spec(cfg, kind, batch: int, max_seq: int, dtype):
+    mixer, _ = kind
+    if mixer in ("attn", "attn_local", "attn_global"):
+        if cfg.attn_type == "mla":
+            return L.mla_cache_spec(cfg, batch, max_seq, dtype)
+        return L.attn_cache_spec(cfg, batch, max_seq, mixer == "attn_local", dtype)
+    if mixer == "mamba":
+        return S.mamba_cache_spec(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return S.mlstm_cache_spec(cfg, batch, dtype)
+    if mixer == "slstm":
+        return S.slstm_cache_spec(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def _block_fwd(p, x, aux, cfg, kind, *, positions, cache, pos, causal_skip,
+               causal=True):
+    mixer, ffn = kind
+    h = L.apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+    new_cache = None
+    if mixer in ("attn", "attn_local", "attn_global"):
+        local = mixer == "attn_local"
+        if cfg.attn_type == "mla":
+            h, new_cache = L.mla_fwd(p["attn"], h, cfg, positions=positions,
+                                     cache=cache, pos=pos,
+                                     causal_skip=causal_skip)
+        else:
+            h, new_cache = L.attn_fwd(p["attn"], h, cfg, local=local,
+                                      positions=positions, cache=cache,
+                                      pos=pos, causal=causal,
+                                      causal_skip=causal_skip)
+    elif mixer == "mamba":
+        h, new_cache = S.mamba_fwd(p["mamba"], h, cfg, cache=cache)
+    elif mixer == "mlstm":
+        h, new_cache = S.mlstm_fwd(p["mlstm"], h, cfg, cache=cache)
+    elif mixer == "slstm":
+        h, new_cache = S.slstm_fwd(p["slstm"], h, cfg, cache=cache)
+    if cfg.sandwich_norm:
+        h = L.apply_norm(p["post_norm1"], h, cfg.norm, cfg.norm_eps)
+    x = x + h
+    x = shard(x, "act_btd")
+
+    if ffn != "none":
+        h = L.apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        if ffn == "mlp":
+            h = L.mlp_fwd(p["mlp"], h, cfg.act, cfg.mlp_gated)
+        else:
+            h, moe_aux = L.moe_fwd(p["moe"], h, cfg)
+            aux = aux + moe_aux
+        if cfg.sandwich_norm:
+            h = L.apply_norm(p["post_norm2"], h, cfg.norm, cfg.norm_eps)
+        x = x + h
+        x = shard(x, "act_btd")
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack params / cache
+# ---------------------------------------------------------------------------
+
+def build_stack_params(pf: ParamFactory, cfg):
+    pattern = cfg.resolved_pattern
+    n_per = cfg.resolved_num_periods
+
+    def period_params():
+        return {f"l{i}": _layer_params(pf, cfg, k) for i, k in enumerate(pattern)}
+
+    if pf.key is None:
+        one = period_params()
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_per,) + s.shape, s.dtype), one)
+    else:
+        reps = [period_params() for _ in range(n_per)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+    return {
+        "prefix": [_layer_params(pf, cfg, k) for k in cfg.prefix_pattern],
+        "periods": stacked,
+        "suffix": [_layer_params(pf, cfg, k) for k in cfg.suffix_pattern],
+    }
+
+
+def build_stack_cache_spec(cfg, batch: int, max_seq: int, dtype):
+    pattern = cfg.resolved_pattern
+    n_per = cfg.resolved_num_periods
+    one = {f"l{i}": _layer_cache_spec(cfg, k, batch, max_seq, dtype)
+           for i, k in enumerate(pattern)}
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_per,) + s.shape, s.dtype), one)
+    return {
+        "prefix": [_layer_cache_spec(cfg, k, batch, max_seq, dtype)
+                   for k in cfg.prefix_pattern],
+        "periods": stacked,
+        "suffix": [_layer_cache_spec(cfg, k, batch, max_seq, dtype)
+                   for k in cfg.suffix_pattern],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Stack forward (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def stack_fwd(params, x, cfg, *, positions, cache=None, pos=None,
+              remat: bool = True, causal_skip: bool = False, causal: bool = True):
+    """Returns (x, aux, new_cache)."""
+    pattern = cfg.resolved_pattern
+    aux = jnp.zeros((), F32)
+    decode = cache is not None
+
+    new_prefix = []
+    for p, kind, c in zip(params["prefix"], cfg.prefix_pattern,
+                          cache["prefix"] if decode else [None] * len(cfg.prefix_pattern)):
+        x, aux, nc = _block_fwd(p, x, aux, cfg, kind, positions=positions,
+                                cache=c, pos=pos, causal_skip=causal_skip,
+                                causal=causal)
+        new_prefix.append(nc)
+
+    def period_body(carry, xs):
+        x, aux = carry
+        pparams = xs[0]
+        pcache = xs[1] if decode else None
+        new_c = {}
+        for i, kind in enumerate(pattern):
+            c = pcache[f"l{i}"] if decode else None
+            x, aux, nc = _block_fwd(pparams[f"l{i}"], x, aux, cfg, kind,
+                                    positions=positions, cache=c, pos=pos,
+                                    causal_skip=causal_skip, causal=causal)
+            new_c[f"l{i}"] = nc if decode else 0.0
+        return (x, aux), (new_c if decode else 0.0)
+
+    body = jax.checkpoint(period_body) if (remat and not decode) else period_body
+    xs = (params["periods"], cache["periods"]) if decode else (params["periods"],)
+    (x, aux), period_out = lax.scan(body, (x, aux), xs)
+
+    new_suffix = []
+    for p, kind, c in zip(params["suffix"], cfg.suffix_pattern,
+                          cache["suffix"] if decode else [None] * len(cfg.suffix_pattern)):
+        x, aux, nc = _block_fwd(p, x, aux, cfg, kind, positions=positions,
+                                cache=c, pos=pos, causal_skip=causal_skip,
+                                causal=causal)
+        new_suffix.append(nc)
+
+    new_cache = ({"prefix": new_prefix, "periods": period_out,
+                  "suffix": new_suffix} if decode else None)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+def lm_params(cfg, key: Optional[jax.Array]):
+    pf = ParamFactory(key, cfg.dtype)
+    p: dict[str, Any] = {
+        "embed": pf.dense(cfg.vocab_size, cfg.d_model, scale=0.02),
+        "final_norm": L.norm_params(pf, cfg.d_model, cfg.norm),
+        "stack": build_stack_params(pf, cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = pf.dense(cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def _embed(params, tokens, cfg, patch_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        h = jnp.concatenate([patch_embeds.astype(h.dtype), h[:, P:]], axis=1)
+    return h
+
+
+def _head_weight(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def lm_loss(params, batch, cfg, *, remat: bool = True, causal_skip: bool = False):
+    """Next-token CE over the batch. batch: tokens/labels (+ extras).
+
+    ``batch["weights"]`` (B,), when present, weights each example — the
+    Skip-One participation mask at the datacenter layer (a skipped
+    client's shard contributes zero and the mean renormalizes)."""
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    if cfg.rope_variant == "mrope":
+        positions = batch["position_ids"]                     # (3,B,S)
+    else:
+        positions = jnp.arange(Sq)
+    h = _embed(params, tokens, cfg, batch.get("patch_embeds"))
+    h = shard(h, "act_btd")
+    h, aux, _ = stack_fwd(params["stack"], h, cfg, positions=positions,
+                          remat=remat, causal_skip=causal_skip)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    mask = None
+    if "weights" in batch:
+        mask = jnp.broadcast_to(batch["weights"][:, None].astype(F32), (B, Sq))
+    loss = L.chunked_ce_loss(h, _head_weight(params, cfg), batch["labels"],
+                             mask=mask)
+    return loss + aux
+
+
+def lm_prefill(params, batch, cfg, *, causal_skip: bool = False):
+    """Forward over the prompt; returns last-position logits."""
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    positions = batch["position_ids"] if cfg.rope_variant == "mrope" \
+        else jnp.arange(Sq)
+    h = _embed(params, tokens, cfg, batch.get("patch_embeds"))
+    h = shard(h, "act_btd")
+    h, _, _ = stack_fwd(params["stack"], h, cfg, positions=positions,
+                        remat=False, causal_skip=causal_skip)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    logits = h[:, -1, :] @ _head_weight(params, cfg)
+    return logits
+
+
+def lm_decode_step(params, batch, cfg):
+    """One decode step. batch: token (B,1), pos (B,), cache. Returns
+    (logits, new_cache)."""
+    token, pos, cache = batch["token"], batch["pos"], batch["cache"]
+    if cfg.rope_variant == "mrope":
+        positions = batch["position_ids"]                     # (3,B,1)
+    else:
+        positions = pos[:, None]                              # (B,1)
+    h = _embed(params, token, cfg)
+    h, _, new_cache = stack_fwd(params["stack"], h, cfg, positions=positions,
+                                cache=cache, pos=pos, remat=False)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    logits = h[:, -1, :] @ _head_weight(params, cfg)
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, sgd_init,
+                                    sgd_update)  # noqa: F401
+from repro.optim.compression import (int8_compress, int8_decompress,
+                                     topk_compress, topk_decompress)  # noqa: F401

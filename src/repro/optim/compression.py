@@ -1,0 +1,88 @@
+"""Gradient / payload compression for LISL exchanges.
+
+Two schemes, both with exact byte accounting for the energy model:
+
+* ``int8`` — symmetric per-chunk quantization (FedOrbit-style reduced
+  precision; also the beyond-paper compressed cross-aggregation payload).
+  4x smaller than fp32, 2x smaller than bf16.
+* ``topk`` — magnitude top-k sparsification with index+value encoding
+  (classic distributed-optimization trick; used in the beyond-paper
+  experiments for the inter-cluster hop).
+
+The Pallas kernel in kernels/quant fuses the quantize path; this module is
+the reference implementation plus the pytree plumbing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+CHUNK = 1024
+
+
+def _pad_to(x, mult):
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, (0, pad)), pad
+
+
+def int8_compress(tree: Any, chunk: int = CHUNK):
+    """Leaf -> {"q": int8 (n_chunks, chunk), "scale": f32 (n_chunks,),
+    "shape", "pad"}. Bytes = n + 4 * n_chunks."""
+    def comp(x):
+        flat = x.reshape(-1).astype(F32)
+        flat, pad = _pad_to(flat, chunk)
+        blocks = flat.reshape(-1, chunk)
+        scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(F32),
+                "shape": x.shape, "pad": pad}
+    return jax.tree.map(comp, tree)
+
+
+def int8_decompress(ctree: Any, dtype=F32):
+    def dec(c):
+        flat = (c["q"].astype(F32) * c["scale"][:, None]).reshape(-1)
+        n = math.prod(c["shape"])
+        return flat[:n].reshape(c["shape"]).astype(dtype)
+    return jax.tree.map(dec, ctree,
+                        is_leaf=lambda t: isinstance(t, dict) and "q" in t)
+
+
+def int8_bytes(tree: Any, chunk: int = CHUNK) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = leaf.size
+        total += n + 4 * math.ceil(n / chunk)
+    return total
+
+
+def topk_compress(tree: Any, frac: float = 0.05):
+    """Keep the top ``frac`` entries by magnitude per leaf."""
+    def comp(x):
+        flat = x.reshape(-1).astype(F32)
+        k = max(1, int(flat.size * frac))
+        val, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return {"idx": idx.astype(jnp.int32), "val": flat[idx],
+                "shape": x.shape, "size": flat.size}
+    return jax.tree.map(comp, tree)
+
+
+def topk_decompress(ctree: Any, dtype=F32):
+    def dec(c):
+        flat = jnp.zeros((c["size"],), F32).at[c["idx"]].set(c["val"])
+        return flat.reshape(c["shape"]).astype(dtype)
+    return jax.tree.map(dec, ctree,
+                        is_leaf=lambda t: isinstance(t, dict) and "idx" in t)
+
+
+def topk_bytes(tree: Any, frac: float = 0.05) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        k = max(1, int(leaf.size * frac))
+        total += 8 * k          # 4B index + 4B value
+    return total

@@ -1,0 +1,80 @@
+"""Minimal functional optimizers (no optax in the container).
+
+All operate on parameter pytrees; state is a pytree of the same structure.
+Used by the FL clients (SGD-momentum, paper-style local training) and the
+datacenter train driver (AdamW).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum
+# ---------------------------------------------------------------------------
+
+def sgd_init(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=F32), params)
+
+
+def sgd_update(params, grads, state, *, lr: float, momentum: float = 0.9,
+               weight_decay: float = 0.0):
+    def upd(p, g, m):
+        gf = g.astype(F32)
+        if weight_decay:
+            gf = gf + weight_decay * p.astype(F32)
+        m2 = momentum * m + gf
+        return (p.astype(F32) - lr * m2).astype(p.dtype), m2
+
+    flat = jax.tree.map(upd, params, grads, state)
+    new_p = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, new_m
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamState:
+    z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, dtype=F32), params)
+    return AdamState(z(), z(), jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state: AdamState, *, lr: float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.01):
+    count = state.count + 1
+    cf = count.astype(F32)
+
+    def mom(m, g):
+        return b1 * m + (1 - b1) * g.astype(F32)
+
+    def var(v, g):
+        gf = g.astype(F32)
+        return b2 * v + (1 - b2) * gf * gf
+
+    mu = jax.tree.map(mom, state.mu, grads)
+    nu = jax.tree.map(var, state.nu, grads)
+    bc1 = 1 - b1 ** cf
+    bc2 = 1 - b2 ** cf
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        step = step + weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * step).astype(p.dtype)
+
+    return jax.tree.map(upd, params, mu, nu), AdamState(mu, nu, count)

@@ -1,0 +1,129 @@
+"""Orbital substrate tests: Walker-Delta geometry, LISL graph, GS windows."""
+import numpy as np
+import pytest
+
+from repro.constellation.gs import GroundStation, WindowTable
+from repro.constellation.lisl import (LISLConfig, earth_blocked, lisl_graph,
+                                      distance_matrix)
+from repro.constellation.sim import ConstellationEnv
+from repro.constellation.walker import R_EARTH, WalkerDelta
+
+
+class TestWalker:
+    def test_geometry_constants(self):
+        w = WalkerDelta()
+        assert w.n_sats == 720
+        assert 90 * 60 < w.period_s < 100 * 60      # LEO ~96 min
+        pos = w.positions(0.0)
+        assert pos.shape == (720, 3)
+        r = np.linalg.norm(pos, axis=-1)
+        np.testing.assert_allclose(r, w.radius_m, rtol=1e-9)
+
+    def test_orbit_closes_after_period(self):
+        w = WalkerDelta()
+        p0 = w.positions(0.0)
+        p1 = w.positions(w.period_s)
+        np.testing.assert_allclose(p0, p1, atol=1.0)   # meters
+
+    def test_inclination(self):
+        """Max |z| = R sin(incl)."""
+        w = WalkerDelta()
+        ts = np.linspace(0, w.period_s, 50)
+        z = np.abs(w.positions(ts)[..., 2]).max()
+        expect = w.radius_m * np.sin(np.deg2rad(70.0))
+        assert abs(z - expect) / expect < 0.01
+
+    def test_in_plane_spacing(self):
+        """20 sats/plane -> 18 deg spacing -> chord 2R sin(9 deg)."""
+        w = WalkerDelta()
+        pos = w.positions(0.0)
+        d01 = np.linalg.norm(pos[0] - pos[1])
+        expect = 2 * w.radius_m * np.sin(np.pi / 20)
+        assert abs(d01 - expect) / expect < 1e-6
+
+
+class TestLISL:
+    def test_graph_symmetric_and_fanout_capped(self):
+        w = WalkerDelta()
+        cfg = LISLConfig(range_m=1_500_000, fanout_default=4)
+        adj = lisl_graph(w, 0.0, cfg)
+        assert (adj == adj.T).all()
+        assert not adj.diagonal().any()
+        assert adj.sum(1).max() <= 4
+
+    def test_range_monotone(self):
+        """Longer LISL range -> more links (paper's 4 range settings)."""
+        w = WalkerDelta()
+        counts = []
+        for rng_km in (659, 1319, 1500, 1700):
+            cfg = LISLConfig(range_m=rng_km * 1e3, fanout_default=10)
+            counts.append(lisl_graph(w, 0.0, cfg).sum())
+        assert counts == sorted(counts)
+        assert counts[-1] > counts[0]
+
+    def test_earth_blockage(self):
+        """Antipodal satellites are blocked."""
+        p1 = np.array([[7e6, 0.0, 0.0]])
+        p2 = np.array([[-7e6, 0.0, 0.0]])
+        assert earth_blocked(p1, p2)[0]
+        p3 = np.array([[7e6, 1e5, 0.0]])
+        assert not earth_blocked(p1, p3)[0]
+
+
+class TestGS:
+    def test_visibility_periodic(self):
+        w = WalkerDelta()
+        gs = GroundStation()
+        ts = np.arange(0, 86_400, 60.0)
+        pos = w.positions(ts)[:, 0, :]
+        vis = gs.visible(pos, ts)
+        frac = vis.mean()
+        # a LEO sat sees one GS site a few % of the day
+        assert 0.0 < frac < 0.2
+
+    def test_window_table_matches_scan(self):
+        w = WalkerDelta()
+        gs = GroundStation()
+        table = WindowTable(gs, w, step_s=60.0, horizon_s=12 * 3600)
+        for sat in (0, 100, 371):
+            wait_t, dist_t = table.next_window(sat, 0.0)
+            wait_s, dist_s = gs.next_window(w, sat, 0.0, step_s=60.0,
+                                            horizon_s=12 * 3600)
+            assert abs(wait_t - wait_s) <= 60.0
+            if np.isfinite(dist_s):
+                assert abs(dist_t - dist_s) / dist_s < 0.2
+
+    def test_slant_range_reasonable(self):
+        """Contact slant range between altitude and horizon distance."""
+        w = WalkerDelta()
+        env = ConstellationEnv(n_clients=5, seed=1)
+        wait, dist = env.gs_window_wait(0, 0.0)
+        assert 570_000 <= dist < 3_000_000
+
+
+class TestEnv:
+    def test_reachability_time_varying(self):
+        env = ConstellationEnv(n_clients=20, seed=0)
+        a0 = env.client_adjacency(0.0)
+        a1 = env.client_adjacency(1800.0)
+        assert (a0 != a1).any()            # E_LISL(t) moves
+
+    def test_master_reach_submatrix(self):
+        env = ConstellationEnv(n_clients=20, seed=0)
+        masters = np.array([0, 5, 10, 15])
+        r = env.master_reach(masters, 0.0)
+        full = env.client_adjacency(0.0)
+        np.testing.assert_array_equal(r, full[np.ix_(masters, masters)])
+
+    def test_lisl_distance_consistent_with_reach(self):
+        env = ConstellationEnv(n_clients=15, seed=2)
+        adj = env.client_adjacency(0.0)
+        for i in range(5):
+            for j in range(5):
+                d = env.lisl_distance(i, j, 0.0)
+                if i == j:
+                    assert d == 0.0
+                elif adj[i, j]:
+                    assert np.isfinite(d) and d > 0
+                else:
+                    assert np.isinf(d)

@@ -1,0 +1,329 @@
+"""Unit tests for the paper's core modules (StarMask / Skip-One /
+cross-aggregation / energy model)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crossagg, skipone
+from repro.core.energy import (CPU, GPU, EnergyLedger, HardwareProfile,
+                               LinkParams, e_gs, e_lisl, e_train, t_comp,
+                               t_lisl, t_train)
+from repro.core.starmask import (Instance, PartialPartition, StarMaskParams,
+                                 cluster, effective_capacity, greedy_fallback,
+                                 k_min, reward)
+
+
+def make_instance(n=20, seed=0, fan_lo=3, fan_hi=8):
+    rng = np.random.default_rng(seed)
+    return Instance(
+        share=rng.dirichlet(np.ones(n)),
+        hw=rng.integers(0, 2, n),
+        t_comp=rng.lognormal(2.0, 0.6, n),
+        e_train=rng.lognormal(4.0, 0.5, n),
+        fanout=rng.integers(fan_lo, fan_hi, n),
+        lisl_e=rng.uniform(1, 5, (n, n)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# StarMask
+# ---------------------------------------------------------------------------
+
+class TestStarMask:
+    def test_cluster_produces_partition(self):
+        inst = make_instance(30)
+        p = StarMaskParams(k_max=10, m_min=2)
+        res = cluster(inst, p, jax.random.PRNGKey(0), n_samples=4)
+        assert res.feasible
+        got = np.sort(np.concatenate(res.clusters))
+        np.testing.assert_array_equal(got, np.arange(30))
+
+    def test_fanout_constraint_eq23(self):
+        """|C_k| - 1 <= max effective capacity of members."""
+        inst = make_instance(30)
+        p = StarMaskParams(k_max=10, m_min=2)
+        res = cluster(inst, p, jax.random.PRNGKey(1), n_samples=4)
+        cap = effective_capacity(inst, p)
+        for c in res.clusters:
+            assert len(c) - 1 <= cap[c].max()
+
+    def test_action_mask_blocks_full_cluster(self):
+        inst = make_instance(10, fan_lo=2, fan_hi=3)
+        p = StarMaskParams(k_max=4, m_min=1)
+        pp = PartialPartition(inst, p)
+        # fill cluster 0 to capacity
+        pp.apply(0, p.k_max)   # open new
+        cap0 = pp.cluster_capacity(0)
+        t = 1
+        while len(pp.members[0]) < cap0 and t < inst.n:
+            mask = pp.feasible_actions(t)
+            if not mask[0]:
+                break
+            pp.apply(t, 0)
+            t += 1
+        mask = pp.feasible_actions(t)
+        new_cap = int(max(max(pp.cap[pp.members[0]]), pp.cap[t]) + 1)
+        if len(pp.members[0]) + 1 > new_cap:
+            assert not mask[0]
+
+    def test_opennew_masked_at_kmax(self):
+        inst = make_instance(12)
+        p = StarMaskParams(k_max=2, m_min=1)
+        pp = PartialPartition(inst, p)
+        pp.apply(0, p.k_max)
+        pp.apply(1, p.k_max)
+        mask = pp.feasible_actions(2)
+        assert not mask[p.k_max]
+
+    def test_hw_homogeneous_flag(self):
+        inst = make_instance(20)
+        p = StarMaskParams(k_max=10, m_min=1, hw_homogeneous=True)
+        res = cluster(inst, p, jax.random.PRNGKey(2), n_samples=4)
+        if res.feasible:
+            for c in res.clusters:
+                assert len(set(inst.hw[c])) == 1
+
+    def test_k_min_lower_bound(self):
+        inst = make_instance(30)
+        p = StarMaskParams()
+        km = k_min(inst, p)
+        cap = np.sort(effective_capacity(inst, p))[::-1]
+        assert (cap[:km] + 1).sum() >= 30
+        if km > 1:
+            assert (cap[:km - 1] + 1).sum() < 30
+
+    def test_greedy_fallback_feasible(self):
+        inst = make_instance(25)
+        p = StarMaskParams(k_max=12, m_min=2)
+        clusters = greedy_fallback(inst, p)
+        assert clusters is not None
+        got = np.sort(np.concatenate(clusters))
+        np.testing.assert_array_equal(got, np.arange(25))
+
+    def test_reward_prefers_balanced_time(self):
+        """Eq. 18: grouping similar t_comp beats mixing fast+slow."""
+        n = 8
+        inst = Instance(
+            share=np.full(n, 1 / n), hw=np.zeros(n, int),
+            t_comp=np.array([1, 1, 1, 1, 10, 10, 10, 10], float),
+            e_train=np.ones(n), fanout=np.full(n, 5),
+        )
+        p = StarMaskParams()
+        good = [np.array([0, 1, 2, 3]), np.array([4, 5, 6, 7])]
+        bad = [np.array([0, 4, 1, 5]), np.array([2, 6, 3, 7])]
+        rg, _ = reward(good, inst, p)
+        rb, _ = reward(bad, inst, p)
+        assert rg > rb
+
+    def test_rl_training_improves_reward(self):
+        from repro.core.starmask import train_policy, rollout
+        insts = [make_instance(12, seed=s) for s in range(3)]
+        p = StarMaskParams(k_max=6, m_min=1)
+        params, hist = train_policy(insts, p, jax.random.PRNGKey(0),
+                                    episodes=60, lr=5e-3)
+        assert len(hist) >= 40
+        early = np.mean(hist[:15])
+        late = np.mean(hist[-15:])
+        assert late >= early - 0.05   # no catastrophic degradation
+
+
+# ---------------------------------------------------------------------------
+# Skip-One
+# ---------------------------------------------------------------------------
+
+class TestSkipOne:
+    def test_at_most_one_skip(self, rng):
+        st = skipone.SkipOneState.init(8)
+        p = skipone.SkipOneParams()
+        for r in range(20):
+            tt = rng.lognormal(1, 1, 8)
+            ee = rng.lognormal(1, 0.5, 8)
+            mask, st = skipone.select(tt, ee, np.zeros(8), st, p, r)
+            assert (~mask).sum() <= 1
+
+    def test_skips_dominant_straggler(self):
+        st = skipone.SkipOneState.init(5)
+        p = skipone.SkipOneParams()
+        tt = np.array([1.0, 1.1, 9.0, 1.2, 1.0])
+        ee = np.ones(5)
+        mask, _ = skipone.select(tt, ee, np.zeros(5), st, p, 0)
+        assert not mask[2]
+
+    def test_cooldown_blocks_consecutive(self):
+        st = skipone.SkipOneState.init(5)
+        p = skipone.SkipOneParams(cooldown=2)
+        tt = np.array([1.0, 1.0, 9.0, 1.0, 1.0])
+        mask, st = skipone.select(tt, np.ones(5), np.zeros(5), st, p, 0)
+        assert not mask[2] and st.kappa[2] == 2
+        mask2, st = skipone.select(tt, np.ones(5), np.zeros(5), st, p, 1)
+        assert mask2[2]          # on cooldown: must participate
+
+    def test_periodic_full_round_resets(self):
+        p = skipone.SkipOneParams(all_participate_every=3)
+        st = skipone.SkipOneState(np.array([2, 0, 1]), np.array([1, 0, 3]),
+                                  np.array([0.5, 0.0, 0.9]))
+        mask, st2 = skipone.select(np.ones(3), np.ones(3), np.zeros(3),
+                                   st, p, round_idx=2)
+        assert mask.all()
+        assert (st2.kappa == 0).all() and (st2.tau == 0).all()
+
+    def test_barrier_weakly_reduced(self, rng):
+        st = skipone.SkipOneState.init(6)
+        p = skipone.SkipOneParams()
+        tt = rng.lognormal(1, 1, 6)
+        mask, _ = skipone.select(tt, np.ones(6), np.zeros(6), st, p, 0)
+        assert tt[mask].max() <= tt.max()
+
+    def test_jax_matches_numpy(self, rng):
+        p = skipone.SkipOneParams()
+        K, n = 3, 6
+        tt = rng.lognormal(1, 1, (K, n))
+        ee = rng.lognormal(1, 0.5, (K, n))
+        hw = rng.random((K, n))
+        kappa = np.zeros((K, n), int)
+        tau = np.zeros((K, n), int)
+        phi = np.zeros((K, n))
+        mask_j, (k2, t2, p2) = skipone.select_jax(
+            jnp.asarray(tt), jnp.asarray(ee), jnp.asarray(hw),
+            jnp.asarray(kappa), jnp.asarray(tau), jnp.asarray(phi), p)
+        for k in range(K):
+            st = skipone.SkipOneState(kappa[k].copy(), tau[k].copy(),
+                                      phi[k].copy())
+            mask_np, _ = skipone.select(tt[k], ee[k], hw[k], st, p, 0)
+            np.testing.assert_array_equal(np.asarray(mask_j[k]) > 0.5, mask_np)
+
+
+# ---------------------------------------------------------------------------
+# Cross-aggregation
+# ---------------------------------------------------------------------------
+
+class TestCrossAgg:
+    def test_mixing_matrix_row_stochastic(self, rng):
+        K = 9
+        reach = rng.random((K, K)) < 0.4
+        groups = crossagg.sample_groups(reach, 2, rng)
+        M = crossagg.mixing_matrix(groups, rng.uniform(10, 100, K))
+        np.testing.assert_allclose(M.sum(1), 1.0)
+        assert (M >= 0).all()
+
+    def test_group_size_bounded_eq35(self, rng):
+        K, k_nbr = 12, 3
+        reach = rng.random((K, K)) < 0.5
+        groups = crossagg.sample_groups(reach, k_nbr, rng)
+        for k, g in enumerate(groups):
+            assert g[0] == k
+            assert len(g) <= 1 + k_nbr
+            nbrs = set(np.flatnonzero(reach[k] & (np.arange(K) != k)))
+            assert set(g[1:]).issubset(nbrs)
+
+    def test_empty_reach_is_identity(self, rng):
+        K = 5
+        groups = crossagg.sample_groups(np.zeros((K, K), bool), 2, rng)
+        M = crossagg.mixing_matrix(groups, np.ones(K))
+        np.testing.assert_allclose(M, np.eye(K))
+
+    def test_consolidation_eq38(self, rng):
+        K = 4
+        models = {"w": jnp.asarray(rng.normal(size=(K, 7)))}
+        n = np.array([10.0, 20.0, 30.0, 40.0])
+        out = crossagg.consolidate(models, n)
+        expect = (n[:, None] / n.sum() * np.asarray(models["w"])).sum(0)
+        np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-6)
+
+    def test_mixing_preserves_consensus(self, rng):
+        """If all clusters share the same model, mixing is a no-op."""
+        K = 6
+        w = rng.normal(size=(1, 5))
+        models = {"w": jnp.asarray(np.repeat(w, K, 0))}
+        reach = rng.random((K, K)) < 0.6
+        groups = crossagg.sample_groups(reach, 2, rng)
+        M = crossagg.mixing_matrix(groups, rng.uniform(1, 10, K))
+        out = crossagg.apply_mixing(M, models)
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(models["w"]), atol=1e-5)
+
+    def test_gossip_converges_over_rounds(self, rng):
+        """Repeated random-k mixing over a connected-on-average graph
+        contracts disagreement (the paper's consensus claim)."""
+        K = 8
+        n = rng.uniform(10, 50, K)
+        x = rng.normal(size=(K, 3))
+        target = (n[:, None] / n.sum() * x).sum(0)
+        disagreement = [np.abs(x - x.mean(0)).max()]
+        for r in range(60):
+            reach = rng.random((K, K)) < 0.35
+            reach |= reach.T
+            np.fill_diagonal(reach, False)
+            groups = crossagg.sample_groups(reach, 2, rng)
+            M = crossagg.mixing_matrix(groups, n)
+            x = M @ x
+            disagreement.append(np.abs(x - x.mean(0)).max())
+        assert disagreement[-1] < 0.05 * disagreement[0]
+
+    def test_jax_mixing_matrix(self, rng):
+        K = 7
+        reach = rng.random((K, K)) < 0.5
+        M = crossagg.mixing_matrix_jax(jnp.asarray(reach),
+                                       jnp.asarray(rng.uniform(1, 9, K)),
+                                       2, jax.random.PRNGKey(3))
+        M = np.asarray(M)
+        np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-5)
+        # respects reachability + self
+        for k in range(K):
+            nz = set(np.flatnonzero(M[k] > 0))
+            allowed = set(np.flatnonzero(reach[k])) | {k}
+            assert nz.issubset(allowed)
+            assert len(nz - {k}) <= 2
+
+
+# ---------------------------------------------------------------------------
+# Energy model
+# ---------------------------------------------------------------------------
+
+class TestEnergy:
+    def test_eq2_4_runtime_scaling(self):
+        # double data -> double FLOPs -> double time (Eq. 2-4)
+        assert t_comp(200, 1e6, 1e9) == 2 * t_comp(100, 1e6, 1e9)
+        # faster hardware -> proportionally less time
+        assert t_comp(100, 1e6, 2e9) == t_comp(100, 1e6, 1e9) / 2
+
+    def test_eq8_cpu_energy_quadratic_in_freq(self):
+        p1 = HardwareProfile(CPU, 1e9, freq=1e9)
+        p2 = HardwareProfile(CPU, 1e9, freq=2e9)
+        e1 = e_train([100], 1e6, [p1], 1)[0]
+        e2 = e_train([100], 1e6, [p2], 1)[0]
+        assert np.isclose(e2 / e1, 4.0)
+
+    def test_eq9_gpu_energy_power_times_time(self):
+        p = HardwareProfile(GPU, 2e9, gpu_power=30.0)
+        e = e_train([100], 1e6, [p], 5)[0]
+        expect = 30.0 * t_train(100, 1e6, 2e9, 5)
+        assert np.isclose(e, expect)
+
+    def test_eq5_12_lisl(self):
+        lp = LinkParams()
+        d = 8 * 44.7e6
+        t = t_lisl(d, lp.lisl_rate, 1e6, lp)
+        assert np.isclose(t, d / lp.lisl_rate + 1e6 / lp.light_speed)
+        assert np.isclose(e_lisl(d, lp.lisl_rate, 1e6, lp), lp.lisl_power * t)
+
+    def test_eq13_gs_energy_dominates_lisl(self):
+        """GS transfers cost more than LISL (40 W vs 10 W, half rate)."""
+        lp = LinkParams()
+        d = 8 * 44.7e6
+        assert e_gs(d, lp.gs_rate, 1e6, lp) > 4 * e_lisl(d, lp.lisl_rate,
+                                                         1e6, lp)
+
+    def test_ledger_accounting(self):
+        led = EnergyLedger()
+        led.add_gs(2, 100.0, 10.0)
+        led.add_intra(3, 30.0, 3.0)
+        led.add_inter(1, 10.0, 1.0)
+        led.add_train(500.0, 60.0)
+        led.add_wait(120.0)
+        assert led.gs_count == 2 and led.intra_lisl_count == 3
+        assert led.transmission_energy_j == 140.0
+        assert led.total_energy_j == 640.0
+        row = led.row()
+        assert np.isclose(row["waiting_h"], 120 / 3600)

@@ -1,0 +1,131 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cross_agg import (cross_agg_flat, cross_agg_flat_ref,
+                                     cross_agg_tree, cross_agg_tree_ref)
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.quant import (compress_tree, decompress_tree,
+                                 int8_dequantize, int8_dequantize_ref,
+                                 int8_quantize, int8_quantize_ref)
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# cross_agg
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,N", [(2, 100), (9, 5000), (16, 4096), (5, 7777)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cross_agg_flat(K, N, dtype):
+    k1, k2 = jax.random.split(KEY)
+    M = jax.nn.softmax(jax.random.normal(k1, (K, K)), -1)
+    W = jax.random.normal(k2, (K, N)).astype(dtype)
+    out = cross_agg_flat(M, W, tile_n=512)
+    ref = cross_agg_flat_ref(M, W)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_cross_agg_tree_matches_ref():
+    k1, k2 = jax.random.split(KEY)
+    K = 4
+    tree = {"a": jax.random.normal(k1, (K, 17, 9)),
+            "b": {"c": jax.random.normal(k2, (K, 33))}}
+    M = jax.nn.softmax(jax.random.normal(KEY, (K, K)), -1)
+    out = cross_agg_tree(M, tree)
+    ref = cross_agg_tree_ref(M, tree)
+    for o, r in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(o, r, atol=1e-5)
+
+
+def test_cross_agg_identity_mixing():
+    """M = I must be a no-op (paper: empty reach set)."""
+    W = jax.random.normal(KEY, (6, 1000))
+    out = cross_agg_flat(jnp.eye(6), W)
+    np.testing.assert_allclose(out, W, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,d", [
+    (1, 4, 4, 128, 64),      # MHA
+    (2, 4, 2, 256, 64),      # GQA
+    (1, 8, 1, 128, 128),     # MQA
+    (2, 2, 2, 384, 32),      # non-pow2 seq blocks
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, Hq, Hkv, S, d, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64)).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)
+
+
+def test_flash_attention_matches_model_path():
+    """Kernel agrees with the model stack's chunked_attention."""
+    from repro.models.layers import chunked_attention
+    ks = jax.random.split(KEY, 3)
+    B, S, H, Hkv, d = 2, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, d), jnp.float32)
+    ref = chunked_attention(q, k, v, causal=True)
+    out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=True,
+                          block_q=128, block_k=128).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(100,), (300, 77), (8, 1024), (3, 5, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matches_ref(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 3).astype(dtype)
+    q, s = int8_quantize(x)
+    qr, sr = int8_quantize_ref(x)
+    assert int(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)).max()) <= 1
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+
+
+def test_quant_roundtrip_error_bound():
+    x = jax.random.normal(KEY, (200, 300)) * 5
+    q, s = int8_quantize(x)
+    xd = int8_dequantize(q, s, n=x.size, shape=x.shape, dtype=jnp.float32)
+    # symmetric int8: error <= scale/2 = absmax/254 per chunk
+    err = jnp.abs(xd - x).max()
+    assert float(err) <= float(jnp.abs(x).max()) / 127.0
+
+
+def test_quant_tree_roundtrip():
+    tree = {"w": jax.random.normal(KEY, (50, 60)),
+            "b": jax.random.normal(KEY, (3000,)) * 0.01}
+    ct = compress_tree(tree)
+    out = decompress_tree(ct)
+    for o, r in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        rel = float(jnp.abs(o - r).max() / (jnp.abs(r).max() + 1e-12))
+        assert rel < 0.02

@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crossagg, skipone
+from repro.data.synth import dirichlet_partition, iid_partition
+from repro.kernels.quant import int8_dequantize_ref, int8_quantize_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Skip-One fairness invariants (Eq. 26, 31)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 12), seed=st.integers(0, 1000),
+       rounds=st.integers(1, 30))
+def test_skipone_invariants(n, seed, rounds):
+    rng = np.random.default_rng(seed)
+    p = skipone.SkipOneParams()
+    state = skipone.SkipOneState.init(n)
+    skip_streak = np.zeros(n, int)
+    for r in range(rounds):
+        tt = rng.lognormal(1, 1, n)
+        ee = rng.lognormal(1, 0.5, n)
+        mask, state = skipone.select(tt, ee, rng.random(n), state, p, r)
+        # |S_k(r)| <= 1 (Eq. 26)
+        assert (~mask).sum() <= 1
+        # staleness bounded: nobody skipped more than tau_max consecutive
+        skip_streak = np.where(mask, 0, skip_streak + 1)
+        assert skip_streak.max() <= p.tau_max
+        # cooldown counters never negative
+        assert (state.kappa >= 0).all()
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 10), seed=st.integers(0, 100))
+def test_skipone_barrier_monotone(n, seed):
+    """Skipping never increases the cluster barrier (Eq. 28)."""
+    rng = np.random.default_rng(seed)
+    p = skipone.SkipOneParams()
+    tt = rng.lognormal(1, 1, n)
+    mask, _ = skipone.select(tt, rng.lognormal(1, 0.5, n), np.zeros(n),
+                             skipone.SkipOneState.init(n), p, 0)
+    assert tt[mask].max() <= tt.max()
+
+
+# ---------------------------------------------------------------------------
+# Random-k mixing invariants (Eq. 35-37)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(k=st.integers(2, 16), k_nbr=st.integers(1, 5),
+       seed=st.integers(0, 1000), density=st.floats(0.0, 1.0))
+def test_mixing_matrix_invariants(k, k_nbr, seed, density):
+    rng = np.random.default_rng(seed)
+    reach = rng.random((k, k)) < density
+    n = rng.uniform(1, 100, k)
+    groups = crossagg.sample_groups(reach, k_nbr, rng)
+    M = crossagg.mixing_matrix(groups, n)
+    np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-12)
+    assert (M >= 0).all()
+    assert (np.diag(M) > 0).all()           # self always included
+    # sample-size proportionality within a group (Eq. 37)
+    for kk, g in enumerate(groups):
+        w = n[g] / n[g].sum()
+        np.testing.assert_allclose(M[kk, g], w, atol=1e-12)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(2, 8), seed=st.integers(0, 500))
+def test_mixing_preserves_weighted_mean(k, seed):
+    """Data-weighted global mean is invariant under SYMMETRIC group mixing
+    (pairwise gossip); the final consolidation recovers it exactly."""
+    rng = np.random.default_rng(seed)
+    n = rng.uniform(1, 10, k)
+    x = rng.normal(size=(k, 4))
+    target = (n[:, None] / n.sum() * x).sum(0)
+    # symmetric pairwise exchange: both partners mix the same group
+    pairs = rng.permutation(k)
+    M = np.eye(k)
+    for i in range(0, k - 1, 2):
+        a, b = pairs[i], pairs[i + 1]
+        w = n[[a, b]] / n[[a, b]].sum()
+        M[a, [a, b]] = w
+        M[b, [a, b]] = w
+    x2 = M @ x
+    got = (n[:, None] / n.sum() * x2).sum(0)
+    np.testing.assert_allclose(got, target, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Data partitioner
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n_clients=st.integers(2, 20), alpha=st.floats(0.05, 10.0),
+       seed=st.integers(0, 100))
+def test_dirichlet_partition_is_partition(n_clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 2000)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed, min_size=4)
+    all_idx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(all_idx, np.arange(2000))
+    assert min(len(p) for p in parts) >= 4
+
+
+def test_dirichlet_more_skewed_than_iid():
+    labels = np.random.default_rng(0).integers(0, 10, 5000)
+    parts_noniid = dirichlet_partition(labels, 10, alpha=0.5, seed=1)
+    parts_iid = iid_partition(5000, 10, seed=1)
+
+    def label_skew(parts):
+        dists = []
+        for p in parts:
+            h = np.bincount(labels[p], minlength=10) / len(p)
+            dists.append(h)
+        return np.std(dists, axis=0).mean()
+
+    assert label_skew(parts_noniid) > 2 * label_skew(parts_iid)
+
+
+# ---------------------------------------------------------------------------
+# Quantization error bound
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 5000), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 100))
+def test_int8_error_bound(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, n).astype(np.float32))
+    q, s = int8_quantize_ref(x)
+    xd = int8_dequantize_ref(q, s, n=n, shape=(n,), dtype=jnp.float32)
+    # per-chunk bound: |err| <= scale_chunk / 2, scale_chunk <= absmax/127
+    assert float(jnp.abs(xd - x).max()) <= float(jnp.abs(x).max()) / 127.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint roundtrip
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_ckpt_roundtrip(tmp_path_factory, seed):
+    from repro.ckpt import load_pytree, save_pytree
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(7, 3)).astype(np.float32)),
+            "nested": {"b": jnp.asarray(rng.integers(0, 100, 5)),
+                       "c": [jnp.ones(2), jnp.zeros(4)]}}
+    path = str(tmp_path_factory.mktemp("ck") / "t.npz")
+    save_pytree(tree, path)
+    out = load_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
