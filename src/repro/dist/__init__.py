@@ -1,0 +1,49 @@
+"""repro.dist — the distribution layer: named sharding rules + partitioners.
+
+Models never mention meshes. Every layer annotates its activations with
+``shard(x, "<rule name>")`` (see :mod:`repro.dist.ctx`); a launcher opts a
+computation into a placement by wrapping it in ``use_rules(mesh, rules)``
+with a rule table built by :func:`repro.dist.sharding.activation_rules`.
+Outside any active context ``shard`` is an identity, so the same model code
+runs on a laptop CPU, a test mesh, or the 512-device production meshes.
+
+Rule-name vocabulary (the complete set emitted by ``models/``):
+
+  ============  =====================  =========================================
+  name          activation shape       placement (tp=True)
+  ============  =====================  =========================================
+  ``act_btd``   (B, S, d_model)        batch over data axes, d_model over model
+  ``act_bthd``  (B, S, H, head_dim)    batch over data axes, heads over model
+  ``act_btf``   (B, S, d_ff)           batch over data axes, d_ff over model
+  ``moe_ecd``   (E, C, d_model)        experts over model (flat dispatch buf)
+  ``moe_ecf``   (E, C, d_ff)           experts over model (flat expert hidden)
+  ``moe_gtd``   (G, T/G, d_model)      groups over data axes (grouped tokens)
+  ``moe_gecd``  (G, E, C, d_model)     groups over data, experts over model
+  ``moe_gecf``  (G, E, C, d_ff)        groups over data, experts over model
+  ============  =====================  =========================================
+
+Cluster/pod-axis mapping (paper §IV): CroSatFL trains K satellite clusters
+in parallel and mixes them with a random-k cross-aggregation matrix. On the
+``(pod, data, model)`` production mesh the correspondence is
+
+  * cluster k        = pod k. Cluster-local state carries a leading K dim
+    sharded ``P("pod")``; the clustered train step vmaps the per-cluster
+    computation with ``spmd_axis_name="pod"``, so ``activation_rules(...,
+    cluster_vmapped=True)`` must NOT mention "pod" — vmap inserts it.
+  * intra-cluster aggregation (Eq. 26, with Skip-One as zero-weighted
+    client shards) = the data-axis gradient all-reduce inside one pod.
+  * random-k cross-aggregation (Eq. 37) = the (K, K) mixing einsum — the
+    only cross-pod (DCN) collective.
+
+Partitioners in :mod:`repro.dist.sharding`: ``param_specs`` (FSDP x TP with
+the head-quantum rule), ``batch_specs``, ``cache_specs_sharding``
+(sequence-sharded long-context KV), and ``data_axes``.
+"""
+from repro.dist.ctx import current_rules, shard, use_rules
+from repro.dist.sharding import (activation_rules, batch_specs,
+                                 cache_specs_sharding, data_axes, param_specs)
+
+__all__ = [
+    "activation_rules", "batch_specs", "cache_specs_sharding",
+    "current_rules", "data_axes", "param_specs", "shard", "use_rules",
+]

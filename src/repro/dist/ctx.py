@@ -1,0 +1,98 @@
+"""Named sharding-rule context.
+
+``use_rules(mesh, rules)`` activates a rule table; ``shard(x, name)`` then
+applies ``jax.lax.with_sharding_constraint`` with the named PartitionSpec.
+Outside any active context ``shard`` is an identity no-op, which is what
+keeps ``models/`` mesh-agnostic: the same layer code traces on a bare CPU,
+under the test meshes, and under the 512-device production meshes.
+
+Contexts nest: an inner ``use_rules`` shadows the outer table for its
+extent and restores it on exit (even on exception). Rules are consulted at
+TRACE time, so entering the context inside a jitted function (as
+``launch/steps.py`` does) is the intended usage.
+
+Axes named by a rule that the array cannot actually be split over — the
+axis is missing from the mesh, or the dim is not divisible by the axis
+size — are dropped rather than erroring, so one rule table serves both the
+full-size archs and the tiny ``reduced()`` smoke configs.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import fit_axes
+
+# Stack of (mesh, rules) — thread-local so parallel tracing threads (e.g.
+# pjit compilation workers or test runners) never see each other's rules.
+_state = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+@contextmanager
+def use_rules(mesh, rules: Mapping[str, P]):
+    """Activate ``rules`` (name -> PartitionSpec) on ``mesh`` for the block."""
+    _stack().append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def current_rules():
+    """The active (mesh, rules) pair, or None outside any context."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+def _fit(spec: P, shape: tuple, mesh) -> P:
+    """Drop rule axes the array cannot honor: absent from the mesh, not
+    dividing the dim, or already claimed by an earlier dim of this spec
+    (``fit_axes`` is the shared greedy-relaxation rule)."""
+    sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+    used: set = set()
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = fit_axes(dim, axes, sizes, used)
+        used.update(kept)
+        out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def shard(x: jax.Array, rule: str) -> jax.Array:
+    """Constrain ``x`` to the active named rule; identity with no context."""
+    active = current_rules()
+    if active is None:
+        return x
+    mesh, rules = active
+    if rule not in rules:
+        raise KeyError(
+            f"unknown sharding rule {rule!r}; active rules: {sorted(rules)}")
+    spec = rules[rule]
+    if x.ndim < len(spec):
+        # Lower-rank call site (e.g. "act_btf" on (T, F) flattened tokens in
+        # the MoE shared-expert path): keep the batch (first) and feature
+        # (last) entries and squeeze the middle.
+        if x.ndim < 2:
+            raise ValueError(
+                f"rule {rule!r} spec {spec} cannot apply to shape {x.shape}")
+        spec = P(spec[0], *([None] * (x.ndim - 2)), spec[-1])
+    elif x.ndim > len(spec):
+        raise ValueError(
+            f"rule {rule!r} spec {spec} has rank {len(spec)} but array has "
+            f"shape {x.shape}")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _fit(spec, x.shape, mesh)))

@@ -1,0 +1,287 @@
+"""Mesh partitioners: activation rule tables and FSDP x TP param placement.
+
+All functions return ``PartitionSpec`` trees / tables and only consult
+``mesh.axis_names`` / ``mesh.shape`` — no device state — so they work with
+real meshes and with symbolic stand-ins (the divisibility tests use a fake
+16x16 mesh object with no devices behind it).
+
+Placement policy (DESIGN.md §3):
+
+  * FSDP: matrices shard one non-TP dim over "data" ("model" joins the
+    FSDP axes when tensor parallelism is off, making pure-DP runs ZeRO-3
+    over the whole slice).
+  * TP: Megatron pairing — up/QKV projections column-parallel (output dim
+    over "model"), output/down projections row-parallel (input dim over
+    "model"), embedding + lm head vocab-parallel, MoE expert weights
+    expert-parallel (leading E dim over "model").
+  * Head quantum: a fused (D, H*hd) projection is only split over "model"
+    when the HEAD COUNT divides the axis — wk/wv with few kv heads stay
+    whole rather than splitting inside head_dim (MQA archs replicate k/v).
+  * Every assignment is divisibility-checked against the mesh; axes that
+    do not fit are dropped (tuple assignments keep their longest fitting
+    prefix), so one policy covers all archs from 125M to 398B.
+  * ``cluster_dim``: a leading K cluster dim (CroSatFL cluster = pod,
+    paper §IV) shards over "pod"; dim 0 is then reserved and no other
+    assignment may claim it.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _sizes(mesh) -> dict[str, int]:
+    return {a: mesh.shape[a] for a in mesh.axis_names}
+
+
+def data_axes(mesh, *, tp: bool = True, cluster_vmapped: bool = False):
+    """Mesh axes that carry the batch dimension.
+
+    The "pod" axis joins only when the cluster dim is NOT handled by a
+    ``vmap(spmd_axis_name="pod")`` wrapper (which inserts it itself), and
+    "model" joins when tensor parallelism is off (pure-DP mode spreads the
+    batch over the whole slice)."""
+    axes = []
+    if "pod" in mesh.axis_names and not cluster_vmapped:
+        axes.append("pod")
+    axes.append("data")
+    if not tp and "model" in mesh.axis_names:
+        axes.append("model")
+    return tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# Activation rules (the vocabulary consumed by models/ via dist.ctx.shard)
+# ---------------------------------------------------------------------------
+
+def activation_rules(mesh, *, cluster_vmapped: bool = False,
+                     tp: bool = True) -> dict[str, P]:
+    """Rule table for one placement of the model-side ``shard`` call sites.
+
+    ``cluster_vmapped``: the K-cluster train step vmaps over "pod", so the
+    per-cluster rules must not mention it. ``tp=False`` folds "model" into
+    the batch axes and drops all feature-dim constraints."""
+    b = data_axes(mesh, tp=tp, cluster_vmapped=cluster_vmapped)
+    m = "model" if tp else None
+    return {
+        "act_btd":  P(b, None, m),          # (B, S, d_model)
+        "act_bthd": P(b, None, m, None),    # (B, S, H, head_dim)
+        "act_btf":  P(b, None, m),          # (B, S, d_ff)
+        "moe_ecd":  P(m, None, None),       # (E, C, d_model) flat dispatch
+        "moe_ecf":  P(m, None, None),       # (E, C, d_ff)
+        "moe_gtd":  P(b, None, None),       # (G, T/G, d_model) grouped tokens
+        "moe_gecd": P(b, m, None, None),    # (G, E, C, d_model)
+        "moe_gecf": P(b, m, None, None),    # (G, E, C, d_ff)
+    }
+
+
+# ---------------------------------------------------------------------------
+# Assignment engine
+# ---------------------------------------------------------------------------
+
+def fit_axes(dim: int, axes, sizes: Mapping[str, int], used=()) -> tuple:
+    """Longest prefix of ``axes`` that can split ``dim``: each axis must
+    exist in ``sizes``, not already be ``used``, and the running axis
+    product must divide ``dim``. The single greedy-relaxation rule shared
+    by the partitioners here and by ``ctx.shard``."""
+    kept, prod = [], 1
+    for a in axes:
+        n = sizes.get(a)
+        if a in used or n is None or dim % (prod * n):
+            break
+        kept.append(a)
+        prod *= n
+    return tuple(kept)
+
+
+class _Assigner:
+    """Builds one PartitionSpec, enforcing axis uniqueness, divisibility,
+    and the reserved cluster dim."""
+
+    def __init__(self, shape, sizes: dict[str, int], reserved: int = 0):
+        self.shape = shape
+        self.sizes = sizes
+        self.entries: list[Any] = [None] * len(shape)
+        self.used: set[str] = set()
+        self.reserved = reserved
+
+    def put(self, dim: int, axes) -> bool:
+        """Assign ``axes`` (greedy prefix that fits) to ``dim``; negative
+        dims count from the end. Returns True if anything was placed."""
+        if axes is None:
+            return False
+        axes = axes if isinstance(axes, (tuple, list)) else (axes,)
+        d = dim if dim >= 0 else len(self.shape) + dim
+        if d < self.reserved or d >= len(self.shape) or self.entries[d] is not None:
+            return False
+        kept = fit_axes(self.shape[d], axes, self.sizes, self.used)
+        if not kept:
+            return False
+        self.entries[d] = kept if len(kept) > 1 else kept[0]
+        self.used.update(kept)
+        return True
+
+    def spec(self) -> P:
+        return P(*self.entries)
+
+
+def _path_keys(path) -> tuple[str, ...]:
+    keys = []
+    for e in path:
+        if hasattr(e, "key"):
+            keys.append(str(e.key))
+    return tuple(keys)
+
+
+# ---------------------------------------------------------------------------
+# Parameter placement
+# ---------------------------------------------------------------------------
+
+# Column-parallel (TP on output dim -1, FSDP on input dim -2). The value is
+# the cfg attribute naming the head quantum guarding the split, or None.
+_COL = {
+    "wq": "num_heads", "wk": "num_kv_heads", "wv": "num_kv_heads",
+    "w_uq": "num_heads", "w_uk": "num_heads", "w_uv": "num_heads",
+    "w_q": "num_heads", "w_k": "num_heads", "w_v": "num_heads",
+    "lm_head": None, "router": None,
+    "w_up": None, "w_gate": None, "mlp_up": None, "mlp_gate": None,
+    "in_proj": None, "x_proj": None, "dt_proj": None,
+    "w_dq": None, "w_dkv": None, "w_kr": None, "w_x": None,
+    "w_i": None, "w_f": None,
+}
+
+# Row-parallel (TP on input dim -2, FSDP on output dim -1).
+_ROW = {
+    "wo": "num_heads", "w_down": None, "out_proj": None, "mlp_down": None,
+}
+
+_EXPERT_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def _unit_ok(cfg, attr: Optional[str], n: int) -> bool:
+    if attr is None or cfg is None:
+        return True
+    unit = getattr(cfg, attr, 0)
+    return bool(unit) and unit % n == 0
+
+
+def param_specs(tree, mesh, *, cfg=None, cluster_dim: bool = False,
+                fsdp: bool = True, tp: bool = True):
+    """PartitionSpec tree mirroring ``tree`` (arrays or ShapeDtypeStructs).
+
+    ``cluster_dim``: every leaf carries a leading K cluster dim sharded
+    over "pod". ``fsdp=False`` keeps params replicated over the data axes;
+    ``tp=False`` drops all "model" weight splits (the axis then joins the
+    FSDP axes instead)."""
+    sizes = _sizes(mesh)
+    model_n = sizes.get("model", 1)
+    tp_axis = "model" if (tp and "model" in sizes) else None
+    fsdp_axes: Optional[tuple] = ("data",) if fsdp else None
+    if fsdp and not tp and "model" in sizes:
+        fsdp_axes = ("data", "model")
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        asg = _Assigner(leaf.shape, sizes)
+        if cluster_dim:
+            asg.put(0, "pod")
+            asg.reserved = 1
+
+        is_expert = (name in _EXPERT_NAMES and "moe" in keys
+                     and "shared" not in keys)
+        if is_expert:
+            # (E, d_in, d_out): expert-parallel over "model", FSDP on the
+            # larger of the two per-expert dims.
+            asg.put(-3, tp_axis)
+            big, small = (-2, -1) if leaf.shape[-2] >= leaf.shape[-1] else (-1, -2)
+            asg.put(big, fsdp_axes) or asg.put(small, fsdp_axes)
+        elif name == "embed":
+            # (V, D) vocab-parallel; head matmuls reduce over the model axis
+            asg.put(-2, tp_axis)
+            asg.put(-1, fsdp_axes)
+        elif name in _COL and len(leaf.shape) >= 2:
+            if _unit_ok(cfg, _COL[name], model_n):
+                asg.put(-1, tp_axis)
+            asg.put(-2, fsdp_axes)
+        elif name in _ROW and len(leaf.shape) >= 2:
+            if _unit_ok(cfg, _ROW[name], model_n):
+                asg.put(-2, tp_axis)
+            asg.put(-1, fsdp_axes)
+        elif len(leaf.shape) - (1 if cluster_dim else 0) >= 2:
+            # unknown matrices (conv filters, positional tables, SSM state
+            # matrices): FSDP the largest dim that fits
+            dims = sorted(range(len(leaf.shape)), key=lambda d: -leaf.shape[d])
+            for d in dims:
+                if asg.put(d, fsdp_axes):
+                    break
+        # 1D leaves (norm scales, biases) stay replicated
+        return asg.spec()
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache placement
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch, mesh, *, cluster_dim: bool = False, tp: bool = True):
+    """Input-batch PartitionSpecs.
+
+    The batch dim shards over ``data_axes``; with ``cluster_dim`` the
+    leading K dim shards over "pod" and the in-cluster batch over "data".
+    ``position_ids`` carries a leading (3,) M-RoPE dim before the batch."""
+    sizes = _sizes(mesh)
+    baxes = data_axes(mesh, tp=tp, cluster_vmapped=cluster_dim)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        asg = _Assigner(leaf.shape, sizes)
+        bdim = (1 if name == "position_ids" else 0) + (1 if cluster_dim else 0)
+        if cluster_dim:
+            asg.put(0, "pod")
+        asg.put(bdim, baxes)
+        return asg.spec()
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+# Cache leaves with a sequence dim, by name: (batch dim, seq dim, head dim)
+# indexed from the END of the shape so leading layer-stack dims don't matter.
+_SEQ_CACHES = {
+    "k": (-4, -3, -2), "v": (-4, -3, -2),       # (..., B, S, Hkv, hd)
+    "xk": (-4, -3, -2), "xv": (-4, -3, -2),     # cross-attn context k/v
+    "c_kv": (-3, -2, None), "k_rope": (-3, -2, None),   # MLA latent cache
+}
+
+
+def cache_specs_sharding(cache, mesh, *, tp: bool = True):
+    """Decode-cache PartitionSpecs.
+
+    KV caches shard the batch dim over "data" when it fits; long-context
+    small-batch caches (the 500k-token cell) fall back to SEQUENCE sharding
+    over "data" so a single sequence's cache spreads across the slice. KV
+    heads additionally shard over "model" under TP. Recurrent states (SSM /
+    xLSTM) shard their batch dim only."""
+    sizes = _sizes(mesh)
+    tp_axis = "model" if (tp and "model" in sizes) else None
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        asg = _Assigner(leaf.shape, sizes)
+        if name in _SEQ_CACHES and len(leaf.shape) >= 3:
+            bdim, sdim, hdim = _SEQ_CACHES[name]
+            asg.put(bdim, "data") or asg.put(sdim, "data")
+            if hdim is not None:
+                asg.put(hdim, tp_axis)
+        else:
+            # recurrent state: batch dim follows any layer-stack dim
+            bdim = 1 if "periods" in keys else 0
+            asg.put(bdim, "data")
+        return asg.spec()
+
+    return jax.tree_util.tree_map_with_path(one, cache)

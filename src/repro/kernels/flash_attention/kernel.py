@@ -32,6 +32,12 @@ DEFAULT_BQ = 512
 DEFAULT_BK = 512
 NEG = -1e30
 
+# Newer Pallas names this CompilerParams; jax<=0.4.x only has
+# TPUCompilerParams (on transitional versions it is a deprecated alias, so
+# prefer the new name when both exist).
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                   *, scale: float, block_q: int, block_k: int, causal: bool,
@@ -118,7 +124,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

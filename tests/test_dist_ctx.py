@@ -1,0 +1,103 @@
+"""repro.dist.ctx edge cases: identity outside a context, unknown-rule
+rejection, nesting, and rule fitting on impossible splits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.ctx import current_rules, shard, use_rules
+from repro.dist.sharding import activation_rules, data_axes
+from repro.launch.mesh import make_test_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh()
+
+
+def test_shard_is_identity_outside_context():
+    x = jnp.arange(12.0).reshape(3, 4)
+    assert current_rules() is None
+    y = shard(x, "act_btd")
+    assert y is x          # no constraint op, not even a copy
+
+
+def test_unknown_rule_rejected(mesh):
+    x = jnp.ones((2, 4, 8))
+    with use_rules(mesh, activation_rules(mesh)):
+        with pytest.raises(KeyError, match="no_such_rule"):
+            shard(x, "no_such_rule")
+    # and the context unwound cleanly despite the raise
+    assert current_rules() is None
+
+
+def test_rank_mismatch_rejected(mesh):
+    """Higher-rank arrays than the rule are an error; LOWER-rank arrays
+    (flattened-token call sites) squeeze the middle of the spec instead."""
+    with use_rules(mesh, activation_rules(mesh)):
+        with pytest.raises(ValueError, match="rank"):
+            shard(jnp.ones((2, 4, 8, 3, 5)), "act_bthd")
+        with pytest.raises(ValueError, match="cannot apply"):
+            shard(jnp.ones((6,)), "act_btd")
+        y = shard(jnp.ones((4, 8)), "act_btf")   # (T, F) flattened tokens
+        assert y.shape == (4, 8)
+
+
+def test_nested_contexts_restore_outer(mesh):
+    outer = {"act_btd": P(None, None, None)}
+    inner = {"act_btd": P("data", None, None),
+             "extra": P(None)}
+    with use_rules(mesh, outer):
+        assert current_rules()[1] == outer
+        with use_rules(mesh, inner):
+            assert current_rules()[1] == inner
+            assert set(current_rules()[1]) == {"act_btd", "extra"}
+        # inner popped: outer table (without "extra") is active again
+        assert current_rules()[1] == outer
+        with pytest.raises(KeyError):
+            shard(jnp.ones((1,)), "extra")
+    assert current_rules() is None
+
+
+def test_shard_applies_constraint_and_preserves_values(mesh):
+    x = jnp.arange(2 * 4 * 8, dtype=jnp.float32).reshape(2, 4, 8)
+    with use_rules(mesh, activation_rules(mesh)):
+        y = jax.jit(lambda t: shard(t, "act_btd") * 1.0)(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_indivisible_axes_are_dropped(mesh):
+    """A rule naming an axis the dim can't honor is relaxed, not an error:
+    batch 3 on an n-device data axis only splits when n divides 3."""
+    x = jnp.ones((3, 5, 7))
+    with use_rules(mesh, activation_rules(mesh)):
+        y = shard(x, "act_btd")
+    assert y.shape == x.shape
+
+
+def test_rules_must_cover_model_call_sites(mesh):
+    """Every rule name emitted by models/ exists in the table, for every
+    placement variant."""
+    used_by_models = {"act_btd", "act_bthd", "act_btf", "moe_ecd", "moe_ecf",
+                      "moe_gtd", "moe_gecd", "moe_gecf"}
+    for cluster in (False, True):
+        for tp in (False, True):
+            rules = activation_rules(mesh, cluster_vmapped=cluster, tp=tp)
+            assert used_by_models <= set(rules)
+
+
+def test_data_axes_variants():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert data_axes(FakeMesh()) == ("pod", "data")
+    assert data_axes(FakeMesh(), cluster_vmapped=True) == ("data",)
+    assert data_axes(FakeMesh(), tp=False) == ("pod", "data", "model")
+
+    class TwoAxis:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    assert data_axes(TwoAxis()) == ("data",)
