@@ -38,6 +38,9 @@ class BenchSetup:
     k_nbr: int = 2
     seed: int = 0
     gpu_fraction: float = 0.5
+    # FLOPs/sample for the energy model: a float, or "measured:<arch>/<shape>"
+    # to resolve from compiled-HLO dry-run estimates (fl/engine/costs.py)
+    c_flop: object = 5e7
 
     def build(self):
         ds = make_dataset(self.dataset, n=self.n_train, seed=self.seed)
@@ -57,14 +60,16 @@ class BenchSetup:
     def session_config(self, model) -> SessionConfig:
         return SessionConfig(
             edge_rounds=self.rounds, local_epochs=self.local_epochs,
-            k_nbr=self.k_nbr, model_bits=model.model_bits(),
+            k_nbr=self.k_nbr, c_flop=self.c_flop,
+            model_bits=model.model_bits(),
             seed=self.seed, starmask=StarMaskParams(k_max=self.k_max,
                                                     m_min=2))
 
     def baseline_config(self, model) -> BaselineConfig:
         return BaselineConfig(
             rounds=self.rounds, local_epochs=self.local_epochs,
-            model_bits=model.model_bits(), seed=self.seed)
+            c_flop=self.c_flop, model_bits=model.model_bits(),
+            seed=self.seed)
 
 
 def run_crosatfl(setup: BenchSetup, eval_every: bool = True):

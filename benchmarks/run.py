@@ -13,11 +13,60 @@ import sys
 import time
 
 
+def smoke(measured_cost: bool = False) -> int:
+    """1-round run of all six algorithms on a tiny setup through the
+    shared RoundEngine — catches engine regressions in the benchmark
+    entry points (CI runs this; it is much cheaper than any --quick
+    profile). ``measured_cost``: resolve c_flop from the compiled-HLO
+    estimate for the gemma3-1b/train_4k cell instead of the 5e7 default.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from benchmarks.common import BenchSetup, run_baseline, run_crosatfl
+    from repro.fl.baselines import BASELINES
+
+    setup = BenchSetup(dataset="eurosat-sim", n_clients=8, n_train=400,
+                       n_test=100, rounds=1, local_epochs=1, k_max=4)
+    if measured_cost:
+        setup = dataclasses.replace(
+            setup, c_flop="measured:gemma3-1b/train_4k")
+    failures = 0
+    methods = ["CroSatFL"] + list(BASELINES)
+    for method in methods:
+        try:
+            if method == "CroSatFL":
+                _, ledger, _ = run_crosatfl(setup, eval_every=False)
+            else:
+                _, ledger, _ = run_baseline(method, setup, eval_every=False)
+            row = ledger.row()
+            ok = (row["gs_comm"] > 0 and
+                  all(np.isfinite(v) and v >= 0 for k, v in row.items()
+                      if k.endswith(("_kj", "_h"))))
+            print(f"{'ok ' if ok else 'BAD'} {method:10s} "
+                  f"gs={row['gs_comm']:3d} intra={row['intra_lisl']:4d} "
+                  f"txE={row['tx_energy_kj']:.3g}kJ "
+                  f"trainE={row['train_energy_kj']:.3g}kJ")
+            failures += 0 if ok else 1
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            failures += 1
+            print(f"FAILED {method}: {type(e).__name__}: {e}")
+    print(f"\nsmoke: {len(methods) - failures}/{len(methods)} algorithms ok")
+    return 1 if failures else 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="1-round engine smoke of all six algorithms")
+    ap.add_argument("--measured-cost", action="store_true",
+                    help="with --smoke: c_flop from HLO dry-run estimates")
     ap.add_argument("--skip", nargs="*", default=[])
     args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke(measured_cost=args.measured_cost)
     quick = [] if args.full else ["--quick"]
 
     from benchmarks import (ablations, comm_breakdown, convergence,

@@ -1,23 +1,28 @@
-"""CroSatFL session controller (paper §IV, Fig. 1).
+"""CroSatFL session controller (paper §IV, Fig. 1) — legacy facade.
 
-Orchestrates one full session over the constellation simulation:
+The orchestration itself lives in the pluggable round engine
+(``repro.fl.engine``): ``Session`` is now ``RoundEngine`` + the CroSatFL
+policy quadruple (StarMask clustering x Skip-One selection x random-k
+cross-aggregation x identity codec). The engine owns the canonical round
+skeleton and the uniform energy/latency accounting shared with all five
+baselines; see DESIGN.md §7 and fl/engine/engine.py.
+
+This module keeps the original public API — ``SessionConfig``,
+``SessionState`` (checkpointed by ckpt/store.py), ``Session.run`` — so
+examples/, benchmarks/, and tests keep importing it unchanged. Golden
+parity with the pre-refactor loop is pinned by
+tests/test_engine_parity.py.
+
+The session flow (engine + CroSatFL policies):
 
   1. GS bootstrap: broadcast w0 to all participating satellites when they
      enter the Canberra visibility window (1 GS comm per cluster master —
-     masters relay over LISLs; the paper's "18 GS communications" for 9
-     clusters = 9 bootstrap + 9 collection).
+     masters relay over LISLs).
   2. StarMask clustering from satellite profiles + LISL feasibility.
-  3. R edge rounds, each:
-       a. Skip-One participant selection per cluster,
-       b. local training (L_loc epochs) on participants,
-       c. intra-cluster upload to master + weighted FedAvg,
-       d. random-k cross-aggregation among reachable masters,
-     with full energy/latency accounting into an EnergyLedger.
+  3. R edge rounds, each: Skip-One selection, local training, intra-cluster
+     upload to master + weighted FedAvg, random-k cross-aggregation among
+     reachable masters, uniform ledger accounting.
   4. On-orbit consolidation (Eq. 38) + single GS downlink.
-
-The training itself is delegated to an ``FLModel`` adapter (fl/client.py),
-so the same controller drives both the paper-faithful CNN-on-EuroSAT-style
-runs and the tiny-LM runs used in tests.
 
 Checkpoint/restart: ``SessionState`` is a plain pytree-of-arrays +
 dataclass state; ``ckpt/`` serializes it at edge-round boundaries. Master
@@ -27,20 +32,15 @@ cluster model" (paper §III-A).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core import skipone
+from repro.core.energy import EnergyLedger
+from repro.core.starmask import Instance, StarMaskParams
+from repro.fl.engine import EngineConfig, SessionState, make_crosatfl
 
-from repro.core import crossagg, skipone
-from repro.core.energy import (CPU, GPU, EnergyLedger, HardwareProfile,
-                               LinkParams, e_gs, e_lisl, e_train, t_gs,
-                               t_lisl, t_train)
-from repro.core.starmask import (ClusteringResult, Instance, StarMaskParams,
-                                 cluster as starmask_cluster)
+__all__ = ["Session", "SessionConfig", "SessionState"]
 
 
 @dataclass(frozen=True)
@@ -49,221 +49,44 @@ class SessionConfig:
     main_rounds: int = 1             # G
     local_epochs: int = 10           # L_loc
     k_nbr: int = 2                   # random-k sampling parameter
-    c_flop: float = 5e7              # FLOPs per sample (model-dependent)
+    c_flop: Any = 5e7                # FLOPs/sample, or "measured:<arch>/<shape>"
     model_bits: float = 8 * 44.7e6   # payload d (ResNet-18 fp32 ~ 44.7 MB)
     seed: int = 0
     skip_one: skipone.SkipOneParams = field(default_factory=skipone.SkipOneParams)
     starmask: StarMaskParams = field(default_factory=StarMaskParams)
 
-
-@dataclass
-class SessionState:
-    """Everything needed to restart mid-session (ckpt/ serializes this)."""
-    round_idx: int
-    cluster_models: Any              # stacked (K, ...) pytree
-    skip_states: list[skipone.SkipOneState]
-    masters: np.ndarray              # (K,) current master satellite ids
-    rng_key: jax.Array
-    ledger: EnergyLedger
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(rounds=self.edge_rounds,
+                            local_epochs=self.local_epochs,
+                            c_flop=self.c_flop, model_bits=self.model_bits,
+                            seed=self.seed)
 
 
 class Session:
     """One CroSatFL session over a simulated constellation.
 
-    ``env`` duck-type (constellation/sim.py provides it):
-        n_clients, profiles: list[HardwareProfile], n_samples: (n,),
-        link_params: LinkParams,
-        lisl_distance(i, j, t) -> meters | inf,
-        master_reach(t) -> (K, K) bool given cluster assignment,
-        gs_window_wait(sat, t) -> (wait_s, distance_m),
-        intra_cluster_distances(cluster, master, t) -> (m,) meters
-    ``model`` duck-type (fl/client.py):
-        init(key) -> params
-        local_train(params, client_id, epochs, key) -> (params', metrics)
-        stack(list_of_params) -> stacked pytree;  unstack inverse
+    See fl/engine/engine.py for the ``env`` and ``model`` duck-types.
     """
 
+    RELAY_FALLBACK_M = 3e6   # nominal relayed path when instantaneously cut
+
     def __init__(self, cfg: SessionConfig, env, model):
+        self.engine = make_crosatfl(cfg.engine_config(), env, model,
+                                    k_nbr=cfg.k_nbr, skip_one=cfg.skip_one,
+                                    starmask=cfg.starmask)
         self.cfg, self.env, self.model = cfg, env, model
-        self.rng = np.random.default_rng(cfg.seed)
+        self.rng = self.engine.rng
 
-    # -- clustering ---------------------------------------------------------
     def make_instance(self) -> Instance:
-        env, cfg = self.env, self.cfg
-        n = env.n_clients
-        alpha = np.array([p.alpha for p in env.profiles])
-        tt = t_train(env.n_samples, cfg.c_flop, alpha, cfg.local_epochs)
-        et = e_train(env.n_samples, cfg.c_flop, env.profiles, cfg.local_epochs)
-        lisl_e = np.zeros((n, n))
-        for i in range(n):
-            for j in range(n):
-                dist = env.lisl_distance(i, j, 0.0)
-                lisl_e[i, j] = (e_lisl(cfg.model_bits, env.link_params.lisl_rate,
-                                       dist, env.link_params)
-                                if np.isfinite(dist) else 1e9)
-        return Instance(
-            share=env.n_samples / env.n_samples.sum(),
-            hw=np.array([p.hw_type for p in env.profiles]),
-            t_comp=tt / cfg.local_epochs,
-            e_train=et,
-            fanout=np.asarray(env.fanout),
-            lisl_e=lisl_e,
-        )
+        """The StarMask problem instance for this env (profiles + LISL
+        energy matrix); exposed for notebooks/benchmarks."""
+        ctx = self.engine._make_ctx(EnergyLedger())
+        return self.engine.clustering.make_instance(ctx)
 
-    # -- session ------------------------------------------------------------
     def run(self, rounds: Optional[int] = None,
             eval_fn: Optional[Callable] = None,
             state: Optional[SessionState] = None,
             policy_params: Optional[dict] = None,
             ) -> tuple[Any, EnergyLedger, list[dict]]:
-        cfg, env = self.cfg, self.env
-        R = rounds if rounds is not None else cfg.edge_rounds
-        key = jax.random.PRNGKey(cfg.seed)
-
-        inst = self.make_instance()
-        key, sub = jax.random.split(key)
-        result = starmask_cluster(inst, cfg.starmask, sub, params=policy_params)
-        assert result.feasible, f"StarMask infeasible, K_min={result.k_min}"
-        clusters = result.clusters
-        K = len(clusters)
-        N_k = np.array([env.n_samples[c].sum() for c in clusters], np.float64)
-
-        lp = env.link_params
-        d = cfg.model_bits
-
-        if state is None:
-            # ---- GS bootstrap: one downlink per cluster master ------------
-            ledger = EnergyLedger()
-            key, sub = jax.random.split(key)
-            w0 = self.model.init(sub)
-            masters = np.array([c[np.argmax(inst.fanout[c])] for c in clusters])
-            t_now = 0.0
-            for mk in masters:
-                wait, dist = env.gs_window_wait(int(mk), t_now)
-                ledger.add_wait(wait)
-                ledger.add_gs(1, e_gs(d, lp.gs_rate, dist, lp),
-                              t_gs(d, lp.gs_rate, dist, lp))
-            # master relays w0 inside its cluster over LISLs
-            for c, mk in zip(clusters, masters):
-                for i in c:
-                    if i == mk:
-                        continue
-                    dist = self._dist(int(mk), int(i), t_now)
-                    ledger.add_intra(1, e_lisl(d, lp.lisl_rate, dist, lp),
-                                     t_lisl(d, lp.lisl_rate, dist, lp))
-            cluster_models = self.model.stack([w0] * K)
-            state = SessionState(
-                round_idx=0, cluster_models=cluster_models,
-                skip_states=[skipone.SkipOneState.init(len(c)) for c in clusters],
-                masters=masters, rng_key=key, ledger=ledger)
-        ledger = state.ledger
-        key = state.rng_key
-
-        alpha = np.array([p.alpha for p in env.profiles])
-        tt_full = t_train(env.n_samples, cfg.c_flop, alpha, cfg.local_epochs)
-        et_full = e_train(env.n_samples, cfg.c_flop, env.profiles,
-                          cfg.local_epochs)
-        hw_rare = self._hw_penalty(inst)
-
-        history: list[dict] = []
-        wall = ledger.wall_clock_s
-        for r in range(state.round_idx, R):
-            t_now = wall
-            round_barrier = 0.0
-            new_models = []
-            models_list = self.model.unstack(state.cluster_models, K)
-            for kc, (c, w_k) in enumerate(zip(clusters, models_list)):
-                # --- Skip-One (Eq. 26-33) ---------------------------------
-                jitter = self.rng.lognormal(0.0, 0.25, len(c))  # transient load
-                tt_r = tt_full[c] * jitter
-                mask, state.skip_states[kc] = skipone.select(
-                    tt_r, et_full[c], hw_rare[c], state.skip_states[kc],
-                    cfg.skip_one, r)
-                part = c[mask]
-                # --- local training (participants only) --------------------
-                key, sub = jax.random.split(key)
-                w_new = self.model.cluster_round(
-                    w_k, part, env.n_samples[part], cfg.local_epochs, sub)
-                new_models.append(w_new)
-                # --- accounting --------------------------------------------
-                barrier = tt_r[mask].max() if mask.any() else 0.0
-                ledger.add_train(float(et_full[c][mask].sum()), float(barrier))
-                # skipped satellites idle at the barrier: latency-only wait
-                ledger.add_wait(float((barrier - tt_r[mask]).sum()
-                                      if mask.any() else 0.0))
-                round_barrier = max(round_barrier, float(barrier))
-                mk = state.masters[kc]
-                for i in part:
-                    if i == mk:
-                        continue
-                    dist = env.lisl_distance(int(i), int(mk), t_now)
-                    if not np.isfinite(dist):
-                        # master migration: re-designate a reachable member
-                        mk = self._migrate(c, i, t_now)
-                        state.masters[kc] = mk
-                        dist = self._dist(int(i), int(mk), t_now)
-                    ledger.add_intra(1, e_lisl(d, lp.lisl_rate, dist, lp),
-                                     t_lisl(d, lp.lisl_rate, dist, lp))
-
-            stacked = self.model.stack(new_models)
-
-            # --- random-k cross-aggregation (Eq. 34-37) ---------------------
-            reach = env.master_reach(state.masters, t_now)
-            groups = crossagg.sample_groups(reach, cfg.k_nbr, self.rng)
-            M = crossagg.mixing_matrix(groups, N_k)
-            stacked = crossagg.apply_mixing(M, stacked)
-            for kc, g in enumerate(groups):
-                for j in g:
-                    if j == kc:
-                        continue
-                    dist = self._dist(int(state.masters[j]),
-                                      int(state.masters[kc]), t_now)
-                    ledger.add_inter(1, e_lisl(d, lp.lisl_rate, dist, lp),
-                                     t_lisl(d, lp.lisl_rate, dist, lp))
-
-            state.cluster_models = stacked
-            state.round_idx = r + 1
-            state.rng_key = key
-            wall += round_barrier
-            ledger.wall_clock_s = wall
-
-            if eval_fn is not None:
-                w_glob = crossagg.consolidate(stacked, N_k)
-                m = eval_fn(w_glob, r)
-                m["round"] = r
-                m.update(ledger.row())
-                history.append(m)
-
-        # ---- consolidation (Eq. 38) + final GS downlink --------------------
-        w_final = crossagg.consolidate(state.cluster_models, N_k)
-        for mk in state.masters:
-            wait, dist = env.gs_window_wait(int(mk), wall)
-            ledger.add_wait(wait)
-            ledger.add_gs(1, e_gs(d, lp.gs_rate, dist, lp),
-                          t_gs(d, lp.gs_rate, dist, lp))
-        return w_final, ledger, history
-
-    # -- helpers -------------------------------------------------------------
-    RELAY_FALLBACK_M = 3e6   # nominal relayed path when instantaneously cut
-
-    def _dist(self, i: int, j: int, t: float) -> float:
-        d = self.env.lisl_distance(i, j, t)
-        return d if np.isfinite(d) else self.RELAY_FALLBACK_M
-
-    def _hw_penalty(self, inst: Instance) -> np.ndarray:
-        """H_i: rare hardware is expensive to skip (Eq. 33)."""
-        frac_gpu = inst.hw.mean()
-        rare_gpu = 1.0 - frac_gpu
-        return np.where(inst.hw == GPU, rare_gpu, frac_gpu)
-
-    def _migrate(self, cluster_ids: np.ndarray, from_sat: int, t_now: float):
-        """Pick the member reachable from ``from_sat`` with max fan-out."""
-        best, best_fo = cluster_ids[0], -1
-        for j in cluster_ids:
-            if j == from_sat:
-                continue
-            if np.isfinite(self.env.lisl_distance(int(from_sat), int(j), t_now)):
-                fo = self.env.fanout[j]
-                if fo > best_fo:
-                    best, best_fo = j, fo
-        return int(best)
+        self.engine.clustering.policy_params = policy_params
+        return self.engine.run(rounds=rounds, eval_fn=eval_fn, state=state)

@@ -1,3 +1,10 @@
-"""FL protocol runtime shared by CroSatFL and the baselines."""
+"""FL protocol runtime shared by CroSatFL and the baselines.
+
+The orchestration layer is the pluggable round engine (``repro.fl.engine``,
+DESIGN.md §7); ``BASELINES`` and ``core.session.Session`` are preset policy
+quadruples over it.
+"""
 from repro.fl.client import ImageFLModel, fedavg  # noqa: F401
-from repro.fl.baselines import BASELINES  # noqa: F401
+from repro.fl.baselines import BASELINES, BaselineConfig  # noqa: F401
+from repro.fl.engine import (EngineConfig, RoundEngine,  # noqa: F401
+                             make_baseline, make_crosatfl)

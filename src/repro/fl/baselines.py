@@ -1,6 +1,9 @@
-"""The five comparison baselines (paper §V-A), each with its native
-communication + synchronization pattern and full energy/latency accounting
-on the same constellation env and model adapter as CroSatFL.
+"""The five comparison baselines (paper §V-A) on the shared round engine.
+
+Each baseline is a policy quadruple over ``repro.fl.engine.RoundEngine``
+(see fl/engine/presets.py) — the bespoke per-baseline loops are gone, so
+all six algorithms share one implementation of the round skeleton and one
+accounting rule (the point of Table II):
 
   FedSyn   — synchronous FedAvg, GS-centric: every round every client
              uploads to the GS and receives the new global model.
@@ -12,32 +15,27 @@ on the same constellation env and model adapter as CroSatFL.
              head which is the only GS contact per round.
   FedSCS   — energy-aware client selection, GS-centric: top-m clients by
              an energy utility participate each round.
-  FedOrbit — FedSCS-style orbital FL with block-minifloat arithmetic:
-             reduced-precision payload (x bits/32) and reduced compute
-             energy (arith_scale).
+  FedOrbit — FedSCS with a block-minifloat payload codec: reduced-precision
+             payload (bits/32) and reduced compute energy (arith_scale).
 
 Baselines are NOT constrained to CroSatFL's once-per-session GS pattern
-(paper §V-A).
+(paper §V-A). ``BASELINES[name](cfg, env, model)`` returns a ready
+``RoundEngine`` (``.run(eval_fn=...)`` as before); golden parity with the
+pre-refactor loops is pinned by tests/test_engine_parity.py.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.energy import (EnergyLedger, e_gs, e_lisl, e_train, t_gs,
-                               t_lisl, t_train)
-from repro.fl.client import fedavg
+from repro.fl.engine import BASELINE_NAMES, EngineConfig, make_baseline
 
 
 @dataclass(frozen=True)
 class BaselineConfig:
     rounds: int = 40
     local_epochs: int = 10
-    c_flop: float = 5e7
+    c_flop: Any = 5e7                # or "measured:<arch>/<shape>"
     model_bits: float = 8 * 44.7e6
     seed: int = 0
     # FedSCS / FedOrbit
@@ -46,207 +44,30 @@ class BaselineConfig:
     minifloat_bits: int = 12           # of 32
     arith_scale: float = 0.5           # compute-energy reduction factor
 
-
-def _profiles_arrays(env):
-    alpha = np.array([p.alpha for p in env.profiles])
-    return alpha
-
-
-class _Engine:
-    """Shared round loop; subclasses define selection + communication."""
-
-    name = "base"
-
-    def __init__(self, cfg: BaselineConfig, env, model):
-        self.cfg, self.env, self.model = cfg, env, model
-        self.rng = np.random.default_rng(cfg.seed)
-        alpha = _profiles_arrays(env)
-        self.tt = t_train(env.n_samples, cfg.c_flop, alpha, cfg.local_epochs)
-        self.et = e_train(env.n_samples, cfg.c_flop, env.profiles,
-                          cfg.local_epochs)
-
-    # hooks ------------------------------------------------------------------
-    def select(self, r: int) -> np.ndarray:
-        return np.arange(self.env.n_clients)
-
-    def communicate(self, participants: np.ndarray, ledger: EnergyLedger,
-                    t_now: float):
-        """Account one round of update collection + redistribution."""
-        raise NotImplementedError
-
-    def payload_bits(self) -> float:
-        return self.cfg.model_bits
-
-    def compute_energy(self, participants: np.ndarray) -> float:
-        return float(self.et[participants].sum())
-
-    # round loop ---------------------------------------------------------------
-    def run(self, eval_fn: Optional[Callable] = None):
-        cfg, env = self.cfg, self.env
-        key = jax.random.PRNGKey(cfg.seed)
-        ledger = EnergyLedger()
-        key, sub = jax.random.split(key)
-        w = self.model.init(sub)
-        history = []
-        wall = 0.0
-        for r in range(cfg.rounds):
-            part = self.select(r)
-            jitter = self.rng.lognormal(0.0, 0.25, len(part))
-            tt_r = self.tt[part] * jitter
-            key, sub = jax.random.split(key)
-            w = self.model.cluster_round(w, part, env.n_samples[part],
-                                         cfg.local_epochs, sub)
-            barrier = float(tt_r.max())
-            ledger.add_train(self.compute_energy(part) * self._arith_scale(),
-                             barrier)
-            ledger.add_wait(float((barrier - tt_r).sum()))
-            wall += barrier
-            wall += self.communicate(part, ledger, wall)
-            ledger.wall_clock_s = wall
-            if eval_fn is not None:
-                m = eval_fn(w, r)
-                m["round"] = r
-                m.update(ledger.row())
-                history.append(m)
-        return w, ledger, history
-
-    def _arith_scale(self) -> float:
-        return 1.0
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(rounds=self.rounds,
+                            local_epochs=self.local_epochs,
+                            c_flop=self.c_flop, model_bits=self.model_bits,
+                            seed=self.seed)
 
 
-class FedSyn(_Engine):
-    name = "FedSyn"
-
-    def communicate(self, part, ledger, t_now):
-        env, d = self.env, self.payload_bits()
-        lp = env.link_params
-        waits = []
-        for i in part:
-            wait, dist = env.gs_window_wait(int(i), t_now)
-            waits.append(wait)
-            # upload + download
-            ledger.add_gs(2, 2 * e_gs(d, lp.gs_rate, dist, lp),
-                          2 * t_gs(d, lp.gs_rate, dist, lp))
-        # synchronous: the round ends when the LAST client has synced;
-        # everyone else idles (latency-only waiting)
-        wmax = max(waits)
-        ledger.add_wait(float(np.sum(wmax - np.asarray(waits))))
-        return wmax
+def build_baseline(name: str, cfg: BaselineConfig, env, model, **kw):
+    """Build (NOT run) the named baseline engine (``**kw``: e.g. FELLO
+    n_clusters); call ``.run(eval_fn=...)`` on the result."""
+    return make_baseline(name, cfg.engine_config(), env, model,
+                         select_m=cfg.select_m,
+                         minifloat_bits=cfg.minifloat_bits,
+                         arith_scale=cfg.arith_scale, **kw)
 
 
-class FedLEO(_Engine):
-    name = "FedLEO"
+class _BaselineFactory:
+    """Keeps the legacy ``BASELINES[name](cfg, env, model)`` call shape."""
 
-    def __init__(self, cfg, env, model):
-        super().__init__(cfg, env, model)
-        planes = env.constellation.plane_of(env.sat_ids)
-        self.groups = [np.flatnonzero(planes == p) for p in np.unique(planes)]
-        # merge singleton planes into neighbors to form propagation chains
-        merged, cur = [], []
-        for g in self.groups:
-            cur = np.concatenate([cur, g]).astype(int) if len(cur) else g
-            if len(cur) >= 3:
-                merged.append(cur)
-                cur = []
-        if len(cur):
-            merged.append(cur)
-        self.groups = merged
+    def __init__(self, name: str):
+        self.name = name
 
-    def communicate(self, part, ledger, t_now):
-        env, d = self.env, self.payload_bits()
-        lp = env.link_params
-        waits = []
-        for g in self.groups:
-            sink = int(g[np.argmax(env.fanout[g])])
-            # chain propagation to sink and back: 2 LISL msgs per non-sink
-            for i in g:
-                if int(i) == sink:
-                    continue
-                dist = env.lisl_distance(int(i), sink, t_now)
-                dist = dist if np.isfinite(dist) else 3e6
-                ledger.add_intra(2, 2 * e_lisl(d, lp.lisl_rate, dist, lp),
-                                 2 * t_lisl(d, lp.lisl_rate, dist, lp))
-            wait, gdist = env.gs_window_wait(sink, t_now)
-            waits.append(wait)
-            ledger.add_gs(2, 2 * e_gs(d, lp.gs_rate, gdist, lp),
-                          2 * t_gs(d, lp.gs_rate, gdist, lp))
-        wmax = max(waits)
-        ledger.add_wait(float(np.sum(wmax - np.asarray(waits))))
-        return wmax
+    def __call__(self, cfg: BaselineConfig, env, model, **kw):
+        return build_baseline(self.name, cfg, env, model, **kw)
 
 
-class FELLO(_Engine):
-    name = "FELLO"
-
-    def __init__(self, cfg, env, model, n_clusters: int = 9):
-        super().__init__(cfg, env, model)
-        # greedy geographic clustering (optical-LISL feasible neighborhoods)
-        n_clusters = max(1, min(n_clusters, env.n_clients // 2))
-        order = np.argsort(-env.fanout)
-        self.clusters = [order[i::n_clusters] for i in range(n_clusters)]
-        self.heads = [int(c[np.argmax(env.fanout[c])]) for c in self.clusters]
-
-    def communicate(self, part, ledger, t_now):
-        env, d = self.env, self.payload_bits()
-        lp = env.link_params
-        # members <-> heads
-        for c, h in zip(self.clusters, self.heads):
-            for i in c:
-                if int(i) == h:
-                    continue
-                dist = env.lisl_distance(int(i), h, t_now)
-                dist = dist if np.isfinite(dist) else 3e6
-                ledger.add_intra(2, 2 * e_lisl(d, lp.lisl_rate, dist, lp),
-                                 2 * t_lisl(d, lp.lisl_rate, dist, lp))
-        # heads chain to elected head
-        elect = self.heads[0]
-        for h in self.heads[1:]:
-            dist = env.lisl_distance(h, elect, t_now)
-            dist = dist if np.isfinite(dist) else 3e6
-            ledger.add_intra(2, 2 * e_lisl(d, lp.lisl_rate, dist, lp),
-                             2 * t_lisl(d, lp.lisl_rate, dist, lp))
-        wait, gdist = env.gs_window_wait(elect, t_now)
-        ledger.add_gs(2, 2 * e_gs(d, lp.gs_rate, gdist, lp),
-                      2 * t_gs(d, lp.gs_rate, gdist, lp))
-        return wait
-
-
-class FedSCS(_Engine):
-    name = "FedSCS"
-
-    def select(self, r):
-        # energy-aware: prefer low-energy, fast clients; rotate by round for
-        # coverage (the original uses a knapsack-style utility)
-        util = -self.et / self.et.max() - 0.5 * self.tt / self.tt.max()
-        noise = self.rng.normal(0, 0.1, len(util))
-        return np.argsort(-(util + noise))[: self.cfg.select_m]
-
-    def communicate(self, part, ledger, t_now):
-        env, d = self.env, self.payload_bits()
-        lp = env.link_params
-        waits = []
-        for i in part:
-            # relay to a GS-visible satellite over 2 LISL hops (up + down)
-            dist = 1.2e6
-            ledger.add_intra(4, 4 * e_lisl(d, lp.lisl_rate, dist, lp),
-                             4 * t_lisl(d, lp.lisl_rate, dist, lp))
-            wait, gdist = env.gs_window_wait(int(i), t_now)
-            waits.append(wait)
-            ledger.add_gs(2, 2 * e_gs(d, lp.gs_rate, gdist, lp),
-                          2 * t_gs(d, lp.gs_rate, gdist, lp))
-        wmax = max(waits)
-        ledger.add_wait(float(np.sum(wmax - np.asarray(waits))))
-        return wmax
-
-
-class FedOrbit(FedSCS):
-    name = "FedOrbit"
-
-    def payload_bits(self):
-        return self.cfg.model_bits * self.cfg.minifloat_bits / 32.0
-
-    def _arith_scale(self):
-        return self.cfg.arith_scale
-
-
-BASELINES = {b.name: b for b in (FedSyn, FedLEO, FELLO, FedSCS, FedOrbit)}
+BASELINES = {name: _BaselineFactory(name) for name in BASELINE_NAMES}

@@ -15,6 +15,7 @@ are masked out of the loss. SGD-momentum, batch size 10 (paper Table I).
 """
 from __future__ import annotations
 
+import inspect
 import math
 from functools import partial
 from typing import Any, Callable, Optional
@@ -94,6 +95,8 @@ class ImageFLModel:
         self.init_fn, self.apply_fn = MODEL_ZOO[model]
         self.model_kw = dict(in_ch=dataset.x.shape[-1],
                              n_classes=dataset.n_classes, **model_kw)
+        if "hw" in inspect.signature(self.init_fn).parameters:
+            self.model_kw.setdefault("hw", dataset.x.shape[1])
         self.batch, self.lr, self.momentum = batch, lr, momentum
         sizes = [len(p) for p in partitions]
         self.n_pad = n_pad or batch * math.ceil(max(sizes) / batch)

@@ -1,0 +1,168 @@
+"""Round-engine core types and policy protocols (DESIGN.md §7).
+
+One orchestrator — ``RoundEngine`` (engine.py) — owns the canonical edge
+round skeleton shared by CroSatFL and every baseline:
+
+    select → local-train → intra-upload → mix → account
+
+and composes four small policy surfaces:
+
+* ``ClusteringPolicy``  — who trains together, and over which
+  communication topology (StarMask, per-plane chains, greedy fan-out
+  clusters, or a single GS-centric cluster).
+* ``SelectionPolicy``   — which cluster members train this round
+  (Skip-One, everyone, top-m energy utility).
+* ``MixingPolicy``      — how models move between rounds (random-k
+  cross-aggregation, GS star, sink chains, head chains) plus the session
+  endpoints (bootstrap distribution, final collection).
+* ``Transport``         — the ONE place GS/LISL energy+latency enter the
+  ``EnergyLedger`` (transport.py), parameterized by a ``PayloadCodec``.
+
+Every algorithm in the repo is a (clustering, selection, mixing, codec)
+quadruple over the same engine (presets.py), so Table-II comparisons are
+guaranteed to use identical accounting by construction.
+
+All protocols are duck-typed; the classes below document the contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Protocol
+
+import numpy as np
+
+from repro.core.energy import EnergyLedger
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Algorithm-independent knobs; policy-specific parameters live on the
+    policy objects themselves.
+
+    ``c_flop`` may be a float (FLOPs per sample) or a ``"measured:"`` spec
+    resolved against compiled-HLO dry-run estimates (launch/measured.py),
+    e.g. ``"measured:gemma3-1b/train_4k"``.
+    """
+    rounds: int = 40
+    local_epochs: int = 10
+    c_flop: Any = 5e7
+    model_bits: float = 8 * 44.7e6
+    seed: int = 0
+
+
+@dataclass
+class ClusterPlan:
+    """Output of a ClusteringPolicy.
+
+    ``clusters`` are the TRAINING clusters (each holds one model between
+    mixes). ``comm_groups``/``heads`` describe the communication topology
+    when it differs from the training partition (FedLEO planes, FELLO
+    optical neighborhoods); GS-centric algorithms train one global model
+    (a single cluster) while routing updates through their native groups.
+    """
+    clusters: list[np.ndarray]
+    masters: Optional[np.ndarray] = None          # (K,) master client ids
+    comm_groups: Optional[list[np.ndarray]] = None
+    heads: Optional[np.ndarray] = None            # per-comm-group head ids
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.clusters)
+
+
+@dataclass
+class RoundSelection:
+    """Output of a SelectionPolicy for one (cluster, round).
+
+    ``ids`` are the engaged member ids; ``mask[i]`` is True when ids[i]
+    trains (False → Skip-One'd: idles at the barrier, latency only);
+    ``tt_r`` is the jittered realized train time per engaged member.
+    """
+    ids: np.ndarray
+    mask: np.ndarray
+    tt_r: np.ndarray
+
+    @property
+    def participants(self) -> np.ndarray:
+        return self.ids[self.mask]
+
+
+@dataclass
+class SessionState:
+    """Everything needed to restart mid-session (ckpt/ serializes this).
+
+    Field names are frozen: ckpt/store.py round-trips them and
+    core.session re-exports the class for callers of the legacy API.
+    ``skip_states`` holds the SelectionPolicy's per-cluster state (Skip-One
+    fairness counters for CroSatFL; None entries for stateless policies).
+    """
+    round_idx: int
+    cluster_models: Any              # stacked (K, ...) pytree
+    skip_states: list
+    masters: np.ndarray              # (K,) current master satellite ids
+    rng_key: Any
+    ledger: EnergyLedger
+
+
+@dataclass
+class EngineContext:
+    """Read-mostly bundle threaded through policies each call."""
+    cfg: EngineConfig
+    env: Any
+    model: Any
+    transport: Any                   # transport.Transport
+    rng: np.random.Generator         # host RNG shared by all policies
+    tt_full: np.ndarray              # (n,) per-round train seconds
+    et_full: np.ndarray              # (n,) per-round train joules
+    hw_penalty: np.ndarray           # (n,) Skip-One hardware-rarity term
+
+    @property
+    def ledger(self) -> EnergyLedger:
+        return self.transport.ledger
+
+
+# ---------------------------------------------------------------------------
+# Protocols (documentation of the duck-type; not enforced at runtime)
+# ---------------------------------------------------------------------------
+
+class ClusteringPolicy(Protocol):
+    def build(self, ctx: EngineContext, key) -> tuple[ClusterPlan, Any]:
+        """Partition clients; may consume PRNG splits from ``key``."""
+        ...
+
+
+class SelectionPolicy(Protocol):
+    def init_state(self, n_members: int) -> Any:
+        """Per-cluster fairness state (None for stateless policies)."""
+        ...
+
+    def select(self, ctx: EngineContext, members: np.ndarray, state: Any,
+               round_idx: int) -> tuple[RoundSelection, Any]:
+        """Draw this round's participants (and their realized runtimes)."""
+        ...
+
+
+class MixingPolicy(Protocol):
+    def bootstrap(self, ctx: EngineContext, plan: ClusterPlan,
+                  state: SessionState) -> None:
+        """Account initial model distribution (GS bootstrap + relays)."""
+        ...
+
+    def upload(self, ctx: EngineContext, plan: ClusterPlan,
+               state: SessionState, kc: int, participants: np.ndarray,
+               t_now: float) -> None:
+        """Account intra-cluster update collection for cluster ``kc``."""
+        ...
+
+    def mix(self, ctx: EngineContext, plan: ClusterPlan, state: SessionState,
+            stacked, N_k: np.ndarray, sels: list[RoundSelection],
+            round_idx: int, t_round: float, t_now: float):
+        """Inter-cluster model movement. Returns (stacked', extra_wall_s)."""
+        ...
+
+    def finalize(self, ctx: EngineContext, plan: ClusterPlan,
+                 state: SessionState, N_k: np.ndarray, wall: float):
+        """Collect the session result. Returns the final global model."""
+        ...

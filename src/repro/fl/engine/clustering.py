@@ -1,0 +1,111 @@
+"""ClusteringPolicy implementations (DESIGN.md §7).
+
+* ``StarMaskClustering``   — the paper's RL clustering with action masking
+  (CroSatFL): training clusters == communication clusters, masters by
+  fan-out.
+* ``SingleCluster``        — one global training cluster (GS-centric
+  FedSyn / FedSCS / FedOrbit).
+* ``PerPlaneGroups``       — one global model, but per-orbital-plane
+  propagation chains as the communication topology (FedLEO).
+* ``GreedyFanoutGroups``   — one global model with greedy optical-LISL
+  neighborhoods and per-neighborhood heads (FELLO).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.energy import e_lisl
+from repro.core.starmask import (Instance, StarMaskParams,
+                                 cluster as starmask_cluster)
+from repro.fl.engine.base import ClusterPlan, EngineContext
+
+
+class StarMaskClustering:
+    """Paper §IV-A: StarMask over satellite profiles + LISL feasibility."""
+
+    def __init__(self, params: StarMaskParams,
+                 policy_params: Optional[dict] = None):
+        self.params = params
+        self.policy_params = policy_params
+
+    def make_instance(self, ctx: EngineContext) -> Instance:
+        env, cfg = ctx.env, ctx.cfg
+        n = env.n_clients
+        lisl_e = np.zeros((n, n))
+        for i in range(n):
+            for j in range(n):
+                dist = env.lisl_distance(i, j, 0.0)
+                lisl_e[i, j] = (e_lisl(cfg.model_bits,
+                                       env.link_params.lisl_rate,
+                                       dist, env.link_params)
+                                if np.isfinite(dist) else 1e9)
+        return Instance(
+            share=env.n_samples / env.n_samples.sum(),
+            hw=np.array([p.hw_type for p in env.profiles]),
+            t_comp=ctx.tt_full / cfg.local_epochs,
+            e_train=ctx.et_full,
+            fanout=np.asarray(env.fanout),
+            lisl_e=lisl_e,
+        )
+
+    def build(self, ctx: EngineContext, key):
+        inst = self.make_instance(ctx)
+        key, sub = jax.random.split(key)
+        result = starmask_cluster(inst, self.params, sub,
+                                  params=self.policy_params)
+        assert result.feasible, f"StarMask infeasible, K_min={result.k_min}"
+        clusters = result.clusters
+        masters = np.array([c[np.argmax(inst.fanout[c])] for c in clusters])
+        plan = ClusterPlan(clusters=clusters, masters=masters,
+                           meta={"instance": inst, "result": result})
+        return plan, key
+
+
+class SingleCluster:
+    """All clients train one global model (GS-centric baselines)."""
+
+    def build(self, ctx: EngineContext, key):
+        return ClusterPlan(clusters=[np.arange(ctx.env.n_clients)]), key
+
+
+class PerPlaneGroups(SingleCluster):
+    """FedLEO: clients grouped by orbital plane into propagation chains;
+    singleton planes merge into neighbors until each chain has >= 3."""
+
+    def build(self, ctx: EngineContext, key):
+        plan, key = super().build(ctx, key)
+        env = ctx.env
+        planes = env.constellation.plane_of(env.sat_ids)
+        groups = [np.flatnonzero(planes == p) for p in np.unique(planes)]
+        merged, cur = [], []
+        for g in groups:
+            cur = np.concatenate([cur, g]).astype(int) if len(cur) else g
+            if len(cur) >= 3:
+                merged.append(cur)
+                cur = []
+        if len(cur):
+            merged.append(cur)
+        plan.comm_groups = merged
+        return plan, key
+
+
+class GreedyFanoutGroups(SingleCluster):
+    """FELLO: greedy geographic clustering into optical-LISL-feasible
+    neighborhoods, highest-fan-out member as head."""
+
+    def __init__(self, n_clusters: int = 9):
+        self.n_clusters = n_clusters
+
+    def build(self, ctx: EngineContext, key):
+        plan, key = super().build(ctx, key)
+        env = ctx.env
+        n_clusters = max(1, min(self.n_clusters, env.n_clients // 2))
+        order = np.argsort(-env.fanout)
+        groups = [order[i::n_clusters] for i in range(n_clusters)]
+        plan.comm_groups = groups
+        plan.heads = np.array([int(c[np.argmax(env.fanout[c])])
+                               for c in groups])
+        return plan, key

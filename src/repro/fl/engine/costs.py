@@ -1,0 +1,143 @@
+"""Feed measured datacenter costs into the orbital energy model.
+
+The FL energy model (core/energy.py, Eq. 2-4) is parameterized by
+``c_flop`` — FLOPs per training sample — which the seed hardcoded at 5e7.
+This module derives it from the while-aware compiled-HLO cost model
+(launch/hlo_cost.py) instead, so Table-II energy rows reflect what the
+dry-run matrix actually measured for a given architecture.
+
+``EngineConfig.c_flop`` (and the legacy ``SessionConfig``/
+``BaselineConfig`` shims) accept a spec string
+
+    "measured:<arch>[/<shape>]"        e.g. "measured:gemma3-1b/train_4k"
+
+resolved by ``resolve_c_flop`` at engine construction:
+
+1. If a dry-run JSONL row for the cell exists (results/dryrun*.jsonl,
+   written by ``python -m repro.launch.dryrun --json``), use its
+   HLO-measured FLOPs divided by the cell's global batch.
+2. Otherwise compile the arch's ``reduced()`` config on the local devices,
+   run ``analyze_hlo`` over the compiled module, and scale per-token FLOPs
+   by the full/reduced active-parameter ratio (6·N·D both ways, so the
+   ratio is exact for the matmul-dominated term; the attention O(S^2)
+   share is approximated).
+
+Estimates are cached in results/measured_cflop.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+_CACHE = None                 # override (tests); default: <results>/measured_cflop.json
+_DRYRUN_GLOBS = ("dryrun_opt.jsonl", "dryrun.jsonl")
+_PROBE_BATCH = 4
+_PROBE_SEQ = 128
+
+
+def _results_dir() -> str:
+    """Where dry-run rows are looked up and the estimate cache lives:
+    next to the explicit cache override when set, else
+    $CROSATFL_RESULTS_DIR, else ./results (matching benchmarks/ output)."""
+    if _CACHE:
+        return os.path.dirname(os.path.abspath(_CACHE))
+    return os.environ.get("CROSATFL_RESULTS_DIR",
+                          os.path.join(os.getcwd(), "results"))
+
+
+def _cache_path() -> str:
+    return _CACHE or os.path.join(_results_dir(), "measured_cflop.json")
+
+
+def _from_dryrun_rows(arch: str, shape: str) -> float | None:
+    """FLOPs/sample from a saved dry-run row (HLO-measured, full scale)."""
+    from repro.configs.base import SHAPES
+    for name in _DRYRUN_GLOBS:
+        path = os.path.join(_results_dir(), name)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                try:
+                    row = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if (row.get("arch") == arch and row.get("shape") == shape
+                        and row.get("status") == "ok"
+                        and row.get("flops", 0) > 0):
+                    return float(row["flops"]) / SHAPES[shape].global_batch
+    return None
+
+
+def _probe_compile(arch: str, shape: str) -> float:
+    """Compile the reduced config locally, measure HLO FLOPs, scale up."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import SHAPES, ShapeConfig, get_config, input_specs
+    from repro.launch import steps as S
+    from repro.launch.hlo_cost import analyze_hlo
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import api
+
+    full = get_config(arch)
+    cfg = full.reduced()
+    probe = ShapeConfig("cflop_probe", _PROBE_SEQ, _PROBE_BATCH, "train")
+    specs = input_specs(cfg, probe)
+    specs["weights"] = jax.ShapeDtypeStruct((probe.global_batch,),
+                                            jnp.float32)
+    params = api.param_specs(cfg)
+    mesh = make_test_mesh()
+    with mesh:
+        step = S.build_fl_train_step(cfg, mesh, clustered=False, tp=False)
+        compiled = jax.jit(step).lower(params, params, specs).compile()
+    flops = analyze_hlo(compiled.as_text()).flops * len(jax.devices())
+    per_token = flops / (probe.global_batch * probe.seq_len)
+    ratio = (api.count_params(full, active_only=True)
+             / api.count_params(cfg, active_only=True))
+    return per_token * ratio * SHAPES[shape].seq_len
+
+
+def measured_c_flop(arch: str = "gemma3-1b", shape: str = "train_4k",
+                    refresh: bool = False) -> float:
+    """FLOPs per training sample for one (arch, shape) cell."""
+    cell = f"{arch}/{shape}"
+    cache_path = _cache_path()
+    cache = {}
+    if os.path.exists(cache_path):
+        try:
+            with open(cache_path) as f:
+                cache = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            cache = {}
+    if not refresh and cell in cache:
+        return float(cache[cell]["c_flop"])
+
+    value = _from_dryrun_rows(arch, shape)
+    source = "dryrun-jsonl"
+    if value is None:
+        value = _probe_compile(arch, shape)
+        source = "reduced-probe"
+    cache[cell] = {"c_flop": value, "source": source}
+    try:
+        os.makedirs(_results_dir(), exist_ok=True)
+        with open(cache_path, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+    except OSError:
+        pass
+    return float(value)
+
+
+def resolve_c_flop(cfg):
+    """Return ``cfg`` with a numeric ``c_flop`` (resolving "measured:..."
+    specs); configs that already carry a number pass through unchanged."""
+    spec = cfg.c_flop
+    if isinstance(spec, (int, float)):
+        return cfg
+    if isinstance(spec, str) and spec.startswith("measured:"):
+        cell = spec[len("measured:"):]
+        arch, _, shape = cell.partition("/")
+        value = measured_c_flop(arch, shape or "train_4k")
+        return dataclasses.replace(cfg, c_flop=value)
+    raise ValueError(f"unsupported c_flop spec: {spec!r}")

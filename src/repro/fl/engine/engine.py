@@ -1,0 +1,173 @@
+"""RoundEngine: the one orchestrator behind CroSatFL and all five
+baselines (DESIGN.md §7).
+
+Owns the canonical edge-round skeleton —
+
+    for each round:
+        for each training cluster:
+            select participants        (SelectionPolicy)
+            local-train                (model adapter)
+            account train/idle         (uniform rule, below)
+            intra-upload               (MixingPolicy.upload)
+        mix cluster models             (MixingPolicy.mix)
+        advance wall clock, evaluate
+
+— plus session endpoints (bootstrap / finalize) and checkpoint-resume.
+
+Uniform accounting rule (paper §III-B/C): per cluster per round,
+
+    barrier   = max realized train time over participants
+    energy   += sum of participant train energy x codec arith_scale
+    waiting  += sum over members of (barrier - work_i)
+                (participants idle for barrier - t_i; Skip-One'd members
+                do no work and idle the full barrier)
+
+Every algorithm gets exactly this rule — accounting drift between
+implementations (the pre-refactor failure mode) is impossible by
+construction.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import crossagg
+from repro.core.energy import GPU, EnergyLedger, e_train, t_train
+from repro.fl.engine.base import (ClusterPlan, EngineConfig, EngineContext,
+                                  RoundSelection, SessionState)
+from repro.fl.engine.costs import resolve_c_flop
+from repro.fl.engine.transport import IdentityCodec, Transport
+
+
+def _hw_penalty(hw: np.ndarray) -> np.ndarray:
+    """H_i: rare hardware is expensive to skip (Eq. 33)."""
+    frac_gpu = hw.mean()
+    rare_gpu = 1.0 - frac_gpu
+    return np.where(hw == GPU, rare_gpu, frac_gpu)
+
+
+class RoundEngine:
+    """One federated session = policies x engine over (env, model).
+
+    ``env`` duck-type (constellation/sim.py provides it):
+        n_clients, profiles, n_samples, link_params, fanout,
+        lisl_distance(i, j, t), master_reach(masters, t),
+        gs_window_wait(sat, t), constellation
+    ``model`` duck-type (fl/client.py):
+        init(key) -> params
+        cluster_round(w, participant_ids, n_samples, epochs, key) -> w'
+        stack(list_of_params) / unstack(stacked, K)
+    """
+
+    def __init__(self, cfg: EngineConfig, env, model, *, clustering,
+                 selection, mixing, codec=None, name: str = "engine"):
+        cfg = resolve_c_flop(cfg)
+        self.cfg, self.env, self.model = cfg, env, model
+        self.clustering, self.selection, self.mixing = \
+            clustering, selection, mixing
+        self.codec = codec if codec is not None else IdentityCodec()
+        self.name = name
+        self.rng = np.random.default_rng(cfg.seed)
+
+        alpha = np.array([p.alpha for p in env.profiles])
+        hw = np.array([p.hw_type for p in env.profiles])
+        self._alpha, self._hw = alpha, hw
+
+    def _make_ctx(self, ledger: EnergyLedger) -> EngineContext:
+        cfg, env = self.cfg, self.env
+        return EngineContext(
+            cfg=cfg, env=env, model=self.model,
+            transport=Transport(ledger, env.link_params, cfg.model_bits,
+                                self.codec),
+            rng=self.rng,
+            tt_full=t_train(env.n_samples, cfg.c_flop, self._alpha,
+                            cfg.local_epochs),
+            et_full=e_train(env.n_samples, cfg.c_flop, env.profiles,
+                            cfg.local_epochs),
+            hw_penalty=_hw_penalty(self._hw))
+
+    # -- uniform per-cluster accounting --------------------------------------
+    @staticmethod
+    def _account_train(ctx: EngineContext, sel: RoundSelection) -> float:
+        mask, tt_r = sel.mask, sel.tt_r
+        barrier = float(tt_r[mask].max()) if mask.any() else 0.0
+        ctx.ledger.add_train(
+            float(ctx.et_full[sel.ids][mask].sum()) * ctx.transport.arith_scale,
+            barrier)
+        ctx.ledger.add_wait(float((barrier - tt_r[mask]).sum()
+                                  + barrier * (~mask).sum()
+                                  if mask.any() else 0.0))
+        return barrier
+
+    # -- session -------------------------------------------------------------
+    def run(self, rounds: Optional[int] = None,
+            eval_fn: Optional[Callable] = None,
+            state: Optional[SessionState] = None,
+            ):
+        cfg, env, model = self.cfg, self.env, self.model
+        R = rounds if rounds is not None else cfg.rounds
+        key = jax.random.PRNGKey(cfg.seed)
+
+        ledger = state.ledger if state is not None else EnergyLedger()
+        ctx = self._make_ctx(ledger)
+        plan, key = self.clustering.build(ctx, key)
+        K = plan.n_clusters
+        N_k = np.array([env.n_samples[c].sum() for c in plan.clusters],
+                       np.float64)
+
+        if state is None:
+            key, sub = jax.random.split(key)
+            w0 = model.init(sub)
+            masters = (plan.masters if plan.masters is not None
+                       else np.zeros(0, int))
+            state = SessionState(
+                round_idx=0, cluster_models=model.stack([w0] * K),
+                skip_states=[self.selection.init_state(len(c))
+                             for c in plan.clusters],
+                masters=masters, rng_key=key, ledger=ledger)
+            self.mixing.bootstrap(ctx, plan, state)
+        key = state.rng_key
+
+        history: list[dict] = []
+        wall = ledger.wall_clock_s
+        for r in range(state.round_idx, R):
+            t_round = wall
+            round_barrier = 0.0
+            sels: list[RoundSelection] = []
+            new_models = []
+            models_list = model.unstack(state.cluster_models, K)
+            for kc, (c, w_k) in enumerate(zip(plan.clusters, models_list)):
+                sel, state.skip_states[kc] = self.selection.select(
+                    ctx, c, state.skip_states[kc], r)
+                sels.append(sel)
+                part = sel.participants
+                key, sub = jax.random.split(key)
+                new_models.append(model.cluster_round(
+                    w_k, part, env.n_samples[part], cfg.local_epochs, sub))
+                round_barrier = max(round_barrier,
+                                    self._account_train(ctx, sel))
+                self.mixing.upload(ctx, plan, state, kc, part, t_round)
+
+            stacked = model.stack(new_models)
+            stacked, dt_comm = self.mixing.mix(
+                ctx, plan, state, stacked, N_k, sels, r,
+                t_round, wall + round_barrier)
+
+            state.cluster_models = stacked
+            state.round_idx = r + 1
+            state.rng_key = key
+            wall += round_barrier
+            wall += dt_comm
+            ledger.wall_clock_s = wall
+
+            if eval_fn is not None:
+                w_glob = crossagg.consolidate(stacked, N_k)
+                m = eval_fn(w_glob, r)
+                m["round"] = r
+                m.update(ledger.row())
+                history.append(m)
+
+        w_final = self.mixing.finalize(ctx, plan, state, N_k, wall)
+        return w_final, ledger, history

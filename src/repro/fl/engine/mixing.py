@@ -1,0 +1,214 @@
+"""MixingPolicy implementations (DESIGN.md §7).
+
+How models move between training clusters each round, plus the session
+endpoints (bootstrap distribution / final collection). All communication
+is accounted through ``ctx.transport`` — no policy touches the ledger's
+energy arithmetic directly.
+
+* ``CrossAggMixing``     — CroSatFL: intra-cluster upload to masters (with
+  state-free master migration), random-k cross-aggregation among reachable
+  masters, GS contact only at bootstrap + final collection.
+* ``GSStarMixing``       — FedSyn: every participant syncs up+down with the
+  GS every round; the round closes when the last client has synced.
+* ``SinkChainMixing``    — FedLEO: updates propagate along per-plane chains
+  to a sink; sinks are the only GS contacts.
+* ``HeadChainMixing``    — FELLO: members upload to neighborhood heads,
+  heads chain to one elected head, the single GS contact per round.
+* ``RelayedGSStarMixing``— FedSCS / FedOrbit: participants relay over two
+  LISL hops to a GS-visible satellite, then sync with the GS.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import crossagg
+from repro.fl.engine.base import (ClusterPlan, EngineContext, RoundSelection,
+                                  SessionState)
+
+_CHAIN_FALLBACK_M = 3e6       # chain hop when the direct link is cut
+_RELAY_HOP_M = 1.2e6          # FedSCS nominal LISL relay hop
+
+
+def _finite_or(dist: float, fallback: float) -> float:
+    return dist if np.isfinite(dist) else fallback
+
+
+class CrossAggMixing:
+    """Paper §IV-C (Eq. 34-38) + §III-A master migration."""
+
+    def __init__(self, k_nbr: int = 2):
+        self.k_nbr = k_nbr
+
+    # -- helpers -------------------------------------------------------------
+    def _dist(self, ctx, i: int, j: int, t: float) -> float:
+        return _finite_or(ctx.env.lisl_distance(int(i), int(j), t),
+                          ctx.transport.RELAY_FALLBACK_M)
+
+    def _migrate(self, ctx, cluster_ids: np.ndarray, from_sat: int,
+                 t_now: float) -> int:
+        """Pick the member reachable from ``from_sat`` with max fan-out."""
+        env = ctx.env
+        best, best_fo = cluster_ids[0], -1
+        for j in cluster_ids:
+            if j == from_sat:
+                continue
+            if np.isfinite(env.lisl_distance(int(from_sat), int(j), t_now)):
+                fo = env.fanout[j]
+                if fo > best_fo:
+                    best, best_fo = j, fo
+        return int(best)
+
+    # -- MixingPolicy --------------------------------------------------------
+    def bootstrap(self, ctx: EngineContext, plan: ClusterPlan,
+                  state: SessionState) -> None:
+        """GS bootstrap: one downlink per cluster master, then each master
+        relays w0 inside its cluster over LISLs."""
+        env, tr = ctx.env, ctx.transport
+        t_now = 0.0
+        for mk in state.masters:
+            wait, dist = env.gs_window_wait(int(mk), t_now)
+            tr.wait(wait)
+            tr.gs(1, dist)
+        for c, mk in zip(plan.clusters, state.masters):
+            for i in c:
+                if i == mk:
+                    continue
+                tr.intra(1, self._dist(ctx, int(mk), int(i), t_now))
+
+    def upload(self, ctx: EngineContext, plan: ClusterPlan,
+               state: SessionState, kc: int, participants: np.ndarray,
+               t_now: float) -> None:
+        env, tr = ctx.env, ctx.transport
+        mk = state.masters[kc]
+        for i in participants:
+            if i == mk:
+                continue
+            dist = env.lisl_distance(int(i), int(mk), t_now)
+            if not np.isfinite(dist):
+                # master migration: re-designate a reachable member
+                mk = self._migrate(ctx, plan.clusters[kc], i, t_now)
+                state.masters[kc] = mk
+                dist = self._dist(ctx, int(i), int(mk), t_now)
+            tr.intra(1, dist)
+
+    def mix(self, ctx: EngineContext, plan: ClusterPlan, state: SessionState,
+            stacked, N_k: np.ndarray, sels: list[RoundSelection],
+            round_idx: int, t_round: float, t_now: float):
+        env, tr = ctx.env, ctx.transport
+        reach = env.master_reach(state.masters, t_round)
+        groups = crossagg.sample_groups(reach, self.k_nbr, ctx.rng)
+        M = crossagg.mixing_matrix(groups, N_k)
+        stacked = crossagg.apply_mixing(M, stacked)
+        for kc, g in enumerate(groups):
+            for j in g:
+                if j == kc:
+                    continue
+                tr.inter(1, self._dist(ctx, int(state.masters[j]),
+                                       int(state.masters[kc]), t_round))
+        return stacked, 0.0
+
+    def finalize(self, ctx: EngineContext, plan: ClusterPlan,
+                 state: SessionState, N_k: np.ndarray, wall: float):
+        """Consolidation (Eq. 38) + single GS downlink per master."""
+        env, tr = ctx.env, ctx.transport
+        w_final = crossagg.consolidate(state.cluster_models, N_k)
+        for mk in state.masters:
+            wait, dist = env.gs_window_wait(int(mk), wall)
+            tr.wait(wait)
+            tr.gs(1, dist)
+        return w_final
+
+
+class _GSCentricMixing:
+    """Shared no-op endpoints: GS-centric baselines fold model download
+    into their per-round sync, so bootstrap/upload/finalize add nothing."""
+
+    def bootstrap(self, ctx, plan, state) -> None:
+        pass
+
+    def upload(self, ctx, plan, state, kc, participants, t_now) -> None:
+        pass
+
+    def finalize(self, ctx, plan, state, N_k, wall):
+        return crossagg.consolidate(state.cluster_models, N_k)
+
+    def _barrier_waits(self, tr, waits: list[float]) -> float:
+        """Synchronous round: ends when the LAST client has synced;
+        everyone else idles (latency-only waiting)."""
+        wmax = max(waits)
+        tr.wait(float(np.sum(wmax - np.asarray(waits))))
+        return wmax
+
+
+class GSStarMixing(_GSCentricMixing):
+    """FedSyn: per participant, one upload + one download per round."""
+
+    def mix(self, ctx, plan, state, stacked, N_k, sels, round_idx,
+            t_round, t_now):
+        env, tr = ctx.env, ctx.transport
+        waits = []
+        for i in sels[0].participants:
+            wait, dist = env.gs_window_wait(int(i), t_now)
+            waits.append(wait)
+            tr.gs(2, dist)
+        return stacked, self._barrier_waits(tr, waits)
+
+
+class SinkChainMixing(_GSCentricMixing):
+    """FedLEO: chain propagation to per-plane sinks, sinks talk to GS."""
+
+    def mix(self, ctx, plan, state, stacked, N_k, sels, round_idx,
+            t_round, t_now):
+        env, tr = ctx.env, ctx.transport
+        waits = []
+        for g in plan.comm_groups:
+            sink = int(g[np.argmax(env.fanout[g])])
+            # chain to sink and back: 2 LISL msgs per non-sink member
+            for i in g:
+                if int(i) == sink:
+                    continue
+                tr.intra(2, _finite_or(env.lisl_distance(int(i), sink, t_now),
+                                       _CHAIN_FALLBACK_M))
+            wait, gdist = env.gs_window_wait(sink, t_now)
+            waits.append(wait)
+            tr.gs(2, gdist)
+        return stacked, self._barrier_waits(tr, waits)
+
+
+class HeadChainMixing(_GSCentricMixing):
+    """FELLO: members -> heads -> elected head -> single GS contact."""
+
+    def mix(self, ctx, plan, state, stacked, N_k, sels, round_idx,
+            t_round, t_now):
+        env, tr = ctx.env, ctx.transport
+        heads = plan.heads
+        for c, h in zip(plan.comm_groups, heads):
+            for i in c:
+                if int(i) == int(h):
+                    continue
+                tr.intra(2, _finite_or(
+                    env.lisl_distance(int(i), int(h), t_now),
+                    _CHAIN_FALLBACK_M))
+        elect = int(heads[0])
+        for h in heads[1:]:
+            tr.intra(2, _finite_or(env.lisl_distance(int(h), elect, t_now),
+                                   _CHAIN_FALLBACK_M))
+        wait, gdist = env.gs_window_wait(elect, t_now)
+        tr.gs(2, gdist)
+        return stacked, wait
+
+
+class RelayedGSStarMixing(_GSCentricMixing):
+    """FedSCS / FedOrbit: 2 LISL relay hops (up + down) to a GS-visible
+    satellite, then one GS up + down per participant."""
+
+    def mix(self, ctx, plan, state, stacked, N_k, sels, round_idx,
+            t_round, t_now):
+        env, tr = ctx.env, ctx.transport
+        waits = []
+        for i in sels[0].participants:
+            tr.intra(4, _RELAY_HOP_M)
+            wait, gdist = env.gs_window_wait(int(i), t_now)
+            waits.append(wait)
+            tr.gs(2, gdist)
+        return stacked, self._barrier_waits(tr, waits)

@@ -1,0 +1,80 @@
+"""Policy quadruples for the paper's six algorithms (DESIGN.md §7).
+
+Each algorithm is ~a handful of lines here: pick a clustering, a
+selection, a mixing policy and (optionally) a payload codec, and hand them
+to the shared ``RoundEngine``. Adding an FL variant means writing a new
+policy, not a new loop.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.skipone import SkipOneParams
+from repro.core.starmask import StarMaskParams
+from repro.fl.engine.base import EngineConfig
+from repro.fl.engine.clustering import (GreedyFanoutGroups, PerPlaneGroups,
+                                        SingleCluster, StarMaskClustering)
+from repro.fl.engine.engine import RoundEngine
+from repro.fl.engine.mixing import (CrossAggMixing, GSStarMixing,
+                                    HeadChainMixing, RelayedGSStarMixing,
+                                    SinkChainMixing)
+from repro.fl.engine.selection import (AllParticipate, SkipOneSelection,
+                                       TopMEnergyUtility)
+from repro.fl.engine.transport import BlockMinifloatCodec
+
+
+def make_crosatfl(cfg: EngineConfig, env, model, *,
+                  k_nbr: int = 2,
+                  skip_one: Optional[SkipOneParams] = None,
+                  starmask: Optional[StarMaskParams] = None,
+                  policy_params: Optional[dict] = None) -> RoundEngine:
+    """CroSatFL = StarMask clustering x Skip-One x random-k cross-agg."""
+    return RoundEngine(
+        cfg, env, model,
+        clustering=StarMaskClustering(starmask or StarMaskParams(),
+                                      policy_params=policy_params),
+        selection=SkipOneSelection(skip_one or SkipOneParams()),
+        mixing=CrossAggMixing(k_nbr=k_nbr),
+        name="CroSatFL")
+
+
+def make_baseline(name: str, cfg: EngineConfig, env, model, *,
+                  select_m: int = 16, minifloat_bits: int = 12,
+                  arith_scale: float = 0.5,
+                  n_clusters: int = 9) -> RoundEngine:
+    """The five comparison baselines (paper §V-A) as policy quadruples.
+
+      FedSyn   = single cluster x all x GS star
+      FedLEO   = per-plane chains x all x sink-chain
+      FELLO    = greedy fan-out heads x all x head-chain
+      FedSCS   = single cluster x top-m utility x relayed GS star
+      FedOrbit = FedSCS x block-minifloat codec
+    """
+    if name == "FedSyn":
+        policies = dict(clustering=SingleCluster(),
+                        selection=AllParticipate(),
+                        mixing=GSStarMixing())
+    elif name == "FedLEO":
+        policies = dict(clustering=PerPlaneGroups(),
+                        selection=AllParticipate(),
+                        mixing=SinkChainMixing())
+    elif name == "FELLO":
+        policies = dict(clustering=GreedyFanoutGroups(n_clusters=n_clusters),
+                        selection=AllParticipate(),
+                        mixing=HeadChainMixing())
+    elif name == "FedSCS":
+        policies = dict(clustering=SingleCluster(),
+                        selection=TopMEnergyUtility(select_m=select_m),
+                        mixing=RelayedGSStarMixing())
+    elif name == "FedOrbit":
+        policies = dict(clustering=SingleCluster(),
+                        selection=TopMEnergyUtility(select_m=select_m),
+                        mixing=RelayedGSStarMixing(),
+                        codec=BlockMinifloatCodec(bits=minifloat_bits,
+                                                  arith_scale=arith_scale))
+    else:
+        raise KeyError(f"unknown baseline {name!r}")
+    return RoundEngine(cfg, env, model, name=name, **policies)
+
+
+BASELINE_NAMES = ("FedSyn", "FedLEO", "FELLO", "FedSCS", "FedOrbit")

@@ -1,0 +1,71 @@
+"""SelectionPolicy implementations (DESIGN.md §7).
+
+Each policy draws this round's transient-load jitter itself (lognormal
+sigma=0.25 over the engaged members, from the shared host RNG) so realized
+runtimes feed selection where the algorithm calls for it (Skip-One) and
+follow it where it doesn't (top-m utility).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import skipone
+from repro.fl.engine.base import EngineContext, RoundSelection
+
+JITTER_SIGMA = 0.25
+
+
+class AllParticipate:
+    """Everyone trains every round (FedSyn / FedLEO / FELLO)."""
+
+    def init_state(self, n_members: int):
+        return None
+
+    def select(self, ctx: EngineContext, members: np.ndarray, state,
+               round_idx: int):
+        jitter = ctx.rng.lognormal(0.0, JITTER_SIGMA, len(members))
+        tt_r = ctx.tt_full[members] * jitter
+        return RoundSelection(members, np.ones(len(members), bool),
+                              tt_r), state
+
+
+class SkipOneSelection:
+    """Paper §IV-B (Eq. 26-33): skip at most one satellite per cluster per
+    round under the fairness-constrained utility."""
+
+    def __init__(self, params: skipone.SkipOneParams):
+        self.params = params
+
+    def init_state(self, n_members: int):
+        return skipone.SkipOneState.init(n_members)
+
+    def select(self, ctx: EngineContext, members: np.ndarray, state,
+               round_idx: int):
+        jitter = ctx.rng.lognormal(0.0, JITTER_SIGMA, len(members))
+        tt_r = ctx.tt_full[members] * jitter
+        mask, state = skipone.select(tt_r, ctx.et_full[members],
+                                     ctx.hw_penalty[members], state,
+                                     self.params, round_idx)
+        return RoundSelection(members, mask, tt_r), state
+
+
+class TopMEnergyUtility:
+    """FedSCS-style energy-aware client selection: top-m by a noised
+    energy/latency utility (the original uses a knapsack-style utility);
+    the noise rotates participation across rounds."""
+
+    def __init__(self, select_m: int = 16):
+        self.select_m = select_m
+
+    def init_state(self, n_members: int):
+        return None
+
+    def select(self, ctx: EngineContext, members: np.ndarray, state,
+               round_idx: int):
+        et, tt = ctx.et_full[members], ctx.tt_full[members]
+        util = -et / et.max() - 0.5 * tt / tt.max()
+        noise = ctx.rng.normal(0, 0.1, len(util))
+        part = members[np.argsort(-(util + noise))[: self.select_m]]
+        jitter = ctx.rng.lognormal(0.0, JITTER_SIGMA, len(part))
+        tt_r = ctx.tt_full[part] * jitter
+        return RoundSelection(part, np.ones(len(part), bool), tt_r), state

@@ -1,0 +1,82 @@
+"""Transport: the single entry point of communication energy/latency into
+the ledger, with a payload-codec hook (DESIGN.md §7).
+
+Every GS or LISL message any policy accounts goes through one of the
+three methods below, so all six algorithms share the exact same Eq. 5-6 /
+12-13 arithmetic and the same payload definition. Compression schemes
+(FedOrbit's block-minifloat, future quantizers) are codecs — they scale
+the payload bits and the arithmetic energy, never fork the accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.energy import (EnergyLedger, LinkParams, e_gs, e_lisl, t_gs,
+                               t_lisl)
+
+
+@dataclass(frozen=True)
+class IdentityCodec:
+    """Full-precision payload (every algorithm except FedOrbit)."""
+    name: str = "identity"
+    arith_scale: float = 1.0         # compute-energy multiplier
+
+    def payload_bits(self, model_bits: float) -> float:
+        return model_bits
+
+
+@dataclass(frozen=True)
+class BlockMinifloatCodec:
+    """FedOrbit's reduced-precision arithmetic: ``bits``-of-32 payload and
+    ``arith_scale``-scaled compute energy (paper §V-A)."""
+    bits: int = 12
+    arith_scale: float = 0.5
+    name: str = "block-minifloat"
+
+    def payload_bits(self, model_bits: float) -> float:
+        return model_bits * self.bits / 32.0
+
+
+class Transport:
+    """Accounts model-payload messages into an EnergyLedger.
+
+    ``gs``/``intra``/``inter`` add ``n`` messages of one codec-encoded
+    model payload each over the given distance; ``wait`` adds latency-only
+    idle time (no energy, paper §III-C).
+    """
+
+    RELAY_FALLBACK_M = 3e6   # nominal relayed path when instantaneously cut
+
+    def __init__(self, ledger: EnergyLedger, link_params: LinkParams,
+                 model_bits: float, codec=None):
+        self.ledger = ledger
+        self.lp = link_params
+        self.model_bits = model_bits
+        self.codec = codec if codec is not None else IdentityCodec()
+
+    @property
+    def payload_bits(self) -> float:
+        return self.codec.payload_bits(self.model_bits)
+
+    @property
+    def arith_scale(self) -> float:
+        return self.codec.arith_scale
+
+    # -- message accounting --------------------------------------------------
+    def gs(self, n: int, distance_m: float) -> None:
+        d, lp = self.payload_bits, self.lp
+        self.ledger.add_gs(n, n * e_gs(d, lp.gs_rate, distance_m, lp),
+                           n * t_gs(d, lp.gs_rate, distance_m, lp))
+
+    def intra(self, n: int, distance_m: float) -> None:
+        d, lp = self.payload_bits, self.lp
+        self.ledger.add_intra(n, n * e_lisl(d, lp.lisl_rate, distance_m, lp),
+                              n * t_lisl(d, lp.lisl_rate, distance_m, lp))
+
+    def inter(self, n: int, distance_m: float) -> None:
+        d, lp = self.payload_bits, self.lp
+        self.ledger.add_inter(n, n * e_lisl(d, lp.lisl_rate, distance_m, lp),
+                              n * t_lisl(d, lp.lisl_rate, distance_m, lp))
+
+    def wait(self, seconds: float) -> None:
+        self.ledger.add_wait(float(seconds))

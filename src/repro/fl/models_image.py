@@ -33,7 +33,8 @@ def _he(key, *shape):
 # SmallCNN
 # ---------------------------------------------------------------------------
 
-def cnn_init(key, in_ch: int = 3, n_classes: int = 10, width: int = 16):
+def cnn_init(key, in_ch: int = 3, n_classes: int = 10, width: int = 16,
+             hw: int = 16):
     ks = iter(jax.random.split(key, 8))
     return {
         "c1": _he(next(ks), 3, 3, in_ch, width),
@@ -44,6 +45,13 @@ def cnn_init(key, in_ch: int = 3, n_classes: int = 10, width: int = 16):
         "b3": jnp.zeros(2 * width),
         "w": _he(next(ks), 2 * width, n_classes),
         "b": jnp.zeros(n_classes),
+        # zero-init linear shortcut (matched-filter head): the global
+        # average pool discards spatial phase, so the conv path alone needs
+        # many epochs before templates become separable — far more than an
+        # edge round budget. The shortcut lets the pixel-level matched
+        # filter emerge within the first rounds without perturbing the
+        # conv path at init.
+        "lw": jnp.zeros((hw * hw * in_ch, n_classes)),
     }
 
 
@@ -56,7 +64,8 @@ def cnn_apply(params, x):
                           "VALID")
     h = jax.nn.relu(_conv(h, params["c3"]) + params["b3"])
     h = h.mean((1, 2))                       # global average pool
-    return h @ params["w"] + params["b"]
+    logits = h @ params["w"] + params["b"]
+    return logits + x.reshape(x.shape[0], -1) @ params["lw"]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,94 @@
+"""Regenerate tests/golden_engine.json — pre-refactor reference ledgers.
+
+    PYTHONPATH=src python tests/golden_capture.py
+
+The JSON pins the EnergyLedger of one CroSatFL session and one run per
+baseline at fixed seed on the shared tiny setup (the same fixture
+tests/test_session.py uses), produced by the FROZEN pre-refactor
+implementations in tests/reference_impl.py. The ledger is pure host-side
+numpy, so it is reproducible across processes and machines; model weights
+are NOT pinned here (XLA CPU results are only bit-reproducible within one
+process — test_engine_parity.py compares weights against reference_impl
+in-process instead).
+
+Regenerate ONLY when an intentional accounting/protocol change
+invalidates the reference, and say so in the commit message.
+"""
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax  # noqa: E402
+
+from repro.constellation import ConstellationEnv  # noqa: E402
+from repro.core.starmask import StarMaskParams  # noqa: E402
+from repro.data.synth import dirichlet_partition, make_dataset  # noqa: E402
+from repro.fl.client import ImageFLModel  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "golden_engine.json")
+
+
+def build_setup():
+    ds = make_dataset("eurosat-sim", n=600, seed=0)
+    test = make_dataset("eurosat-sim", n=200, seed=99)
+    n_clients = 8
+    parts = dirichlet_partition(ds.y, n_clients, alpha=100.0, seed=0)
+    env = ConstellationEnv(
+        n_clients=n_clients,
+        n_samples=np.array([len(p) for p in parts], float), seed=0)
+    model = ImageFLModel(ds, parts, test)
+    return env, model
+
+
+def session_config(model):
+    from repro.core.session import SessionConfig
+    return SessionConfig(edge_rounds=3, local_epochs=1, k_nbr=2,
+                         model_bits=model.model_bits(),
+                         starmask=StarMaskParams(k_max=4, m_min=2))
+
+
+def baseline_config(model):
+    from repro.fl.baselines import BaselineConfig
+    return BaselineConfig(rounds=2, local_epochs=1,
+                          model_bits=model.model_bits())
+
+
+def weights_digest(w) -> str:
+    flat, _ = jax.tree_util.tree_flatten_with_path(w)
+    h = hashlib.sha256()
+    for path, leaf in flat:
+        h.update(str(path).encode())
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def main():
+    from reference_impl import REFERENCE_BASELINES, reference_session_run
+
+    golden = {}
+    env, model = build_setup()
+    _, ledger, _ = reference_session_run(session_config(model), env, model)
+    golden["CroSatFL"] = {"ledger": dataclasses.asdict(ledger)}
+
+    for name, ref_cls in REFERENCE_BASELINES.items():
+        env, model = build_setup()
+        _, ledger, _ = ref_cls(baseline_config(model), env, model).run()
+        golden[name] = {"ledger": dataclasses.asdict(ledger)}
+
+    with open(OUT, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {OUT}")
+    for k, v in golden.items():
+        print(f"{k:10s} wait={v['ledger']['waiting_time_s']:.6g} "
+              f"gs={v['ledger']['gs_count']}")
+
+
+if __name__ == "__main__":
+    main()

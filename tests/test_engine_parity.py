@@ -1,0 +1,91 @@
+"""Golden parity: the pluggable RoundEngine must reproduce the
+pre-refactor ``Session`` / per-baseline loops bit-for-bit at fixed seed.
+
+Two layers of pinning:
+
+* cross-process: tests/golden_engine.json holds the host-side (and hence
+  machine-reproducible) EnergyLedger of every algorithm, captured from the
+  frozen pre-refactor implementations (tests/golden_capture.py).
+* in-process: the frozen pre-refactor loops (tests/reference_impl.py) run
+  side-by-side with the engine and the final weights must match
+  bit-for-bit (XLA CPU results are only reproducible within one process,
+  so weights cannot be pinned in JSON).
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.session import Session
+from repro.fl.baselines import BASELINES
+
+from golden_capture import (baseline_config, build_setup, session_config,
+                            weights_digest)
+from reference_impl import REFERENCE_BASELINES, reference_session_run
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_engine.json")
+
+LEDGER_COUNT_FIELDS = ("intra_lisl_count", "inter_lisl_count", "gs_count")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def assert_ledger_equal(ledger, want: dict):
+    got = dataclasses.asdict(ledger)
+    assert set(got) == set(want)
+    for k, v in want.items():
+        assert got[k] == v, (k, got[k], v)   # bit-for-bit, counts and floats
+
+
+class TestCroSatFLParity:
+    def test_session_matches_reference_and_golden(self, golden):
+        env, model = build_setup()
+        cfg = session_config(model)
+        eval_fn = lambda p, r: model.evaluate(p)   # noqa: E731
+        w_eng, led_eng, hist_eng = Session(cfg, env, model).run(
+            eval_fn=eval_fn)
+
+        env, model = build_setup()
+        w_ref, led_ref, hist_ref = reference_session_run(
+            cfg, env, model, eval_fn=eval_fn)
+
+        assert_ledger_equal(led_eng, dataclasses.asdict(led_ref))
+        assert_ledger_equal(led_eng, golden["CroSatFL"]["ledger"])
+        assert weights_digest(w_eng) == weights_digest(w_ref)
+        assert ([h["acc"] for h in hist_eng]
+                == [h["acc"] for h in hist_ref])
+
+    def test_skipped_idle_regression(self, golden):
+        """Regression pin for the skipped-satellite idle accounting fix:
+        pre-fix core/session.py summed the barrier wait over participants
+        only; the golden waiting time includes the full-barrier idle of
+        every Skip-One'd member and must stay exactly this value."""
+        want = golden["CroSatFL"]["ledger"]["waiting_time_s"]
+        assert want == 155946.62820002434
+
+
+class TestBaselineParity:
+    @pytest.mark.parametrize("name", list(BASELINES))
+    def test_baseline_matches_reference_and_golden(self, name, golden):
+        env, model = build_setup()
+        cfg = baseline_config(model)
+        eval_fn = lambda p, r: model.evaluate(p)   # noqa: E731
+        eng = BASELINES[name](cfg, env, model)
+        assert eng.name == name
+        w_eng, led_eng, hist_eng = eng.run(eval_fn=eval_fn)
+
+        env, model = build_setup()
+        ref = REFERENCE_BASELINES[name](cfg, env, model)
+        w_ref, led_ref, hist_ref = ref.run(eval_fn=eval_fn)
+
+        assert_ledger_equal(led_eng, dataclasses.asdict(led_ref))
+        assert_ledger_equal(led_eng, golden[name]["ledger"])
+        assert weights_digest(w_eng) == weights_digest(w_ref)
+        assert ([h["acc"] for h in hist_eng]
+                == [h["acc"] for h in hist_ref])
