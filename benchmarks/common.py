@@ -86,6 +86,19 @@ def run_baseline(name: str, setup: BenchSetup, eval_every: bool = True):
     return eng.run(eval_fn=eval_fn)
 
 
+def run_scenario(name: str, setup: BenchSetup, eval_every: bool = True,
+                 **kw):
+    """Scenario-zoo presets (fl/engine/presets.SCENARIO_NAMES): CroSatFL's
+    quadruple with one policy swapped (pacing / gossip-only / codec map)."""
+    from repro.fl.engine import make_scenario
+    env, model = setup.build()
+    scfg = setup.session_config(model)
+    eng = make_scenario(name, scfg.engine_config(), env, model,
+                        k_nbr=scfg.k_nbr, starmask=scfg.starmask, **kw)
+    eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
+    return eng.run(eval_fn=eval_fn)
+
+
 def save_rows(name: str, rows: list[dict]):
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, f"{name}.jsonl")

@@ -14,18 +14,25 @@ import time
 
 
 def smoke(measured_cost: bool = False) -> int:
-    """1-round run of all six algorithms on a tiny setup through the
-    shared RoundEngine — catches engine regressions in the benchmark
-    entry points (CI runs this; it is much cheaper than any --quick
-    profile). ``measured_cost``: resolve c_flop from the compiled-HLO
-    estimate for the gemma3-1b/train_4k cell instead of the 5e7 default.
+    """1-round run of all six algorithms PLUS the scenario-zoo presets
+    (semi-sync/async pacing, gossip-only, per-cluster codec map) on a tiny
+    setup through the shared RoundEngine — catches engine regressions in
+    the benchmark entry points (CI runs this; it is much cheaper than any
+    --quick profile). Writes every ledger to results/smoke_ledgers.json so
+    CI can upload them as a diffable artifact. ``measured_cost``: resolve
+    c_flop from the compiled-HLO estimate for the gemma3-1b/train_4k cell
+    instead of the 5e7 default.
     """
     import dataclasses
+    import json
+    import os
 
     import numpy as np
 
-    from benchmarks.common import BenchSetup, run_baseline, run_crosatfl
+    from benchmarks.common import (RESULTS, BenchSetup, run_baseline,
+                                   run_crosatfl, run_scenario)
     from repro.fl.baselines import BASELINES
+    from repro.fl.engine import SCENARIO_NAMES
 
     setup = BenchSetup(dataset="eurosat-sim", n_clients=8, n_train=400,
                        n_test=100, rounds=1, local_epochs=1, k_max=4)
@@ -33,18 +40,25 @@ def smoke(measured_cost: bool = False) -> int:
         setup = dataclasses.replace(
             setup, c_flop="measured:gemma3-1b/train_4k")
     failures = 0
-    methods = ["CroSatFL"] + list(BASELINES)
+    methods = ["CroSatFL"] + list(BASELINES) + list(SCENARIO_NAMES)
+    ledgers = {}
     for method in methods:
         try:
             if method == "CroSatFL":
                 _, ledger, _ = run_crosatfl(setup, eval_every=False)
-            else:
+            elif method in BASELINES:
                 _, ledger, _ = run_baseline(method, setup, eval_every=False)
+            else:
+                _, ledger, _ = run_scenario(method, setup, eval_every=False)
+            ledgers[method] = dataclasses.asdict(ledger)
             row = ledger.row()
-            ok = (row["gs_comm"] > 0 and
+            # gossip-only sessions never touch the GS — that IS the point
+            gs_ok = (row["gs_comm"] == 0 and row["intra_lisl"] > 0
+                     if method == "CroSatFL-Gossip" else row["gs_comm"] > 0)
+            ok = (gs_ok and ledger.total_energy_j > 0 and
                   all(np.isfinite(v) and v >= 0 for k, v in row.items()
                       if k.endswith(("_kj", "_h"))))
-            print(f"{'ok ' if ok else 'BAD'} {method:10s} "
+            print(f"{'ok ' if ok else 'BAD'} {method:20s} "
                   f"gs={row['gs_comm']:3d} intra={row['intra_lisl']:4d} "
                   f"txE={row['tx_energy_kj']:.3g}kJ "
                   f"trainE={row['train_energy_kj']:.3g}kJ")
@@ -52,6 +66,11 @@ def smoke(measured_cost: bool = False) -> int:
         except Exception as e:  # noqa: BLE001 — report, keep sweeping
             failures += 1
             print(f"FAILED {method}: {type(e).__name__}: {e}")
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "smoke_ledgers.json")
+    with open(out, "w") as f:
+        json.dump(ledgers, f, indent=1, sort_keys=True)
+    print(f"wrote {out}")
     print(f"\nsmoke: {len(methods) - failures}/{len(methods)} algorithms ok")
     return 1 if failures else 0
 

@@ -6,10 +6,12 @@ Fault-tolerance contract (DESIGN.md §6):
   stored under stable path-keys so a checkpoint written by one process
   layout restores under another (elastic resume).
 * ``save_session``/``load_session`` — full CroSatFL SessionState
-  (cluster models + Skip-One fairness counters + masters + RNG key +
-  energy ledger + round index), written at edge-round boundaries. A
-  restarted session continues from the latest cluster models — exactly
-  the paper's master-migration property.
+  (cluster models + Skip-One fairness counters + masters + BOTH RNG
+  streams (JAX key and host numpy bit-generator state) + energy ledger +
+  round index), written at edge-round boundaries. A restarted session
+  continues from the latest cluster models — exactly the paper's
+  master-migration property — and replays the uninterrupted session
+  bit-for-bit (tests/test_session.py pins this).
 * Writes are atomic (tmp + rename) so a crash mid-write never corrupts
   the latest checkpoint; ``load_*`` falls back to the newest valid step.
 """
@@ -77,6 +79,10 @@ def save_session(state, path: str) -> None:
         "round_idx": state.round_idx,
         "masters": state.masters.tolist(),
         "rng_key": np.asarray(state.rng_key).tolist(),
+        # host numpy bit-generator state (PCG64 dict of arbitrary-precision
+        # ints — JSON-exact): without it a resumed session draws different
+        # selection jitter / group samples than the uninterrupted one
+        "host_rng": state.rng_state,
         "ledger": dataclasses.asdict(state.ledger),
         "skip": [{"kappa": s.kappa.tolist(), "tau": s.tau.tolist(),
                   "phi": s.phi.tolist()} for s in state.skip_states],
@@ -100,7 +106,8 @@ def load_session(path: str, models_like) -> "SessionState":
         round_idx=meta["round_idx"], cluster_models=models,
         skip_states=skip, masters=np.array(meta["masters"]),
         rng_key=jnp.asarray(np.array(meta["rng_key"], np.uint32)),
-        ledger=ledger)
+        ledger=ledger,
+        rng_state=meta.get("host_rng"))   # None on pre-field checkpoints
 
 
 def latest_checkpoint(directory: str) -> Optional[str]:

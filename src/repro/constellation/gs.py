@@ -96,16 +96,28 @@ class WindowTable:
         self.n_steps = len(ts)
 
     def next_window(self, sat: int, t0: float) -> tuple[float, float]:
-        i0 = int(t0 / self.step_s)
+        # Waits are measured from t0 itself against the first grid sample
+        # at/after t0 — the old floored lookup overestimated every wait by
+        # up to step_s and reported wait=0 with a stale slant range for a
+        # pass that ended mid-step. A pass is ONGOING at an off-grid t0
+        # only when the samples on both sides are visible; then the wait
+        # really is zero (range taken at the next sample, still in-pass).
+        i0 = int(np.ceil(t0 / self.step_s))
+        start0 = i0 % self.n_steps
         col_v = self.vis[:, sat]
         col_r = self.rng[:, sat]
+        i_floor = int(np.floor(t0 / self.step_s))
+        if i_floor != i0 and col_v[i_floor % self.n_steps] and col_v[start0]:
+            return 0.0, float(col_r[start0])
         for wrap in range(2):
-            start = (i0 if wrap == 0 else 0) % self.n_steps
-            seg = col_v[start:] if wrap == 0 else col_v
-            hit = np.argmax(seg)
+            seg = col_v[start0:] if wrap == 0 else col_v
+            hit = int(np.argmax(seg))
             if seg[hit]:
-                idx = start + hit if wrap == 0 else hit
-                wait = (hit if wrap == 0
-                        else (self.n_steps - start) + hit) * self.step_s
-                return float(wait), float(col_r[idx % self.n_steps])
+                if wrap == 0:
+                    j, idx = i0 + hit, start0 + hit    # absolute step index
+                else:
+                    # wrapped scan continues from the end of the wrap-0
+                    # segment: (n_steps - start0) steps past i0, + hit
+                    j, idx = i0 + (self.n_steps - start0) + hit, hit
+                return max(0.0, j * self.step_s - t0), float(col_r[idx])
         return self.horizon_s, 2_000_000.0

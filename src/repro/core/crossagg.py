@@ -110,6 +110,29 @@ def consolidate(stacked_models, n_samples):
 
 
 # ---------------------------------------------------------------------------
+# Gossip consensus (beyond-paper: GS-free finalization)
+# ---------------------------------------------------------------------------
+
+def metropolis_matrix(reach: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings consensus weights on the (symmetric) reach
+    graph: M[i,j] = 1/(1+max(deg_i, deg_j)) on edges, diagonal takes the
+    remainder. Symmetric and doubly stochastic by construction, so its
+    ``consensus_contraction`` (with uniform pi) is < 1 exactly when the
+    graph is connected — the standard gossip-averaging operator used by
+    GS-free finalization (fl/engine/mixing.GossipMixing)."""
+    K = reach.shape[0]
+    adj = np.asarray(reach, bool) & np.asarray(reach, bool).T
+    np.fill_diagonal(adj, False)
+    deg = adj.sum(1)
+    M = np.zeros((K, K), np.float64)
+    for i in range(K):
+        for j in np.flatnonzero(adj[i]):
+            M[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        M[i, i] = 1.0 - M[i].sum()
+    return M
+
+
+# ---------------------------------------------------------------------------
 # Gossip diagnostics (beyond-paper: consensus-rate bound)
 # ---------------------------------------------------------------------------
 

@@ -87,6 +87,9 @@ class Session:
             eval_fn: Optional[Callable] = None,
             state: Optional[SessionState] = None,
             policy_params: Optional[dict] = None,
+            ckpt_dir: Optional[str] = None,
+            ckpt_every: int = 1,
             ) -> tuple[Any, EnergyLedger, list[dict]]:
         self.engine.clustering.policy_params = policy_params
-        return self.engine.run(rounds=rounds, eval_fn=eval_fn, state=state)
+        return self.engine.run(rounds=rounds, eval_fn=eval_fn, state=state,
+                               ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)

@@ -1,23 +1,28 @@
-"""Pluggable FL round engine: one orchestrator + four policy surfaces
-(clustering / selection / mixing / transport) behind CroSatFL and every
-baseline. See base.py for the protocol contract and DESIGN.md §7 for the
-algorithm -> policy table.
+"""Pluggable FL round engine: one orchestrator + five policy surfaces
+(clustering / selection / mixing / pacing / transport) behind CroSatFL,
+every baseline, and the scenario zoo (semi-sync & async pacing,
+gossip-only sessions, per-cluster codec maps). See base.py for the
+protocol contract and DESIGN.md §7-8 for the algorithm -> policy tables.
 """
 from repro.fl.engine.base import (ClusterPlan, ClusteringPolicy,  # noqa: F401
                                   EngineConfig, EngineContext, MixingPolicy,
-                                  RoundSelection, SelectionPolicy,
-                                  SessionState)
+                                  PacingPolicy, RoundSelection,
+                                  SelectionPolicy, SessionState)
 from repro.fl.engine.clustering import (GreedyFanoutGroups,  # noqa: F401
                                         PerPlaneGroups, SingleCluster,
                                         StarMaskClustering)
 from repro.fl.engine.costs import measured_c_flop, resolve_c_flop  # noqa: F401
 from repro.fl.engine.engine import RoundEngine  # noqa: F401
-from repro.fl.engine.mixing import (CrossAggMixing, GSStarMixing,  # noqa: F401
-                                    HeadChainMixing, RelayedGSStarMixing,
-                                    SinkChainMixing)
-from repro.fl.engine.presets import (BASELINE_NAMES, make_baseline,  # noqa: F401
-                                     make_crosatfl)
+from repro.fl.engine.mixing import (CrossAggMixing, GossipMixing,  # noqa: F401
+                                    GSStarMixing, HeadChainMixing,
+                                    RelayedGSStarMixing, SinkChainMixing)
+from repro.fl.engine.pacing import (AsyncPacing, SemiSyncPacing,  # noqa: F401
+                                    SyncPacing)
+from repro.fl.engine.presets import (BASELINE_NAMES, SCENARIO_NAMES,  # noqa: F401
+                                     make_baseline, make_crosatfl,
+                                     make_scenario)
 from repro.fl.engine.selection import (AllParticipate,  # noqa: F401
                                        SkipOneSelection, TopMEnergyUtility)
 from repro.fl.engine.transport import (BlockMinifloatCodec,  # noqa: F401
+                                       CodecMap, HardwareAwareCodecMap,
                                        IdentityCodec, Transport)

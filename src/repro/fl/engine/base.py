@@ -5,7 +5,7 @@ round skeleton shared by CroSatFL and every baseline:
 
     select → local-train → intra-upload → mix → account
 
-and composes four small policy surfaces:
+and composes five small policy surfaces:
 
 * ``ClusteringPolicy``  — who trains together, and over which
   communication topology (StarMask, per-plane chains, greedy fan-out
@@ -13,14 +13,19 @@ and composes four small policy surfaces:
 * ``SelectionPolicy``   — which cluster members train this round
   (Skip-One, everyone, top-m energy utility).
 * ``MixingPolicy``      — how models move between rounds (random-k
-  cross-aggregation, GS star, sink chains, head chains) plus the session
-  endpoints (bootstrap distribution, final collection).
+  cross-aggregation, GS star, sink chains, head chains, gossip-only) plus
+  the session endpoints (bootstrap distribution, final collection).
+* ``PacingPolicy``      — how per-cluster completion times fold into a
+  round (sync barrier, semi-sync deadline, async staleness-weighted
+  merge; pacing.py).
 * ``Transport``         — the ONE place GS/LISL energy+latency enter the
-  ``EnergyLedger`` (transport.py), parameterized by a ``PayloadCodec``.
+  ``EnergyLedger`` (transport.py), parameterized by a ``PayloadCodec``
+  (engine-global) or a ``CodecMap`` (heterogeneous per cluster).
 
 Every algorithm in the repo is a (clustering, selection, mixing, codec)
-quadruple over the same engine (presets.py), so Table-II comparisons are
-guaranteed to use identical accounting by construction.
+quadruple over the same engine — scenario presets additionally pick a
+pacing policy (presets.py) — so Table-II comparisons are guaranteed to
+use identical accounting by construction.
 
 All protocols are duck-typed; the classes below document the contract.
 """
@@ -97,6 +102,12 @@ class SessionState:
     core.session re-exports the class for callers of the legacy API.
     ``skip_states`` holds the SelectionPolicy's per-cluster state (Skip-One
     fairness counters for CroSatFL; None entries for stateless policies).
+    ``rng_state`` is the host numpy bit-generator state captured at the
+    same round boundary as ``rng_key`` — both RNG streams must round-trip
+    or a resumed session diverges from the uninterrupted one (selection
+    jitter, cross-agg group sampling and top-m noise are host-side).
+    ``None`` on checkpoints written before this field existed; the engine
+    then resumes with a freshly seeded host RNG (the pre-fix behavior).
     """
     round_idx: int
     cluster_models: Any              # stacked (K, ...) pytree
@@ -104,6 +115,7 @@ class SessionState:
     masters: np.ndarray              # (K,) current master satellite ids
     rng_key: Any
     ledger: EnergyLedger
+    rng_state: Any = None            # np Generator.bit_generator.state dict
 
 
 @dataclass
@@ -141,6 +153,33 @@ class SelectionPolicy(Protocol):
     def select(self, ctx: EngineContext, members: np.ndarray, state: Any,
                round_idx: int) -> tuple[RoundSelection, Any]:
         """Draw this round's participants (and their realized runtimes)."""
+        ...
+
+
+class PacingPolicy(Protocol):
+    """How per-cluster completion times fold into a round (pacing.py):
+    sync barrier, semi-sync deadline, or fully-async staleness-weighted
+    merge. The engine calls the four hooks in this order every round so
+    barrier/wait accounting stays in one place per policy."""
+
+    def begin_round(self, ctx: EngineContext, round_idx: int) -> None:
+        """Reset per-round pacing state."""
+        ...
+
+    def account_cluster(self, ctx: EngineContext, sel: RoundSelection,
+                        kc: int) -> float:
+        """Charge cluster ``kc``'s train energy (+ idle, if the policy
+        can already price it); return the cluster's completion time."""
+        ...
+
+    def merge(self, ctx: EngineContext, model, state: "SessionState",
+              new_models: list, sels: list, round_idx: int):
+        """Fold this round's fresh cluster models into stacked models
+        entering the mix (replace / defer stragglers / staleness-weight)."""
+        ...
+
+    def advance(self, barriers: list) -> float:
+        """Round wall-clock advance from per-cluster completion times."""
         ...
 
 

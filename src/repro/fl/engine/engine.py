@@ -1,5 +1,5 @@
-"""RoundEngine: the one orchestrator behind CroSatFL and all five
-baselines (DESIGN.md §7).
+"""RoundEngine: the one orchestrator behind CroSatFL, all five
+baselines, and the scenario zoo (DESIGN.md §7-8).
 
 Owns the canonical edge-round skeleton —
 
@@ -7,14 +7,16 @@ Owns the canonical edge-round skeleton —
         for each training cluster:
             select participants        (SelectionPolicy)
             local-train                (model adapter)
-            account train/idle         (uniform rule, below)
+            account train/idle         (PacingPolicy.account_cluster)
             intra-upload               (MixingPolicy.upload)
+        fold fresh cluster models      (PacingPolicy.merge)
         mix cluster models             (MixingPolicy.mix)
-        advance wall clock, evaluate
+        advance wall clock             (PacingPolicy.advance), evaluate
 
 — plus session endpoints (bootstrap / finalize) and checkpoint-resume.
 
-Uniform accounting rule (paper §III-B/C): per cluster per round,
+Uniform accounting rule (paper §III-B/C), under the default SyncPacing,
+per cluster per round:
 
     barrier   = max realized train time over participants
     energy   += sum of participant train energy x codec arith_scale
@@ -24,10 +26,19 @@ Uniform accounting rule (paper §III-B/C): per cluster per round,
 
 Every algorithm gets exactly this rule — accounting drift between
 implementations (the pre-refactor failure mode) is impossible by
-construction.
+construction. Semi-sync / async pacing policies replace the barrier with
+a deadline / staleness-weighted merge but keep the same invariants
+(pacing.py).
+
+Checkpoint-resume is bit-reproducible: ``SessionState`` carries both the
+JAX ``rng_key`` and the host numpy bit-generator state (``rng_state`` —
+selection jitter, cross-agg group sampling and top-m noise all draw from
+the host RNG), so a resumed session replays the uninterrupted ledger and
+weights exactly.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Optional
 
 import jax
@@ -38,6 +49,7 @@ from repro.core.energy import GPU, EnergyLedger, e_train, t_train
 from repro.fl.engine.base import (ClusterPlan, EngineConfig, EngineContext,
                                   RoundSelection, SessionState)
 from repro.fl.engine.costs import resolve_c_flop
+from repro.fl.engine.pacing import SyncPacing, _charge_train
 from repro.fl.engine.transport import IdentityCodec, Transport
 
 
@@ -62,12 +74,14 @@ class RoundEngine:
     """
 
     def __init__(self, cfg: EngineConfig, env, model, *, clustering,
-                 selection, mixing, codec=None, name: str = "engine"):
+                 selection, mixing, codec=None, pacing=None,
+                 name: str = "engine"):
         cfg = resolve_c_flop(cfg)
         self.cfg, self.env, self.model = cfg, env, model
         self.clustering, self.selection, self.mixing = \
             clustering, selection, mixing
         self.codec = codec if codec is not None else IdentityCodec()
+        self.pacing = pacing if pacing is not None else SyncPacing()
         self.name = name
         self.rng = np.random.default_rng(cfg.seed)
 
@@ -90,21 +104,18 @@ class RoundEngine:
 
     # -- uniform per-cluster accounting --------------------------------------
     @staticmethod
-    def _account_train(ctx: EngineContext, sel: RoundSelection) -> float:
-        mask, tt_r = sel.mask, sel.tt_r
-        barrier = float(tt_r[mask].max()) if mask.any() else 0.0
-        ctx.ledger.add_train(
-            float(ctx.et_full[sel.ids][mask].sum()) * ctx.transport.arith_scale,
-            barrier)
-        ctx.ledger.add_wait(float((barrier - tt_r[mask]).sum()
-                                  + barrier * (~mask).sum()
-                                  if mask.any() else 0.0))
-        return barrier
+    def _account_train(ctx: EngineContext, sel: RoundSelection,
+                       kc: Optional[int] = None) -> float:
+        """The sync train/idle rule (kept as the engine's canonical
+        reference; SyncPacing delegates here via pacing._charge_train)."""
+        return _charge_train(ctx, sel, kc)
 
     # -- session -------------------------------------------------------------
     def run(self, rounds: Optional[int] = None,
             eval_fn: Optional[Callable] = None,
             state: Optional[SessionState] = None,
+            ckpt_dir: Optional[str] = None,
+            ckpt_every: int = 1,
             ):
         cfg, env, model = self.cfg, self.env, self.model
         R = rounds if rounds is not None else cfg.rounds
@@ -113,6 +124,7 @@ class RoundEngine:
         ledger = state.ledger if state is not None else EnergyLedger()
         ctx = self._make_ctx(ledger)
         plan, key = self.clustering.build(ctx, key)
+        ctx.transport.bind_clusters(plan, env)
         K = plan.n_clusters
         N_k = np.array([env.n_samples[c].sum() for c in plan.clusters],
                        np.float64)
@@ -128,13 +140,19 @@ class RoundEngine:
                              for c in plan.clusters],
                 masters=masters, rng_key=key, ledger=ledger)
             self.mixing.bootstrap(ctx, plan, state)
+            state.rng_state = self.rng.bit_generator.state
+        elif state.rng_state is not None:
+            # resume: restore the host RNG mid-stream, or selection jitter /
+            # group sampling silently diverge from the uninterrupted run
+            self.rng.bit_generator.state = state.rng_state
         key = state.rng_key
 
         history: list[dict] = []
         wall = ledger.wall_clock_s
         for r in range(state.round_idx, R):
             t_round = wall
-            round_barrier = 0.0
+            self.pacing.begin_round(ctx, r)
+            barriers: list[float] = []
             sels: list[RoundSelection] = []
             new_models = []
             models_list = model.unstack(state.cluster_models, K)
@@ -146,11 +164,12 @@ class RoundEngine:
                 key, sub = jax.random.split(key)
                 new_models.append(model.cluster_round(
                     w_k, part, env.n_samples[part], cfg.local_epochs, sub))
-                round_barrier = max(round_barrier,
-                                    self._account_train(ctx, sel))
+                barriers.append(self.pacing.account_cluster(ctx, sel, kc))
                 self.mixing.upload(ctx, plan, state, kc, part, t_round)
 
-            stacked = model.stack(new_models)
+            stacked = self.pacing.merge(ctx, model, state, new_models,
+                                        sels, r)
+            round_barrier = self.pacing.advance(barriers)
             stacked, dt_comm = self.mixing.mix(
                 ctx, plan, state, stacked, N_k, sels, r,
                 t_round, wall + round_barrier)
@@ -158,9 +177,14 @@ class RoundEngine:
             state.cluster_models = stacked
             state.round_idx = r + 1
             state.rng_key = key
+            state.rng_state = self.rng.bit_generator.state
             wall += round_barrier
             wall += dt_comm
             ledger.wall_clock_s = wall
+
+            if ckpt_dir is not None and (r + 1) % ckpt_every == 0:
+                from repro.ckpt import save_session
+                save_session(state, os.path.join(ckpt_dir, f"step_{r + 1}"))
 
             if eval_fn is not None:
                 w_glob = crossagg.consolidate(stacked, N_k)

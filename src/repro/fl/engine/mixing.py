@@ -16,8 +16,14 @@ energy arithmetic directly.
   heads chain to one elected head, the single GS contact per round.
 * ``RelayedGSStarMixing``— FedSCS / FedOrbit: participants relay over two
   LISL hops to a GS-visible satellite, then sync with the GS.
+* ``GossipMixing``       — gossip-only sessions with NO GS contact at all
+  (DESIGN.md §8): bootstrap by LISL flooding from a seed satellite,
+  random-k gossip between rounds, finalize via consensus rounds whose
+  count comes from the ``consensus_contraction`` mixing bound.
 """
 from __future__ import annotations
+
+import math
 
 import numpy as np
 
@@ -31,6 +37,27 @@ _RELAY_HOP_M = 1.2e6          # FedSCS nominal LISL relay hop
 
 def _finite_or(dist: float, fallback: float) -> float:
     return dist if np.isfinite(dist) else fallback
+
+
+def _components(adj: np.ndarray) -> list[list[int]]:
+    """Connected components of a symmetric bool adjacency (DFS)."""
+    K = adj.shape[0]
+    seen = np.zeros(K, bool)
+    comps = []
+    for s in range(K):
+        if seen[s]:
+            continue
+        stack, comp = [s], []
+        seen[s] = True
+        while stack:
+            i = stack.pop()
+            comp.append(i)
+            for j in np.flatnonzero(adj[i]):
+                if not seen[j]:
+                    seen[j] = True
+                    stack.append(j)
+        comps.append(comp)
+    return comps
 
 
 class CrossAggMixing:
@@ -69,16 +96,17 @@ class CrossAggMixing:
             wait, dist = env.gs_window_wait(int(mk), t_now)
             tr.wait(wait)
             tr.gs(1, dist)
-        for c, mk in zip(plan.clusters, state.masters):
+        for kc, (c, mk) in enumerate(zip(plan.clusters, state.masters)):
+            tr_k = tr.for_cluster(kc)
             for i in c:
                 if i == mk:
                     continue
-                tr.intra(1, self._dist(ctx, int(mk), int(i), t_now))
+                tr_k.intra(1, self._dist(ctx, int(mk), int(i), t_now))
 
     def upload(self, ctx: EngineContext, plan: ClusterPlan,
                state: SessionState, kc: int, participants: np.ndarray,
                t_now: float) -> None:
-        env, tr = ctx.env, ctx.transport
+        env, tr = ctx.env, ctx.transport.for_cluster(kc)
         mk = state.masters[kc]
         for i in participants:
             if i == mk:
@@ -103,8 +131,10 @@ class CrossAggMixing:
             for j in g:
                 if j == kc:
                     continue
-                tr.inter(1, self._dist(ctx, int(state.masters[j]),
-                                       int(state.masters[kc]), t_round))
+                # payload encoded by the SENDER's cluster codec
+                tr.for_cluster(int(j)).inter(
+                    1, self._dist(ctx, int(state.masters[j]),
+                                  int(state.masters[kc]), t_round))
         return stacked, 0.0
 
     def finalize(self, ctx: EngineContext, plan: ClusterPlan,
@@ -117,6 +147,109 @@ class CrossAggMixing:
             tr.wait(wait)
             tr.gs(1, dist)
         return w_final
+
+
+class GossipMixing(CrossAggMixing):
+    """Fully on-orbit sessions: NO ground-station contact, ever.
+
+    Bootstrap: the initial model lives on a seed satellite (the highest
+    fan-out master — e.g. pre-loaded at launch or injected out-of-band)
+    and floods over LISLs: a BFS tree over the instantaneous master
+    reachability graph carries w0 master-to-master, then each master
+    relays to its cluster members. Rounds gossip exactly like CroSatFL's
+    random-k cross-aggregation. Finalize: instead of a GS collection, the
+    masters run Metropolis-weighted consensus rounds over their full
+    neighborhoods; the number of rounds comes from the
+    ``consensus_contraction`` bound sigma_2 (disagreement contracts by
+    sigma_2 per round, so ceil(log eps / log sigma_2) rounds reach
+    ``consensus_eps``), reported in ``plan.meta['gossip_consensus']``.
+    """
+
+    def __init__(self, k_nbr: int = 2, consensus_eps: float = 1e-2,
+                 max_consensus_rounds: int = 8):
+        super().__init__(k_nbr=k_nbr)
+        self.consensus_eps = consensus_eps
+        self.max_consensus_rounds = max_consensus_rounds
+        self.last_consensus: dict = {}   # report of the final consensus pass
+
+    def bootstrap(self, ctx: EngineContext, plan: ClusterPlan,
+                  state: SessionState) -> None:
+        env, tr = ctx.env, ctx.transport
+        masters = state.masters
+        if len(masters) == 0:
+            return
+        t_now = 0.0
+        seed = int(np.argmax(env.fanout[masters]))
+        reach = env.master_reach(masters, t_now)
+        # BFS flood tree over the master graph; islands get one relayed
+        # (fallback-distance) hop from the seed
+        visited, frontier = {seed}, [seed]
+        while frontier:
+            nxt = []
+            for p in frontier:
+                for q in range(len(masters)):
+                    if q not in visited and reach[p, q]:
+                        visited.add(q)
+                        nxt.append(q)
+                        # priced by the SENDER's (relaying master's) codec,
+                        # like every other inter-cluster message
+                        tr.for_cluster(p).inter(
+                            1, self._dist(ctx, int(masters[p]),
+                                          int(masters[q]), t_now))
+            frontier = nxt
+        for q in range(len(masters)):
+            if q not in visited:
+                tr.for_cluster(seed).inter(1, tr.RELAY_FALLBACK_M)
+        for kc, (c, mk) in enumerate(zip(plan.clusters, masters)):
+            tr_k = tr.for_cluster(kc)
+            for i in c:
+                if i == mk:
+                    continue
+                tr_k.intra(1, self._dist(ctx, int(mk), int(i), t_now))
+
+    def finalize(self, ctx: EngineContext, plan: ClusterPlan,
+                 state: SessionState, N_k: np.ndarray, wall: float):
+        env, tr = ctx.env, ctx.transport
+        K = len(state.masters)
+        if K == 0:
+            return crossagg.consolidate(state.cluster_models, N_k)
+        adj = np.asarray(env.master_reach(state.masters, wall), bool)
+        adj = adj | adj.T
+        np.fill_diagonal(adj, False)
+        # bridge islands (masters beyond max_hops) through a relayed
+        # fallback hop to the hub master — same fallback the gossip mix
+        # and bootstrap use; _dist prices those edges at RELAY_FALLBACK_M
+        hub = int(np.argmax(env.fanout[state.masters]))
+        for comp in _components(adj):
+            if hub not in comp:
+                adj[hub, comp[0]] = adj[comp[0], hub] = True
+        M = crossagg.metropolis_matrix(adj)
+        # Metropolis weights are doubly stochastic, so the contraction
+        # bound is taken with uniform pi (< 1 iff the graph is connected)
+        sigma2 = crossagg.consensus_contraction(M, np.ones(K))
+        if sigma2 <= 0.0:
+            n_rounds = 1                           # one round reaches exact
+        elif sigma2 < 1.0:                         # consensus (e.g. K == 2)
+            n_rounds = math.ceil(math.log(self.consensus_eps)
+                                 / math.log(sigma2))
+        else:
+            n_rounds = self.max_consensus_rounds   # K == 1 or degenerate
+        n_rounds = max(1, min(n_rounds, self.max_consensus_rounds))
+        edges = [(i, j) for i in range(K)
+                 for j in np.flatnonzero(adj[i]) if i < j]
+        for _ in range(n_rounds):
+            state.cluster_models = crossagg.apply_mixing(
+                M, state.cluster_models)
+            for i, j in edges:      # pairwise exchange along every edge
+                d = self._dist(ctx, int(state.masters[i]),
+                               int(state.masters[j]), wall)
+                tr.for_cluster(int(i)).inter(1, d)
+                tr.for_cluster(int(j)).inter(1, d)
+        self.last_consensus = {
+            "sigma2": float(sigma2), "rounds": int(n_rounds),
+            "eps": self.consensus_eps}
+        plan.meta["gossip_consensus"] = self.last_consensus
+        return crossagg.consolidate(state.cluster_models, N_k)
 
 
 class _GSCentricMixing:
@@ -134,7 +267,10 @@ class _GSCentricMixing:
 
     def _barrier_waits(self, tr, waits: list[float]) -> float:
         """Synchronous round: ends when the LAST client has synced;
-        everyone else idles (latency-only waiting)."""
+        everyone else idles (latency-only waiting). A zero-participant
+        round (selection produced nobody) has no sync barrier."""
+        if not waits:
+            return 0.0
         wmax = max(waits)
         tr.wait(float(np.sum(wmax - np.asarray(waits))))
         return wmax
@@ -147,7 +283,7 @@ class GSStarMixing(_GSCentricMixing):
             t_round, t_now):
         env, tr = ctx.env, ctx.transport
         waits = []
-        for i in sels[0].participants:
+        for i in (sels[0].participants if sels else ()):
             wait, dist = env.gs_window_wait(int(i), t_now)
             waits.append(wait)
             tr.gs(2, dist)
@@ -206,7 +342,7 @@ class RelayedGSStarMixing(_GSCentricMixing):
             t_round, t_now):
         env, tr = ctx.env, ctx.transport
         waits = []
-        for i in sels[0].participants:
+        for i in (sels[0].participants if sels else ()):
             tr.intra(4, _RELAY_HOP_M)
             wait, gdist = env.gs_window_wait(int(i), t_now)
             waits.append(wait)

@@ -1,0 +1,217 @@
+"""PacingPolicy implementations (DESIGN.md §8).
+
+How per-cluster completion times fold into a round: who is charged idle
+time, which fresh cluster models enter the mix, and how far the wall clock
+advances. The engine calls exactly four hooks per round —
+
+    begin_round -> account_cluster (per cluster, in-loop) -> merge -> advance
+
+— so the barrier/wait accounting of every pacing scheme stays in one
+place and every scenario shares the engine's select/train/upload/mix
+skeleton (a pacing scheme is a policy, not a loop).
+
+* ``SyncPacing``     — today's behavior, bit-for-bit: the round closes
+  when the slowest cluster's slowest participant finishes; each cluster's
+  members idle at their own cluster barrier.
+* ``SemiSyncPacing`` — deadline rounds: the round closes at a deadline
+  (a quantile of realized cluster barriers, or a fixed ``deadline_s``);
+  stragglers' late updates are stashed and folded into the NEXT round's
+  merge with weight ``beta`` (deadline-based semi-synchronous FL à la
+  Razmi et al.'s visibility-barrier dodging).
+* ``AsyncPacing``    — staleness-weighted fully-async merge (FedAsync):
+  cluster updates are applied as convex combinations w_k <- (1-a)w_k +
+  a*fresh with a = alpha0/(1+rank)^decay, rank = arrival order of the
+  cluster this round; the wall clock advances by the MEAN cluster cycle
+  (steady-state pipelined throughput), not the max.
+
+Accounting invariants shared by all three: train energy is charged in
+``account_cluster`` (same order as the sync engine), skipped members are
+charged the full effective barrier, and nobody is charged waiting for time
+they spent training.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.fl.engine.base import EngineContext, RoundSelection
+
+
+def _charge_train(ctx: EngineContext, sel: RoundSelection, kc) -> float:
+    """The uniform sync rule (engine docstring): charge participants'
+    train energy (codec arith-scaled) and member idle at the cluster
+    barrier; return the cluster barrier."""
+    mask, tt_r = sel.mask, sel.tt_r
+    barrier = float(tt_r[mask].max()) if mask.any() else 0.0
+    ctx.ledger.add_train(
+        float(ctx.et_full[sel.ids][mask].sum())
+        * ctx.transport.arith_scale_for(kc),
+        barrier)
+    ctx.ledger.add_wait(float((barrier - tt_r[mask]).sum()
+                              + barrier * (~mask).sum()
+                              if mask.any() else 0.0))
+    return barrier
+
+
+class SyncPacing:
+    """Synchronous barrier — the engine's historical behavior, preserved
+    bit-for-bit (golden parity pins run through this policy)."""
+
+    def begin_round(self, ctx: EngineContext, round_idx: int) -> None:
+        pass
+
+    def account_cluster(self, ctx: EngineContext, sel: RoundSelection,
+                        kc: int) -> float:
+        return _charge_train(ctx, sel, kc)
+
+    def merge(self, ctx: EngineContext, model, state, new_models: list,
+              sels: list, round_idx: int):
+        return model.stack(new_models)
+
+    def advance(self, barriers: list) -> float:
+        return max(barriers, default=0.0)
+
+
+class SemiSyncPacing:
+    """Deadline rounds with straggler folding.
+
+    Deadline = ``deadline_s`` when given, else the ``quantile`` of this
+    round's realized cluster barriers — capped at the slowest barrier
+    either way (the round closes as soon as everyone is done; idle time
+    is never booked past the wall-clock end of the round). Clusters
+    finishing by the deadline merge now; a straggler's fresh model is
+    stashed and convex-combined (weight ``beta``) into its cluster model
+    at the NEXT round's merge, so late work is never dropped — it is just
+    stale by one round. Members idle to the deadline only (a straggler's
+    own overshoot is training, not waiting); skipped members idle the
+    full deadline.
+
+    The straggler stash is policy-local state, NOT part of SessionState:
+    a disk checkpoint-resume of a semi-sync session is exact only at
+    round boundaries with no update pending (ROADMAP notes generalized
+    pacing-state checkpointing as an open item; the pinned bit-for-bit
+    resume guarantee covers the default SyncPacing).
+    """
+
+    def __init__(self, quantile: float = 0.75, beta: float = 0.5,
+                 deadline_s: Optional[float] = None):
+        if not 0.0 < quantile <= 1.0:
+            raise ValueError(f"quantile must be in (0, 1], got {quantile}")
+        if not 0.0 <= beta <= 1.0:
+            raise ValueError(f"beta must be in [0, 1], got {beta}")
+        self.quantile, self.beta, self.deadline_s = quantile, beta, deadline_s
+        self._barriers: list[float] = []
+        self._deadline = 0.0
+        self._pending: dict[int, object] = {}   # kc -> stashed late model
+
+    def begin_round(self, ctx: EngineContext, round_idx: int) -> None:
+        self._barriers = []
+        if round_idx == 0:        # fresh session: drop any stale stash
+            self._pending = {}
+
+    def account_cluster(self, ctx: EngineContext, sel: RoundSelection,
+                        kc: int) -> float:
+        # energy now (same in-loop order as sync); idle deferred to merge,
+        # where the deadline over all clusters is known
+        mask = sel.mask
+        barrier = float(sel.tt_r[mask].max()) if mask.any() else 0.0
+        ctx.ledger.add_train(
+            float(ctx.et_full[sel.ids][mask].sum())
+            * ctx.transport.arith_scale_for(kc),
+            barrier)
+        self._barriers.append(barrier)
+        return barrier
+
+    def merge(self, ctx: EngineContext, model, state, new_models: list,
+              sels: list, round_idx: int):
+        barriers = np.asarray(self._barriers)
+        if barriers.size == 0:
+            D = 0.0
+        else:
+            D = (self.deadline_s if self.deadline_s is not None
+                 else float(np.quantile(barriers, self.quantile)))
+            D = min(D, float(barriers.max()))   # round closes when all done
+        self._deadline = D
+        # idle: everyone waits to the deadline at most; stragglers' own
+        # overshoot is work, not waiting
+        for sel in sels:
+            tt, mask = sel.tt_r, sel.mask
+            ctx.ledger.add_wait(
+                float(np.maximum(0.0, D - tt[mask]).sum()
+                      + D * (~mask).sum()))
+        K = len(new_models)
+        old = model.unstack(state.cluster_models, K)
+        merged = []
+        fresh_pending: dict[int, object] = {}
+        for kc in range(K):
+            if barriers[kc] <= D:
+                w_k = new_models[kc]                   # on time: merge now
+            else:
+                w_k = old[kc]                          # late: defer update
+                fresh_pending[kc] = new_models[kc]
+            if kc in self._pending:     # fold last round's straggler in
+                w_k = _combine(model.stack([w_k, self._pending[kc]]),
+                               self.beta)
+            merged.append(w_k)
+        self._pending = fresh_pending
+        return model.stack(merged)
+
+    def advance(self, barriers: list) -> float:
+        return self._deadline      # already capped at the slowest barrier
+
+
+def _combine(stacked_pair, beta: float):
+    """(2, ...) stacked pytree -> (1-beta)*first + beta*second per leaf."""
+    return jax.tree.map(
+        lambda leaf: ((1.0 - beta) * leaf[0] + beta * leaf[1]
+                      ).astype(leaf.dtype),
+        stacked_pair)
+
+
+class AsyncPacing:
+    """FedAsync-style staleness-weighted merge, clustered.
+
+    Cluster updates are ranked by completion time; the k-th arrival is
+    merged as w_k <- (1-a)w_k + a*fresh with a = alpha0/(1+rank)^decay
+    (polynomial staleness discount — later arrivals trained against a
+    model that more merges have already moved past). No cross-cluster
+    barrier exists, so the wall clock advances by the MEAN cluster cycle
+    time — the steady-state round throughput of a pipelined session —
+    instead of the max. Intra-cluster idle (members waiting for their own
+    cluster's barrier) is charged exactly as in sync.
+    """
+
+    def __init__(self, alpha0: float = 0.6, decay: float = 0.5):
+        if not 0.0 < alpha0 <= 1.0:
+            raise ValueError(f"alpha0 must be in (0, 1], got {alpha0}")
+        self.alpha0, self.decay = alpha0, decay
+        self._barriers: list[float] = []
+
+    def begin_round(self, ctx: EngineContext, round_idx: int) -> None:
+        self._barriers = []
+
+    def account_cluster(self, ctx: EngineContext, sel: RoundSelection,
+                        kc: int) -> float:
+        barrier = _charge_train(ctx, sel, kc)
+        self._barriers.append(barrier)
+        return barrier
+
+    def staleness_weights(self, barriers: np.ndarray) -> np.ndarray:
+        ranks = np.empty(len(barriers), int)
+        ranks[np.argsort(barriers, kind="stable")] = np.arange(len(barriers))
+        return self.alpha0 / (1.0 + ranks) ** self.decay
+
+    def merge(self, ctx: EngineContext, model, state, new_models: list,
+              sels: list, round_idx: int):
+        K = len(new_models)
+        alphas = self.staleness_weights(np.asarray(self._barriers))
+        old = model.unstack(state.cluster_models, K)
+        merged = [_combine(model.stack([old[kc], new_models[kc]]),
+                           float(alphas[kc]))
+                  for kc in range(K)]
+        return model.stack(merged)
+
+    def advance(self, barriers: list) -> float:
+        return float(np.mean(barriers)) if barriers else 0.0

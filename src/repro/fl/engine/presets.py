@@ -15,27 +15,37 @@ from repro.fl.engine.base import EngineConfig
 from repro.fl.engine.clustering import (GreedyFanoutGroups, PerPlaneGroups,
                                         SingleCluster, StarMaskClustering)
 from repro.fl.engine.engine import RoundEngine
-from repro.fl.engine.mixing import (CrossAggMixing, GSStarMixing,
-                                    HeadChainMixing, RelayedGSStarMixing,
-                                    SinkChainMixing)
+from repro.fl.engine.mixing import (CrossAggMixing, GossipMixing,
+                                    GSStarMixing, HeadChainMixing,
+                                    RelayedGSStarMixing, SinkChainMixing)
+from repro.fl.engine.pacing import AsyncPacing, SemiSyncPacing
 from repro.fl.engine.selection import (AllParticipate, SkipOneSelection,
                                        TopMEnergyUtility)
-from repro.fl.engine.transport import BlockMinifloatCodec
+from repro.fl.engine.transport import (BlockMinifloatCodec,
+                                       HardwareAwareCodecMap)
 
 
 def make_crosatfl(cfg: EngineConfig, env, model, *,
                   k_nbr: int = 2,
                   skip_one: Optional[SkipOneParams] = None,
                   starmask: Optional[StarMaskParams] = None,
-                  policy_params: Optional[dict] = None) -> RoundEngine:
-    """CroSatFL = StarMask clustering x Skip-One x random-k cross-agg."""
+                  policy_params: Optional[dict] = None,
+                  mixing=None, pacing=None, codec=None,
+                  name: str = "CroSatFL") -> RoundEngine:
+    """CroSatFL = StarMask clustering x Skip-One x random-k cross-agg.
+
+    ``mixing``/``pacing``/``codec`` override single policies for scenario
+    variants (see ``make_scenario``) while keeping the CroSatFL quadruple
+    as the base.
+    """
     return RoundEngine(
         cfg, env, model,
         clustering=StarMaskClustering(starmask or StarMaskParams(),
                                       policy_params=policy_params),
         selection=SkipOneSelection(skip_one or SkipOneParams()),
-        mixing=CrossAggMixing(k_nbr=k_nbr),
-        name="CroSatFL")
+        mixing=mixing if mixing is not None else CrossAggMixing(k_nbr=k_nbr),
+        pacing=pacing, codec=codec,
+        name=name)
 
 
 def make_baseline(name: str, cfg: EngineConfig, env, model, *,
@@ -78,3 +88,44 @@ def make_baseline(name: str, cfg: EngineConfig, env, model, *,
 
 
 BASELINE_NAMES = ("FedSyn", "FedLEO", "FELLO", "FedSCS", "FedOrbit")
+
+
+def make_scenario(name: str, cfg: EngineConfig, env, model, *,
+                  k_nbr: int = 2,
+                  skip_one: Optional[SkipOneParams] = None,
+                  starmask: Optional[StarMaskParams] = None,
+                  **kw) -> RoundEngine:
+    """Scenario-zoo presets (DESIGN.md §8): CroSatFL's policy quadruple
+    with ONE surface swapped — each scenario is a policy, not a loop.
+
+      CroSatFL-SemiSync    = CroSatFL x deadline pacing (stragglers'
+                             late updates fold into the next mix)
+      CroSatFL-Async       = CroSatFL x staleness-weighted async merge
+                             (FedAsync-style; wall clock = mean cycle)
+      CroSatFL-Gossip      = CroSatFL x gossip-only mixing (no GS at all:
+                             LISL-flood bootstrap, consensus finalize)
+      CroSatFL-HeteroCodec = CroSatFL x per-cluster codec map
+                             (block-minifloat on CPU-heavy clusters,
+                             identity on GPU clusters)
+
+    ``**kw`` feeds the swapped policy's constructor (e.g. ``quantile``,
+    ``alpha0``, ``consensus_eps``, ``cpu_threshold``).
+    """
+    base = dict(k_nbr=k_nbr, skip_one=skip_one, starmask=starmask, name=name)
+    if name == "CroSatFL-SemiSync":
+        return make_crosatfl(cfg, env, model,
+                             pacing=SemiSyncPacing(**kw), **base)
+    if name == "CroSatFL-Async":
+        return make_crosatfl(cfg, env, model,
+                             pacing=AsyncPacing(**kw), **base)
+    if name == "CroSatFL-Gossip":
+        return make_crosatfl(cfg, env, model,
+                             mixing=GossipMixing(k_nbr=k_nbr, **kw), **base)
+    if name == "CroSatFL-HeteroCodec":
+        return make_crosatfl(cfg, env, model,
+                             codec=HardwareAwareCodecMap(**kw), **base)
+    raise KeyError(f"unknown scenario {name!r}")
+
+
+SCENARIO_NAMES = ("CroSatFL-SemiSync", "CroSatFL-Async", "CroSatFL-Gossip",
+                  "CroSatFL-HeteroCodec")

@@ -1,18 +1,27 @@
 """Transport: the single entry point of communication energy/latency into
-the ledger, with a payload-codec hook (DESIGN.md §7).
+the ledger, with a payload-codec hook (DESIGN.md §7-8).
 
 Every GS or LISL message any policy accounts goes through one of the
 three methods below, so all six algorithms share the exact same Eq. 5-6 /
 12-13 arithmetic and the same payload definition. Compression schemes
 (FedOrbit's block-minifloat, future quantizers) are codecs — they scale
 the payload bits and the arithmetic energy, never fork the accounting.
+
+Codecs may be engine-global (one ``PayloadCodec``) or heterogeneous per
+training cluster (a ``CodecMap``): ``Transport.for_cluster(kc)`` returns a
+view bound to cluster ``kc``'s codec over the same ledger, so e.g. a
+block-minifloat codec on CPU-heavy clusters and identity on GPU clusters
+coexist in one session without forking any accounting path (DESIGN.md §8).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
-from repro.core.energy import (EnergyLedger, LinkParams, e_gs, e_lisl, t_gs,
-                               t_lisl)
+import numpy as np
+
+from repro.core.energy import (CPU, EnergyLedger, LinkParams, e_gs, e_lisl,
+                               t_gs, t_lisl)
 
 
 @dataclass(frozen=True)
@@ -37,12 +46,70 @@ class BlockMinifloatCodec:
         return model_bits * self.bits / 32.0
 
 
+class CodecMap:
+    """Training-cluster index -> PayloadCodec, with a default for unmapped
+    clusters (and for messages with no cluster context, e.g. GS bootstrap).
+
+    ``bind(plan, env)`` is called by the engine once the cluster plan
+    exists; the static map ignores it, rule-based subclasses (below) derive
+    their per-cluster assignment from it.
+    """
+
+    def __init__(self, default=None, per_cluster: Optional[dict] = None):
+        self.default = default if default is not None else IdentityCodec()
+        self.per_cluster: dict = dict(per_cluster or {})
+
+    @property
+    def name(self) -> str:
+        return f"codec-map({self.default.name})"
+
+    def bind(self, plan, env) -> "CodecMap":
+        return self
+
+    def codec_for(self, kc: Optional[int]):
+        if kc is None:
+            return self.default
+        return self.per_cluster.get(int(kc), self.default)
+
+
+class HardwareAwareCodecMap(CodecMap):
+    """Heterogeneous-codec rule: clusters whose CPU-member fraction is at
+    least ``cpu_threshold`` get ``cpu_codec`` (default block-minifloat —
+    cheap arithmetic where compute energy is switched-capacitance bound),
+    the rest get ``gpu_codec`` (default identity). Resolved against the
+    actual cluster plan at ``bind`` time.
+    """
+
+    def __init__(self, cpu_codec=None, gpu_codec=None,
+                 cpu_threshold: float = 0.5):
+        super().__init__(default=gpu_codec if gpu_codec is not None
+                         else IdentityCodec())
+        self.cpu_codec = (cpu_codec if cpu_codec is not None
+                          else BlockMinifloatCodec())
+        self.cpu_threshold = cpu_threshold
+
+    @property
+    def name(self) -> str:
+        return f"hw-aware({self.cpu_codec.name}|{self.default.name})"
+
+    def bind(self, plan, env) -> "CodecMap":
+        hw = np.array([p.hw_type for p in env.profiles])
+        self.per_cluster = {
+            kc: self.cpu_codec for kc, c in enumerate(plan.clusters)
+            if float((hw[c] == CPU).mean()) >= self.cpu_threshold}
+        return self
+
+
 class Transport:
     """Accounts model-payload messages into an EnergyLedger.
 
     ``gs``/``intra``/``inter`` add ``n`` messages of one codec-encoded
     model payload each over the given distance; ``wait`` adds latency-only
     idle time (no energy, paper §III-C).
+
+    ``codec`` may be a single PayloadCodec (engine-global, the default) or
+    a ``CodecMap``; cluster-scoped policies call ``for_cluster(kc)`` to get
+    a view with that cluster's codec over the same ledger.
     """
 
     RELAY_FALLBACK_M = 3e6   # nominal relayed path when instantaneously cut
@@ -52,7 +119,32 @@ class Transport:
         self.ledger = ledger
         self.lp = link_params
         self.model_bits = model_bits
-        self.codec = codec if codec is not None else IdentityCodec()
+        if codec is None:
+            codec = IdentityCodec()
+        self.codec_map = (codec if isinstance(codec, CodecMap)
+                          else CodecMap(default=codec))
+        self.codec = self.codec_map.default
+        self._views: dict = {}       # codec id -> cached for_cluster view
+
+    def bind_clusters(self, plan, env) -> None:
+        """Resolve rule-based codec maps against the built cluster plan."""
+        self.codec_map.bind(plan, env)
+
+    def for_cluster(self, kc: Optional[int]) -> "Transport":
+        """View with cluster ``kc``'s codec (same ledger). Returns ``self``
+        when the cluster uses the default codec, so engine-global codecs
+        keep the exact pre-map accounting path."""
+        c = self.codec_map.codec_for(kc)
+        if c is self.codec:
+            return self
+        view = self._views.get(id(c))
+        if view is None:
+            view = Transport(self.ledger, self.lp, self.model_bits, c)
+            self._views[id(c)] = view
+        return view
+
+    def arith_scale_for(self, kc: Optional[int]) -> float:
+        return self.codec_map.codec_for(kc).arith_scale
 
     @property
     def payload_bits(self) -> float:

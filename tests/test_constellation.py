@@ -93,6 +93,89 @@ class TestGS:
             if np.isfinite(dist_s):
                 assert abs(dist_t - dist_s) / dist_s < 0.2
 
+    def test_window_table_wait_measured_from_t0(self):
+        """Regression for the wait-bias bug: waits were measured from the
+        floored grid index (overestimating every wait by up to step_s) and
+        a pass that ended mid-step returned wait=0 with a stale pre-t0
+        slant range. Cross-checks the table against the exact
+        ``GroundStation.next_window`` scan on grid-aligned queries (same
+        sample points -> identical waits) and pins the fixed semantics on
+        off-grid queries (contact = FIRST visible grid sample at/after t0,
+        wait measured from t0 itself)."""
+        w = WalkerDelta()
+        gs = GroundStation()
+        step, horizon = 60.0, 12 * 3600
+        table = WindowTable(gs, w, step_s=step, horizon_s=horizon)
+        rng = np.random.default_rng(3)
+
+        for sat in (0, 57, 371, 600):
+            # exact agreement with the O(horizon) scan at on-grid t0
+            for m in rng.integers(0, 240, 5):
+                t0 = float(m) * step
+                wait_t, dist_t = table.next_window(sat, t0)
+                if t0 + wait_t >= horizon:
+                    continue                  # table wrapped; scan didn't
+                wait_s, dist_s = gs.next_window(w, sat, t0, step_s=step,
+                                                horizon_s=horizon)
+                assert wait_t == wait_s
+                assert abs(dist_t - dist_s) / dist_s < 1e-5   # f32 table
+
+            # any t0 (off-grid, near the table end -> wrap path, beyond
+            # one period): the wait must EXACTLY match the brute-force
+            # periodic reference — wait 0 when the samples on both sides
+            # of t0 are visible (ongoing pass), else measured from t0 to
+            # the first visible grid sample at/after t0
+            def ref_wait(sat, t0):
+                f, i0 = int(np.floor(t0 / step)), int(np.ceil(t0 / step))
+                n = table.n_steps
+                if f != i0 and table.vis[f % n, sat] and \
+                        table.vis[i0 % n, sat]:
+                    return 0.0
+                for j in range(i0, i0 + n):
+                    if table.vis[j % n, sat]:
+                        return j * step - t0
+                return float(horizon)
+
+            t0s = [(float(m) + float(rng.uniform(0.05, 0.95))) * step
+                   for m in rng.integers(0, 240, 8)]
+            t0s += [(table.n_steps - 3 + 0.4) * step,    # forces the wrap
+                    (table.n_steps + 51 + 0.7) * step]   # t0 past one period
+            for t0 in t0s:
+                wait_t, _ = table.next_window(sat, t0)
+                assert wait_t == ref_wait(sat, t0)
+                if 0.0 < wait_t < horizon:
+                    contact = (t0 + wait_t) / step
+                    assert abs(contact - round(contact)) < 1e-6  # on grid
+                    assert table.vis[int(round(contact)) % table.n_steps,
+                                     sat]
+
+    def test_window_table_no_stale_contact_after_pass_end(self):
+        """A query landing between the last visible sample of a pass and
+        the next (invisible) sample must report the NEXT pass, not wait=0
+        with the ended pass's slant range."""
+        w = WalkerDelta()
+        gs = GroundStation()
+        step = 60.0
+        table = WindowTable(gs, w, step_s=step, horizon_s=12 * 3600)
+        for sat in range(50):
+            col = table.vis[:, sat]
+            ends = np.flatnonzero(col[:-1] & ~col[1:])   # pass-end samples
+            if ends.size:
+                break
+        assert ends.size > 0
+        i = int(ends[0])
+        t0 = (i + 0.5) * step                            # just past sample i
+        wait, _ = table.next_window(sat, t0)
+        assert wait > 0.0                                # pre-fix: == 0.0
+
+        # ...but a query INSIDE an ongoing pass (visible samples on both
+        # sides) is in contact now: wait must be exactly 0
+        mids = np.flatnonzero(col[:-1] & col[1:])
+        assert mids.size > 0
+        t0 = (int(mids[0]) + 0.5) * step
+        wait, _ = table.next_window(sat, t0)
+        assert wait == 0.0
+
     def test_slant_range_reasonable(self):
         """Contact slant range between altitude and horizon distance."""
         w = WalkerDelta()

@@ -75,6 +75,40 @@ def test_mixing_matrix_invariants(k, k_nbr, seed, density):
 
 
 @settings(**SETTINGS)
+@given(k=st.integers(2, 12), k_nbr=st.integers(0, 5),
+       seed=st.integers(0, 1000), density=st.floats(0.0, 1.0))
+def test_mixing_matrix_jax_matches_host_semantics(k, k_nbr, seed, density):
+    """The jittable Gumbel-top-k path (Eq. 35-37 in one shot) must agree
+    with the host path's semantics for any reach mask: row-stochastic,
+    reachability-respecting, N_j-proportional within the chosen group, and
+    the same group SIZES as sample_groups+mixing_matrix (take-all when a
+    row has fewer than k_nbr neighbors) — the members themselves differ
+    only by RNG."""
+    rng = np.random.default_rng(seed)
+    reach = rng.random((k, k)) < density
+    n = rng.uniform(1.0, 100.0, k)
+    M = np.asarray(crossagg.mixing_matrix_jax(
+        jnp.asarray(reach), jnp.asarray(n), k_nbr,
+        jax.random.PRNGKey(seed)), np.float64)
+
+    np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-5)     # f32 rows
+    assert (M >= 0).all()
+    assert (np.diag(M) > 0).all()                 # self always included
+    cand = reach & ~np.eye(k, dtype=bool)
+    assert not M[~(cand | np.eye(k, dtype=bool))].any()   # reachability
+
+    groups = crossagg.sample_groups(reach, k_nbr, rng)
+    for kk in range(k):
+        chosen = np.flatnonzero(M[kk] > 0)
+        # group-size semantics match the host sampler exactly
+        assert chosen.size == 1 + min(k_nbr, int(cand[kk].sum()))
+        assert chosen.size == len(groups[kk])
+        # Eq. 37 sample-size proportionality over the chosen group
+        np.testing.assert_allclose(M[kk, chosen],
+                                   n[chosen] / n[chosen].sum(), rtol=1e-5)
+
+
+@settings(**SETTINGS)
 @given(k=st.integers(2, 8), seed=st.integers(0, 500))
 def test_mixing_preserves_weighted_mean(k, seed):
     """Data-weighted global mean is invariant under SYMMETRIC group mixing

@@ -1,0 +1,313 @@
+"""Scenario zoo on the round engine (DESIGN.md §8): pacing policies
+(semi-sync deadline, async staleness-weighted), gossip-only sessions,
+per-cluster codec maps — plus the zero-participant guard. Policy-level
+tests use a toy vector model; integration tests run one real round per
+scenario preset on the shared tiny setup."""
+import dataclasses
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.energy import EnergyLedger, LinkParams, e_lisl
+from repro.fl.engine import (SCENARIO_NAMES, AsyncPacing, BlockMinifloatCodec,
+                             CodecMap, EngineConfig, GSStarMixing,
+                             RelayedGSStarMixing, RoundEngine, RoundSelection,
+                             SemiSyncPacing, SingleCluster, TopMEnergyUtility,
+                             Transport, make_crosatfl, make_scenario)
+from repro.fl.engine.base import EngineContext
+from repro.fl.engine.mixing import _GSCentricMixing
+
+from golden_capture import build_setup, session_config
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return build_setup()
+
+
+def scenario_engine(name, env, model, rounds=1, **kw):
+    scfg = session_config(model)
+    cfg = dataclasses.replace(scfg.engine_config(), rounds=rounds)
+    return make_scenario(name, cfg, env, model, k_nbr=scfg.k_nbr,
+                         starmask=scfg.starmask, **kw)
+
+
+def crosatfl_engine(env, model, rounds=1, **kw):
+    scfg = session_config(model)
+    cfg = dataclasses.replace(scfg.engine_config(), rounds=rounds)
+    return make_crosatfl(cfg, env, model, k_nbr=scfg.k_nbr,
+                         starmask=scfg.starmask, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pacing policies (unit level, toy vector model)
+# ---------------------------------------------------------------------------
+
+class _VecModel:
+    """Minimal model duck-type: params are plain (d,) vectors."""
+
+    def stack(self, params_list):
+        return jnp.stack([jnp.asarray(p, jnp.float32) for p in params_list])
+
+    def unstack(self, stacked, k):
+        return [stacked[i] for i in range(k)]
+
+
+def _ctx(et_full):
+    led = EnergyLedger()
+    return EngineContext(
+        cfg=EngineConfig(), env=None, model=None,
+        transport=Transport(led, LinkParams(), 1e6),
+        rng=np.random.default_rng(0), tt_full=np.zeros(0),
+        et_full=np.asarray(et_full, float), hw_penalty=np.zeros(0))
+
+
+def _sel(tt, ids=None):
+    tt = np.asarray(tt, float)
+    ids = np.asarray(ids if ids is not None else np.arange(len(tt)))
+    return RoundSelection(ids, np.ones(len(tt), bool), tt)
+
+
+class TestSemiSyncPacing:
+    def test_deadline_defers_straggler_then_folds_next_round(self):
+        pac = SemiSyncPacing(quantile=0.5, beta=0.5)
+        model = _VecModel()
+        ctx = _ctx([1.0, 1.0])
+        state = SimpleNamespace(
+            cluster_models=model.stack([np.zeros(2), np.zeros(2)]))
+
+        # round 0: cluster 0 finishes at 1s, cluster 1 at 10s; the 0.5
+        # quantile deadline (5.5s) defers cluster 1's update
+        pac.begin_round(ctx, 0)
+        sels = [_sel([1.0], ids=[0]), _sel([10.0], ids=[1])]
+        b = [pac.account_cluster(ctx, sels[0], 0),
+             pac.account_cluster(ctx, sels[1], 1)]
+        fresh = [jnp.ones(2), 2.0 * jnp.ones(2)]
+        merged = pac.merge(ctx, model, state, fresh, sels, 0)
+        np.testing.assert_allclose(np.asarray(merged[0]), 1.0)   # on time
+        np.testing.assert_allclose(np.asarray(merged[1]), 0.0)   # deferred
+        assert pac.advance(b) == 5.5                             # deadline
+        assert 1 in pac._pending
+
+        # round 1: both on time; the stash folds in with weight beta
+        state.cluster_models = merged
+        pac.begin_round(ctx, 1)
+        sels = [_sel([1.0], ids=[0]), _sel([1.0], ids=[1])]
+        for kc in range(2):
+            pac.account_cluster(ctx, sels[kc], kc)
+        fresh = [3.0 * jnp.ones(2), 4.0 * jnp.ones(2)]
+        merged = pac.merge(ctx, model, state, fresh, sels, 1)
+        np.testing.assert_allclose(np.asarray(merged[0]), 3.0)
+        # (1-beta)*fresh + beta*late = 0.5*4 + 0.5*2
+        np.testing.assert_allclose(np.asarray(merged[1]), 3.0)
+        assert not pac._pending
+
+    def test_nobody_waits_past_the_deadline(self):
+        """On-time members idle to the deadline; a straggler's overshoot
+        is training, not waiting."""
+        pac = SemiSyncPacing(deadline_s=4.0)
+        ctx = _ctx([1.0, 1.0])
+        pac.begin_round(ctx, 0)
+        sels = [_sel([1.0], ids=[0]), _sel([10.0], ids=[1])]
+        for kc in range(2):
+            pac.account_cluster(ctx, sels[kc], kc)
+        pac.merge(ctx, _VecModel(),
+                  SimpleNamespace(cluster_models=_VecModel().stack(
+                      [np.zeros(1), np.zeros(1)])),
+                  [jnp.zeros(1), jnp.zeros(1)], sels, 0)
+        # cluster 0's member idles 4-1=3s; the straggler idles nothing
+        assert ctx.ledger.waiting_time_s == 3.0
+        assert pac.advance([1.0, 10.0]) == 4.0
+
+    def test_generous_deadline_books_no_phantom_waiting(self):
+        """Regression: a fixed deadline_s far beyond every barrier must
+        degrade to sync (round closes when all clusters are done) — idle
+        time is never booked past the wall-clock end of the round."""
+        pac = SemiSyncPacing(deadline_s=3600.0)
+        ctx = _ctx([1.0, 1.0])
+        pac.begin_round(ctx, 0)
+        sels = [_sel([1.0], ids=[0]), _sel([2.0], ids=[1])]
+        for kc in range(2):
+            pac.account_cluster(ctx, sels[kc], kc)
+        model = _VecModel()
+        merged = pac.merge(
+            ctx, model,
+            SimpleNamespace(cluster_models=model.stack([np.zeros(1),
+                                                        np.zeros(1)])),
+            [5.0 * jnp.ones(1), 6.0 * jnp.ones(1)], sels, 0)
+        assert pac.advance([1.0, 2.0]) == 2.0    # not 3600
+        assert ctx.ledger.waiting_time_s == 1.0  # member 0 idles 2-1 only
+        assert not pac._pending                  # everyone is on time
+        np.testing.assert_allclose(np.asarray(merged), [[5.0], [6.0]])
+
+    def test_param_validation(self):
+        with pytest.raises(ValueError):
+            SemiSyncPacing(quantile=0.0)
+        with pytest.raises(ValueError):
+            SemiSyncPacing(beta=1.5)
+
+
+class TestAsyncPacing:
+    def test_staleness_weights_follow_arrival_rank(self):
+        pac = AsyncPacing(alpha0=0.6, decay=1.0)
+        a = pac.staleness_weights(np.array([3.0, 1.0, 2.0]))
+        np.testing.assert_allclose(a, [0.6 / 3, 0.6, 0.6 / 2])
+
+    def test_merge_is_staleness_weighted_convex_combination(self):
+        pac = AsyncPacing(alpha0=0.5, decay=1.0)
+        model = _VecModel()
+        ctx = _ctx([1.0, 1.0])
+        state = SimpleNamespace(
+            cluster_models=model.stack([np.zeros(3), np.zeros(3)]))
+        pac.begin_round(ctx, 0)
+        sels = [_sel([2.0], ids=[0]), _sel([1.0], ids=[1])]
+        b = [pac.account_cluster(ctx, sels[kc], kc) for kc in range(2)]
+        merged = pac.merge(ctx, model, state,
+                           [jnp.ones(3), jnp.ones(3)], sels, 0)
+        # cluster 1 arrives first (rank 0, alpha=0.5); cluster 0 second
+        # (rank 1, alpha=0.25); old models are zero
+        np.testing.assert_allclose(np.asarray(merged[0]), 0.25)
+        np.testing.assert_allclose(np.asarray(merged[1]), 0.5)
+        # async wall clock advances by the MEAN cluster cycle, not the max
+        assert pac.advance(b) == pytest.approx(1.5)
+
+
+class TestPacingIntegration:
+    def test_async_and_semisync_shorten_wall_clock(self, setup):
+        env, model = setup
+        _, led_sync, _ = crosatfl_engine(env, model).run()
+        _, led_async, _ = scenario_engine("CroSatFL-Async", env, model).run()
+        _, led_semi, _ = scenario_engine("CroSatFL-SemiSync", env,
+                                         model).run()
+        assert led_async.wall_clock_s <= led_sync.wall_clock_s
+        assert led_semi.wall_clock_s <= led_sync.wall_clock_s
+        # pacing only re-times the round: message counts are unchanged
+        assert led_async.gs_count == led_sync.gs_count
+        assert led_async.intra_lisl_count == led_sync.intra_lisl_count
+
+    def test_semisync_straggler_fold_over_rounds(self, setup):
+        env, model = setup
+        eng = scenario_engine("CroSatFL-SemiSync", env, model, rounds=2,
+                              quantile=0.5)
+        w, led, hist = eng.run(eval_fn=lambda p, r: model.evaluate(p))
+        assert len(hist) == 2
+        assert all(np.isfinite(h["loss"]) for h in hist)
+        assert led.total_energy_j > 0
+
+
+# ---------------------------------------------------------------------------
+# Gossip-only sessions
+# ---------------------------------------------------------------------------
+
+class TestGossipOnly:
+    def test_no_gs_contact_at_all(self, setup):
+        env, model = setup
+        eng = scenario_engine("CroSatFL-Gossip", env, model)
+        w, led, _ = eng.run()
+        assert led.gs_count == 0
+        assert led.gs_energy_j == 0.0
+        assert led.train_energy_j > 0
+        assert led.inter_lisl_count > 0          # flood + gossip + consensus
+
+    def test_consensus_finalize_reports_mixing_bound(self, setup):
+        env, model = setup
+        eng = scenario_engine("CroSatFL-Gossip", env, model,
+                              consensus_eps=1e-2)
+        _, led_g, _ = eng.run()
+        info = eng.mixing.last_consensus
+        assert 0.0 <= info["sigma2"] < 1.0       # connected master graph
+        assert 1 <= info["rounds"] <= eng.mixing.max_consensus_rounds
+        # consensus rounds cost extra inter-LISL traffic vs plain CroSatFL
+        env2, model2 = setup
+        _, led_c, _ = crosatfl_engine(env2, model2).run()
+        assert led_g.inter_lisl_count > led_c.inter_lisl_count
+
+
+# ---------------------------------------------------------------------------
+# Per-cluster codec maps
+# ---------------------------------------------------------------------------
+
+class TestCodecMap:
+    def test_static_map_scopes_codec_per_cluster(self):
+        lp = LinkParams()
+        cm = CodecMap(per_cluster={1: BlockMinifloatCodec(bits=8)})
+        led = EnergyLedger()
+        tr = Transport(led, lp, 1e6, cm)
+        assert tr.for_cluster(0) is tr           # default → same object
+        assert tr.for_cluster(None) is tr
+        assert tr.arith_scale_for(0) == 1.0
+        assert tr.arith_scale_for(1) == 0.5
+        tr.for_cluster(1).intra(1, 1e6)
+        assert led.lisl_energy_j == e_lisl(1e6 * 8 / 32, lp.lisl_rate,
+                                           1e6, lp)
+        tr.for_cluster(0).intra(1, 1e6)          # full payload, same ledger
+        assert led.intra_lisl_count == 2
+
+    def test_hardware_aware_map_halves_cpu_cluster_energy(self, setup):
+        env, model = setup
+        _, led_i, _ = crosatfl_engine(env, model).run()
+        eng = scenario_engine("CroSatFL-HeteroCodec", env, model)
+        _, led_h, _ = eng.run()
+        # the fixture (gpu_fraction=0.5) yields at least one CPU-heavy
+        # cluster, so block-minifloat actually engages somewhere
+        assert eng.codec.per_cluster
+        # same protocol (identical message counts), cheaper energy
+        assert led_h.gs_count == led_i.gs_count
+        assert led_h.intra_lisl_count == led_i.intra_lisl_count
+        assert led_h.inter_lisl_count == led_i.inter_lisl_count
+        assert led_h.train_energy_j < led_i.train_energy_j
+        assert led_h.lisl_energy_j < led_i.lisl_energy_j
+
+
+# ---------------------------------------------------------------------------
+# Scenario presets end-to-end
+# ---------------------------------------------------------------------------
+
+class TestScenarioPresets:
+    @pytest.mark.parametrize("name", SCENARIO_NAMES)
+    def test_preset_completes_with_finite_nonzero_ledger(self, setup, name):
+        env, model = setup
+        eng = scenario_engine(name, env, model)
+        assert eng.name == name
+        w, led, hist = eng.run(eval_fn=lambda p, r: model.evaluate(p))
+        row = led.row()
+        assert all(np.isfinite(v) for v in row.values())
+        assert led.total_energy_j > 0
+        assert led.train_energy_j > 0
+        assert len(hist) == 1 and np.isfinite(hist[0]["loss"])
+        if name == "CroSatFL-Gossip":
+            assert led.gs_count == 0
+        else:
+            assert led.gs_count > 0
+
+
+# ---------------------------------------------------------------------------
+# Zero-participant rounds (regression: max() on empty waits / sels[0])
+# ---------------------------------------------------------------------------
+
+class TestZeroParticipantRound:
+    def test_barrier_waits_empty_returns_zero(self):
+        led = EnergyLedger()
+        tr = Transport(led, LinkParams(), 1e6)
+        assert _GSCentricMixing()._barrier_waits(tr, []) == 0.0
+        assert led.waiting_time_s == 0.0
+
+    @pytest.mark.parametrize("mixing_cls", [GSStarMixing,
+                                            RelayedGSStarMixing])
+    def test_empty_selection_round_completes(self, setup, mixing_cls):
+        env, model = setup
+        eng = RoundEngine(
+            EngineConfig(rounds=1, local_epochs=1,
+                         model_bits=model.model_bits()),
+            env, model,
+            clustering=SingleCluster(),
+            selection=TopMEnergyUtility(select_m=0),
+            mixing=mixing_cls(), name="empty-round")
+        w, led, _ = eng.run()
+        assert led.train_energy_j == 0.0
+        assert led.compute_time_s == 0.0
+        assert led.waiting_time_s == 0.0
+        assert led.gs_count == 0
+        assert np.isfinite(led.wall_clock_s)

@@ -95,6 +95,41 @@ class TestCroSatFLSession:
                                       np.asarray(st.rng_key))
         assert st2.ledger.gs_count == led_half.gs_count
 
+    def test_resume_replays_uninterrupted_run_bitwise(self, setup, tmp_path):
+        """Regression: a resumed session must reproduce the uninterrupted
+        session's ledger, weights and history BIT-FOR-BIT. SessionState
+        used to round-trip only the JAX ``rng_key``; the host numpy RNG
+        (selection jitter, cross-agg group sampling, top-m noise) silently
+        re-seeded on resume and the session diverged. Both RNG streams now
+        ride in the checkpoint (``rng_state``)."""
+        import dataclasses
+        import json
+
+        from repro.ckpt import load_session
+        env, model = setup
+        cfg = SessionConfig(edge_rounds=4, local_epochs=1, k_nbr=2,
+                            model_bits=model.model_bits(),
+                            starmask=StarMaskParams(k_max=4, m_min=2))
+        ev = lambda p, r: model.evaluate(p)   # noqa: E731
+        w_full, led_full, hist_full = Session(cfg, env, model).run(
+            eval_fn=ev, ckpt_dir=str(tmp_path / "ck"))
+
+        with open(tmp_path / "ck" / "step_2" / "meta.json") as f:
+            meta = json.load(f)
+        assert meta["host_rng"] is not None        # bit-generator persisted
+        K = len(meta["masters"])
+        like = model.stack([model.init(jax.random.PRNGKey(0))] * K)
+        st = load_session(str(tmp_path / "ck" / "step_2"), like)
+        assert st.round_idx == 2 and st.rng_state is not None
+
+        w_res, led_res, hist_res = Session(cfg, env, model).run(
+            eval_fn=ev, state=st)
+        assert dataclasses.asdict(led_res) == dataclasses.asdict(led_full)
+        for a, b in zip(jax.tree.leaves(w_res), jax.tree.leaves(w_full)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert ([h["acc"] for h in hist_res]
+                == [h["acc"] for h in hist_full[2:]])
+
 
 class TestBaselines:
     @pytest.mark.parametrize("name", list(BASELINES))
