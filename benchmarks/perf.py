@@ -1,0 +1,202 @@
+"""Round-engine performance harness: sequential vs device-resident
+batched execution vs batched + Pallas cross-agg mixing (DESIGN.md §9).
+
+    PYTHONPATH=src python -m benchmarks.perf [--smoke] [--sizes a,b]
+        [--out PATH]
+
+Per constellation size, builds ONE (env, model) setup and times a full
+``RoundEngine.run`` per execution mode (after a 2-round warmup run that
+pays all jit compiles), reporting rounds/sec and local-SGD steps/sec —
+steps counted exactly via a model proxy that records every trained
+participant, so the two paths are compared on identical realized work
+(same seed -> same Skip-One draws).
+
+Writes ``BENCH_round_engine.json`` at the repo root (NOT results/, which
+is gitignored): the file seeds the repo's perf trajectory, is committed,
+and CI's ``perf-smoke`` job uploads its ``--smoke`` variant as a diffable
+artifact next to the smoke ledgers. The per-client data is deliberately
+small (8x8 single-channel images, 10 samples/client): the batched path's
+win is per-call dispatch + per-op thunk overhead + unstack/restack +
+host->device traffic, which is exactly the regime a dense-constellation
+simulation at fixed per-satellite data lives in.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_round_engine.json")
+
+# constellation sizes: the 40-client/8-cluster cell is the pinned
+# acceptance config; 16/4 and 96/16 bracket it
+SIZES = {
+    "fleet16": dict(n_clients=16, k_max=4, rounds=20),
+    "fleet40": dict(n_clients=40, k_max=8, rounds=20),
+    "fleet96": dict(n_clients=96, k_max=16, rounds=10),
+}
+SMOKE_SIZES = {"fleet16": dict(n_clients=16, k_max=4, rounds=8)}
+
+MODES = ("sequential", "batched", "batched+pallas-mix")
+
+HW, CHANNELS, WIDTH, PER_CLIENT, EPOCHS = 8, 1, 4, 10, 1
+
+
+class _CountingModel:
+    """Model proxy that counts trained participants (exact steps/sec)."""
+
+    def __init__(self, model):
+        self._m = model
+        self.participants = 0
+
+    def __getattr__(self, name):
+        return getattr(self._m, name)
+
+    def cluster_round(self, w, participant_ids, n_samples, epochs, key):
+        self.participants += len(participant_ids)
+        return self._m.cluster_round(w, participant_ids, n_samples, epochs,
+                                     key)
+
+    def fleet_round(self, stacked_w, participant_lists, n_samples, epochs,
+                    cluster_keys, pad_to=None):
+        self.participants += sum(len(p) for p in participant_lists)
+        return self._m.fleet_round(stacked_w, participant_lists, n_samples,
+                                   epochs, cluster_keys, pad_to=pad_to)
+
+
+def build_setup(size_cfg: dict, seed: int = 0):
+    import numpy as np
+
+    from repro.constellation import ConstellationEnv
+    from repro.data.synth import SynthImageDataset, iid_partition
+    from repro.fl.client import ImageFLModel
+
+    n_clients = size_cfg["n_clients"]
+    ds = SynthImageDataset.make(name="bench-sim", n=PER_CLIENT * n_clients,
+                                hw=HW, c=CHANNELS, snr=2.0, n_classes=10,
+                                seed=seed)
+    test = SynthImageDataset.make(name="bench-sim", n=100, hw=HW, c=CHANNELS,
+                                  snr=2.0, n_classes=10, seed=seed + 99)
+    parts = iid_partition(len(ds.y), n_clients, seed)
+    env = ConstellationEnv(
+        n_clients=n_clients,
+        n_samples=np.array([len(p) for p in parts], float), seed=seed)
+    model = ImageFLModel(ds, parts, test, width=WIDTH)
+    return env, model
+
+
+def make_engine(mode: str, env, model, size_cfg: dict):
+    from repro.core.starmask import StarMaskParams
+    from repro.fl.engine import EngineConfig, make_crosatfl
+
+    cfg = EngineConfig(rounds=size_cfg["rounds"], local_epochs=EPOCHS,
+                       model_bits=model.model_bits(), seed=0,
+                       batched_exec=(mode != "sequential"))
+    return make_crosatfl(
+        cfg, env, model,
+        starmask=StarMaskParams(k_max=size_cfg["k_max"], m_min=2),
+        mixing_backend="pallas" if mode.endswith("pallas-mix") else None,
+        name=f"CroSatFL[{mode}]")
+
+
+def time_mode(mode: str, env, model, size_cfg: dict,
+              repeats: int = 3) -> dict:
+    """Best-of-``repeats`` full runs (after a compile-paying warmup run):
+    the container's CPU shares are bursty, and best-of is the standard
+    way to report the machine's actual capability per mode."""
+    import jax
+
+    counter = _CountingModel(model)
+    eng = make_engine(mode, env, counter, size_cfg)
+    eng.run(rounds=2)                        # warmup: pay every jit compile
+    wall, steps = float("inf"), 0
+    for _ in range(repeats):
+        counter.participants = 0
+        t0 = time.perf_counter()
+        w, ledger, _ = eng.run()
+        jax.block_until_ready(jax.tree.leaves(w))
+        dt = time.perf_counter() - t0
+        if dt < wall:
+            wall = dt
+            steps = (counter.participants * EPOCHS
+                     * (model.n_pad // model.batch))
+    rounds = size_cfg["rounds"]
+    return {
+        "wall_s": round(wall, 4),
+        "rounds_per_s": round(rounds / wall, 4),
+        "local_steps_per_s": round(steps / wall, 2),
+        "n_clusters": eng.last_plan.n_clusters,
+        "timing": f"best of {repeats}",
+    }
+
+
+def run(sizes: dict, out_path: str) -> int:
+    import jax
+
+    report = {
+        "harness": "benchmarks/perf.py",
+        "protocol": {
+            "dataset": f"bench-sim {HW}x{HW}x{CHANNELS}",
+            "model": f"small-cnn width={WIDTH}",
+            "samples_per_client": PER_CLIENT,
+            "local_epochs": EPOCHS,
+            "warmup": "one 2-round run per mode before timing",
+        },
+        "platform": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "devices": len(jax.devices()),
+            "cpu_count": os.cpu_count(),
+        },
+        "sizes": {},
+    }
+    failures = 0
+    for name, size_cfg in sizes.items():
+        env, model = build_setup(size_cfg)
+        row: dict = {"config": dict(size_cfg), "modes": {}}
+        for mode in MODES:
+            try:
+                row["modes"][mode] = time_mode(mode, env, model, size_cfg)
+                m = row["modes"][mode]
+                print(f"{name:8s} {mode:20s} {m['wall_s']:8.3f}s "
+                      f"{m['rounds_per_s']:7.2f} rounds/s "
+                      f"{m['local_steps_per_s']:9.1f} steps/s "
+                      f"K={m['n_clusters']}")
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures += 1
+                print(f"FAILED {name}/{mode}: {type(e).__name__}: {e}")
+        seq = row["modes"].get("sequential")
+        if seq:
+            row["speedup_vs_sequential"] = {
+                mode: round(row["modes"][mode]["rounds_per_s"]
+                            / seq["rounds_per_s"], 3)
+                for mode in row["modes"] if mode != "sequential"}
+            print(f"{name:8s} speedup: " + "  ".join(
+                f"{k}={v}x" for k, v in row["speedup_vs_sequential"].items()))
+        report["sizes"][name] = row
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny single-size profile for CI")
+    ap.add_argument("--sizes", default=None,
+                    help=f"comma-separated subset of {list(SIZES)}")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    sizes = SMOKE_SIZES if args.smoke else SIZES
+    if args.sizes:
+        sizes = {k: SIZES[k] for k in args.sizes.split(",")}
+    return run(sizes, args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,8 @@ Fault-tolerance contract (DESIGN.md §6):
 * ``save_session``/``load_session`` — full CroSatFL SessionState
   (cluster models + Skip-One fairness counters + masters + BOTH RNG
   streams (JAX key and host numpy bit-generator state) + energy ledger +
-  round index), written at edge-round boundaries. A restarted session
+  round index + the pacing policy's straggler stash, when one is
+  pending), written at edge-round boundaries. A restarted session
   continues from the latest cluster models — exactly the paper's
   master-migration property — and replays the uninterrupted session
   bit-for-bit (tests/test_session.py pins this).
@@ -75,6 +76,14 @@ def save_session(state, path: str) -> None:
     from repro.core.skipone import SkipOneState
     os.makedirs(path, exist_ok=True)
     save_pytree(state.cluster_models, os.path.join(path, "models.npz"))
+    # pacing-policy cross-round state (SemiSyncPacing's straggler stash:
+    # kc -> deferred fresh cluster model) rides next to the models so a
+    # semi-sync resume is exact even with an update pending (DESIGN.md §8)
+    pstate = getattr(state, "pacing_state", None)
+    pending = pstate.get("pending") if isinstance(pstate, dict) else None
+    if pending:
+        save_pytree({str(kc): w for kc, w in pending.items()},
+                    os.path.join(path, "pacing.npz"))
     meta = {
         "round_idx": state.round_idx,
         "masters": state.masters.tolist(),
@@ -83,6 +92,7 @@ def save_session(state, path: str) -> None:
         # ints — JSON-exact): without it a resumed session draws different
         # selection jitter / group samples than the uninterrupted one
         "host_rng": state.rng_state,
+        "pacing_pending": sorted(int(kc) for kc in pending) if pending else [],
         "ledger": dataclasses.asdict(state.ledger),
         "skip": [{"kappa": s.kappa.tolist(), "tau": s.tau.tolist(),
                   "phi": s.phi.tolist()} for s in state.skip_states],
@@ -102,12 +112,22 @@ def load_session(path: str, models_like) -> "SessionState":
     skip = [SkipOneState(np.array(s["kappa"]), np.array(s["tau"]),
                          np.array(s["phi"])) for s in meta["skip"]]
     ledger = EnergyLedger(**meta["ledger"])
+    pacing_state = None
+    pend_keys = meta.get("pacing_pending") or []
+    if pend_keys:
+        # every stashed model shares the single-cluster-model structure
+        single_like = jax.tree.map(lambda l: l[0], models_like)
+        loaded = load_pytree(os.path.join(path, "pacing.npz"),
+                             {str(kc): single_like for kc in pend_keys})
+        pacing_state = {"pending": {int(kc): loaded[str(kc)]
+                                    for kc in pend_keys}}
     return SessionState(
         round_idx=meta["round_idx"], cluster_models=models,
         skip_states=skip, masters=np.array(meta["masters"]),
         rng_key=jnp.asarray(np.array(meta["rng_key"], np.uint32)),
         ledger=ledger,
-        rng_state=meta.get("host_rng"))   # None on pre-field checkpoints
+        rng_state=meta.get("host_rng"),   # None on pre-field checkpoints
+        pacing_state=pacing_state)
 
 
 def latest_checkpoint(directory: str) -> Optional[str]:

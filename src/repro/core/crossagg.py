@@ -81,8 +81,24 @@ def mixing_matrix_jax(reach: jax.Array, n_samples: jax.Array, k_nbr: int,
     return w / w.sum(axis=1, keepdims=True)
 
 
-def apply_mixing(M, stacked_models):
-    """w'_k = sum_j M[k,j] w_j for every leaf of the stacked (K, ...) pytree."""
+def apply_mixing(M, stacked_models, backend: str = "einsum"):
+    """w'_k = sum_j M[k,j] w_j for every leaf of the stacked (K, ...) pytree.
+
+    ``backend="pallas"`` routes through the fused ``kernels/cross_agg``
+    tile kernel instead of the per-leaf matmul: leaves are concatenated
+    into one (K, N_total) buffer so the whole model stack streams through
+    HBM once (interpret mode off-TPU; parity vs this reference pinned in
+    tests/test_kernels.py).
+    """
+    leaves = jax.tree.leaves(stacked_models)
+    if leaves and leaves[0].shape[0] == 0:
+        return stacked_models        # zero-participant round: nothing to mix
+    if backend == "pallas":
+        from repro.kernels.cross_agg import cross_agg_tree
+        return cross_agg_tree(jnp.asarray(M, F32), stacked_models,
+                              interpret=jax.default_backend() != "tpu")
+    if backend != "einsum":
+        raise ValueError(f"unknown mixing backend {backend!r}")
     Mj = jnp.asarray(M, F32)
 
     def mix(leaf):

@@ -52,6 +52,7 @@ class SessionConfig:
     c_flop: Any = 5e7                # FLOPs/sample, or "measured:<arch>/<shape>"
     model_bits: float = 8 * 44.7e6   # payload d (ResNet-18 fp32 ~ 44.7 MB)
     seed: int = 0
+    batched_exec: bool = False       # device-resident fleet_round path (§9)
     skip_one: skipone.SkipOneParams = field(default_factory=skipone.SkipOneParams)
     starmask: StarMaskParams = field(default_factory=StarMaskParams)
 
@@ -59,7 +60,7 @@ class SessionConfig:
         return EngineConfig(rounds=self.edge_rounds,
                             local_epochs=self.local_epochs,
                             c_flop=self.c_flop, model_bits=self.model_bits,
-                            seed=self.seed)
+                            seed=self.seed, batched_exec=self.batched_exec)
 
 
 class Session:
@@ -89,7 +90,9 @@ class Session:
             policy_params: Optional[dict] = None,
             ckpt_dir: Optional[str] = None,
             ckpt_every: int = 1,
+            eval_every: int = 1,
             ) -> tuple[Any, EnergyLedger, list[dict]]:
         self.engine.clustering.policy_params = policy_params
         return self.engine.run(rounds=rounds, eval_fn=eval_fn, state=state,
-                               ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+                               ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                               eval_every=eval_every)

@@ -5,6 +5,8 @@ fl/baselines.py:
 
     init(key) -> params
     cluster_round(w, participant_ids, n_samples, epochs, key) -> w'
+    fleet_round(stacked_w, participant_lists, n_samples, epochs,
+                cluster_keys) -> stacked_w'   (batched, one compiled call)
     local_update(w, client_id, epochs, key) -> w_i  (single client)
     stack(list[params]) / unstack(stacked, K)
     evaluate(params) -> {"acc": ..., "loss": ...}
@@ -12,13 +14,24 @@ fl/baselines.py:
 Local training is one jitted call per (client, round): data is padded to a
 fixed ``n_pad`` so every client shares a single compilation; padded rows
 are masked out of the loss. SGD-momentum, batch size 10 (paper Table I).
+
+``fleet_round`` is the device-resident batched path (DESIGN.md §9): all
+client data lives on device once, stacked ``(n_clients, n_pad, H, W, C)``
+with row masks, and one jitted call — ``vmap`` over clusters x (padded)
+participants — trains every participant of every cluster and folds the
+per-cluster sample-weighted FedAvg, so per-round host->device traffic is
+just the participant index/weight/key arrays. Per-participant PRNG keys
+are split exactly as the sequential ``cluster_round`` splits them, so the
+two paths differ only by XLA scheduling (tolerance-pinned parity in
+tests/test_batched_exec.py; the sequential path stays the bit-parity
+reference).
 """
 from __future__ import annotations
 
 import inspect
 import math
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,11 +44,17 @@ from repro.optim.optimizers import sgd_init, sgd_update
 F32 = jnp.float32
 
 
-@partial(jax.jit, static_argnames=("apply_fn", "epochs", "batch", "lr",
-                                   "momentum"))
-def _local_train(params, x, y, mask, key, *, apply_fn, epochs: int,
-                 batch: int, lr: float, momentum: float):
-    """x: (n_pad, H, W, C); mask: (n_pad,) 1.0 for real rows."""
+def _local_train_body(params, x, y, mask, key, *, apply_fn, epochs: int,
+                      batch: int, lr: float, momentum: float,
+                      unroll: bool = False):
+    """x: (n_pad, H, W, C); mask: (n_pad,) 1.0 for real rows.
+
+    ``unroll`` inlines both training loops (same ops, same order): under
+    ``vmap`` the rolled XLA while-loops round-trip the whole
+    (lanes, ...) carry every iteration, so the fleet path unrolls when
+    the loop count is small; the sequential path keeps rolled loops
+    (unrolling there only bloats compile time).
+    """
     n_pad = x.shape[0]
     steps = n_pad // batch
 
@@ -59,13 +78,63 @@ def _local_train(params, x, y, mask, key, *, apply_fn, epochs: int,
             p, mstate = sgd_update(p, g, mstate, lr=lr, momentum=momentum)
             return (p, mstate), ()
 
-        (p, m), _ = jax.lax.scan(step, (p, m), (xs, ys, ms))
+        (p, m), _ = jax.lax.scan(step, (p, m), (xs, ys, ms), unroll=unroll)
         return (p, m), ()
 
     m0 = sgd_init(params)
     (params, _), _ = jax.lax.scan(epoch, (params, m0),
-                                  jax.random.split(key, epochs))
+                                  jax.random.split(key, epochs),
+                                  unroll=unroll)
     return params
+
+
+_local_train = jax.jit(_local_train_body,
+                       static_argnames=("apply_fn", "epochs", "batch", "lr",
+                                        "momentum", "unroll"))
+
+# fully unrolling epochs x steps bodies is only worth the compile cost
+# while the total loop count is small (benchmark-scale rounds); past this
+# the fleet path falls back to rolled loops like the sequential path
+_UNROLL_LIMIT = 32
+
+
+@partial(jax.jit, static_argnames=("apply_fn", "epochs", "batch", "lr",
+                                   "momentum", "unroll"))
+def _fleet_round(stacked, X, Y, M, idx, wt, keys, *, apply_fn, epochs: int,
+                 batch: int, lr: float, momentum: float,
+                 unroll: bool = False):
+    """Train every participant of every cluster and FedAvg per cluster in
+    ONE compiled call.
+
+    stacked: (K, ...) pytree of cluster models; X/Y/M: device-resident
+    client data stacked (n_clients, n_pad, ...); idx: (K, P) participant
+    client ids, dummy-padded; wt: (K, P) sample weights (0.0 on dummies,
+    which therefore train but never enter the average); keys: (K, P, 2)
+    per-participant PRNG keys (the sequential path's exact splits).
+    """
+
+    def one(p, i, k):
+        return _local_train_body(p, X[i], Y[i], M[i], k, apply_fn=apply_fn,
+                                 epochs=epochs, batch=batch, lr=lr,
+                                 momentum=momentum, unroll=unroll)
+
+    # inner vmap: participants share their cluster's model (broadcast);
+    # outer vmap: one lane per cluster
+    trained = jax.vmap(jax.vmap(one, in_axes=(None, 0, 0)),
+                       in_axes=(0, 0, 0))(stacked, idx, keys)
+
+    wsum = wt.sum(1)                                    # (K,)
+    keep = wsum > 0.0                                   # zero-participant
+                                                        # clusters keep w_k
+    # guard ONLY the zero-participant rows: clamping with max(wsum, 1)
+    # would silently down-scale clusters whose weight sum is in (0, 1)
+    wn = wt / jnp.where(keep, wsum, 1.0)[:, None]       # (K, P) normalized
+    def avg(old, t):
+        out = jnp.einsum("kp,kp...->k...", wn, t.astype(F32))
+        m = keep.reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(m, out, old.astype(F32)).astype(old.dtype)
+
+    return jax.tree.map(avg, stacked, trained)
 
 
 @partial(jax.jit, static_argnames=("apply_fn",))
@@ -102,19 +171,47 @@ class ImageFLModel:
         self.n_pad = n_pad or batch * math.ceil(max(sizes) / batch)
         self._xt = jnp.asarray(test.x)
         self._yt = jnp.asarray(test.y.astype(np.int32))
+        self._pad_cache: dict[int, tuple] = {}   # cid -> device (x, y, m)
+        self._fleet_data: Optional[tuple] = None
+        self._model_bits: Optional[int] = None
 
     # ---- duck-type ---------------------------------------------------------
     def init(self, key):
         return self.init_fn(key, **self.model_kw)
 
     def _padded(self, cid: int):
+        """Client ``cid``'s padded data, memoized on device: repeat rounds
+        reuse the same buffers instead of re-transferring identical data."""
+        hit = self._pad_cache.get(cid)
+        if hit is not None:
+            return hit
         idx = self.parts[cid]
         n = len(idx)
         x = np.zeros((self.n_pad,) + self.ds.x.shape[1:], np.float32)
         y = np.zeros((self.n_pad,), np.int32)
         m = np.zeros((self.n_pad,), np.float32)
         x[:n], y[:n], m[:n] = self.ds.x[idx], self.ds.y[idx], 1.0
-        return jnp.asarray(x), jnp.asarray(y), jnp.asarray(m)
+        hit = (jnp.asarray(x), jnp.asarray(y), jnp.asarray(m))
+        self._pad_cache[cid] = hit
+        return hit
+
+    def _device_data(self):
+        """One-time device-resident fleet tensor: every client padded to
+        ``n_pad`` and stacked (n_clients, n_pad, H, W, C) + labels + row
+        masks. After this, batched rounds move only index arrays."""
+        if self._fleet_data is None:
+            n = len(self.parts)
+            xs = np.zeros((n, self.n_pad) + self.ds.x.shape[1:], np.float32)
+            ys = np.zeros((n, self.n_pad), np.int32)
+            ms = np.zeros((n, self.n_pad), np.float32)
+            for cid, idx in enumerate(self.parts):
+                k = len(idx)
+                xs[cid, :k] = self.ds.x[idx]
+                ys[cid, :k] = self.ds.y[idx]
+                ms[cid, :k] = 1.0
+            self._fleet_data = (jnp.asarray(xs), jnp.asarray(ys),
+                                jnp.asarray(ms))
+        return self._fleet_data
 
     def local_update(self, w, cid: int, epochs: int, key):
         x, y, m = self._padded(cid)
@@ -131,6 +228,42 @@ class ImageFLModel:
             updated.append(self.local_update(w, int(cid), epochs, sub))
         return fedavg(updated, np.asarray(n_samples, np.float64))
 
+    def fleet_round(self, stacked_w, participant_lists: Sequence[np.ndarray],
+                    n_samples: np.ndarray, epochs: int, cluster_keys,
+                    pad_to: Optional[int] = None):
+        """Batched cluster_round over ALL clusters: one compiled call.
+
+        ``participant_lists[kc]`` holds cluster kc's participant client ids
+        this round; ``cluster_keys[kc]`` is the same per-cluster key the
+        sequential path would hand to ``cluster_round`` (participant keys
+        are split from it identically). Clusters are padded to ``pad_to``
+        participants (pass the max cluster size for a round-stable compile
+        shape); dummies carry weight 0 and drop out of the average.
+        """
+        K = len(participant_lists)
+        if K == 0:
+            return stacked_w
+        P = max([len(p) for p in participant_lists] + [pad_to or 1, 1])
+        idx = np.zeros((K, P), np.int32)
+        wt = np.zeros((K, P), np.float32)
+        keys = np.zeros((K, P, 2), np.uint32)
+        ns = np.asarray(n_samples)
+        for kc, part in enumerate(participant_lists):
+            n = len(part)
+            if n == 0:
+                continue
+            ids = np.asarray(part, np.int64)
+            idx[kc, :n] = ids
+            wt[kc, :n] = ns[ids]
+            keys[kc, :n] = np.asarray(jax.random.split(cluster_keys[kc], n))
+        X, Y, M = self._device_data()
+        unroll = epochs * (self.n_pad // self.batch) <= _UNROLL_LIMIT
+        return _fleet_round(stacked_w, X, Y, M, jnp.asarray(idx),
+                            jnp.asarray(wt), jnp.asarray(keys),
+                            apply_fn=self.apply_fn, epochs=epochs,
+                            batch=self.batch, lr=self.lr,
+                            momentum=self.momentum, unroll=unroll)
+
     def stack(self, params_list: list[Any]):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
 
@@ -143,5 +276,10 @@ class ImageFLModel:
         return {"acc": float(acc), "loss": float(loss)}
 
     def model_bits(self, key=None) -> int:
-        p = self.init(key if key is not None else jax.random.PRNGKey(0))
-        return int(sum(l.size * 4 for l in jax.tree.leaves(p)) * 8)
+        """Payload bits of one model; cached (sizes are key-independent, and
+        the previous per-call re-init dominated engine construction)."""
+        if self._model_bits is None:
+            p = self.init(key if key is not None else jax.random.PRNGKey(0))
+            self._model_bits = int(sum(l.size * 4
+                                       for l in jax.tree.leaves(p)) * 8)
+        return self._model_bits

@@ -48,12 +48,19 @@ class EngineConfig:
     ``c_flop`` may be a float (FLOPs per sample) or a ``"measured:"`` spec
     resolved against compiled-HLO dry-run estimates (launch/measured.py),
     e.g. ``"measured:gemma3-1b/train_4k"``.
+
+    ``batched_exec`` opts into the device-resident batched round path
+    (DESIGN.md §9): cluster models stay stacked end-to-end and one
+    ``model.fleet_round`` call trains every participant of every cluster
+    under ``vmap``. Off by default — the sequential path is the golden
+    bit-parity reference; the batched path is tolerance-pinned against it.
     """
     rounds: int = 40
     local_epochs: int = 10
     c_flop: Any = 5e7
     model_bits: float = 8 * 44.7e6
     seed: int = 0
+    batched_exec: bool = False
 
 
 @dataclass
@@ -108,6 +115,11 @@ class SessionState:
     jitter, cross-agg group sampling and top-m noise are host-side).
     ``None`` on checkpoints written before this field existed; the engine
     then resumes with a freshly seeded host RNG (the pre-fix behavior).
+    ``pacing_state`` carries the PacingPolicy's exportable cross-round
+    state (``state_dict()``) captured at the same boundary — today that is
+    ``SemiSyncPacing``'s straggler stash, so a semi-sync disk resume is
+    exact even with a deferred update pending (DESIGN.md §8); ``None`` for
+    stateless policies and on older checkpoints.
     """
     round_idx: int
     cluster_models: Any              # stacked (K, ...) pytree
@@ -116,6 +128,7 @@ class SessionState:
     rng_key: Any
     ledger: EnergyLedger
     rng_state: Any = None            # np Generator.bit_generator.state dict
+    pacing_state: Any = None         # PacingPolicy.state_dict() snapshot
 
 
 @dataclass
@@ -178,8 +191,26 @@ class PacingPolicy(Protocol):
         entering the mix (replace / defer stragglers / staleness-weight)."""
         ...
 
+    def merge_stacked(self, ctx: EngineContext, model,
+                      state: "SessionState", new_stacked, sels: list,
+                      round_idx: int):
+        """Stacked-pytree twin of ``merge`` for the batched execution path
+        (DESIGN.md §9): same accounting and fold semantics, expressed as
+        (K, ...)-leaf ops so cluster models never unstack. The engine falls
+        back to ``unstack`` + ``merge`` when a policy lacks this hook."""
+        ...
+
     def advance(self, barriers: list) -> float:
         """Round wall-clock advance from per-cluster completion times."""
+        ...
+
+    def state_dict(self):
+        """Exportable cross-round state for checkpointing (``None`` when
+        stateless); rides in ``SessionState.pacing_state``."""
+        ...
+
+    def load_state_dict(self, state) -> None:
+        """Restore a ``state_dict()`` snapshot on session resume."""
         ...
 
 

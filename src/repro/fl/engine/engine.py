@@ -6,14 +6,19 @@ Owns the canonical edge-round skeleton —
     for each round:
         for each training cluster:
             select participants        (SelectionPolicy)
-            local-train                (model adapter)
             account train/idle         (PacingPolicy.account_cluster)
             intra-upload               (MixingPolicy.upload)
-        fold fresh cluster models      (PacingPolicy.merge)
+        local-train all clusters       (model adapter: sequential
+                                        cluster_round loop, or ONE batched
+                                        fleet_round when cfg.batched_exec)
+        fold fresh cluster models      (PacingPolicy.merge / merge_stacked)
         mix cluster models             (MixingPolicy.mix)
         advance wall clock             (PacingPolicy.advance), evaluate
 
 — plus session endpoints (bootstrap / finalize) and checkpoint-resume.
+Local training touches neither the ledger nor either RNG stream, so the
+sequential path stays bit-for-bit against the pre-refactor golden pins
+while training itself is free to batch (DESIGN.md §9).
 
 Uniform accounting rule (paper §III-B/C), under the default SyncPacing,
 per cluster per round:
@@ -49,7 +54,7 @@ from repro.core.energy import GPU, EnergyLedger, e_train, t_train
 from repro.fl.engine.base import (ClusterPlan, EngineConfig, EngineContext,
                                   RoundSelection, SessionState)
 from repro.fl.engine.costs import resolve_c_flop
-from repro.fl.engine.pacing import SyncPacing, _charge_train
+from repro.fl.engine.pacing import SyncPacing
 from repro.fl.engine.transport import IdentityCodec, Transport
 
 
@@ -84,6 +89,7 @@ class RoundEngine:
         self.pacing = pacing if pacing is not None else SyncPacing()
         self.name = name
         self.rng = np.random.default_rng(cfg.seed)
+        self._plan_cache = None      # (policy_params, plan, post-build key)
 
         alpha = np.array([p.alpha for p in env.profiles])
         hw = np.array([p.hw_type for p in env.profiles])
@@ -102,13 +108,42 @@ class RoundEngine:
                             cfg.local_epochs),
             hw_penalty=_hw_penalty(self._hw))
 
-    # -- uniform per-cluster accounting --------------------------------------
-    @staticmethod
-    def _account_train(ctx: EngineContext, sel: RoundSelection,
-                       kc: Optional[int] = None) -> float:
-        """The sync train/idle rule (kept as the engine's canonical
-        reference; SyncPacing delegates here via pacing._charge_train)."""
-        return _charge_train(ctx, sel, kc)
+    # -- round body: local training ------------------------------------------
+    def _train_round(self, state: SessionState, sels, subs, r: int):
+        """Train every cluster's participants and fold the pacing merge.
+
+        Sequential path (the golden bit-parity reference): unstack, one
+        jitted ``cluster_round`` per cluster (one ``_local_train`` dispatch
+        per participant), restack via ``PacingPolicy.merge``.
+
+        Batched path (``cfg.batched_exec``): cluster models stay stacked —
+        ONE ``model.fleet_round`` call trains every participant of every
+        cluster under ``vmap`` (per-participant keys split exactly as the
+        sequential path splits them) and ``merge_stacked`` folds the result
+        without ever unstacking. Per-round host->device traffic is the
+        participant index/weight/key arrays.
+        """
+        cfg, env, model = self.cfg, self.env, self.model
+        K = len(sels)
+        if self._use_fleet:
+            new_stacked = model.fleet_round(
+                state.cluster_models, [sel.participants for sel in sels],
+                env.n_samples, cfg.local_epochs, subs,
+                pad_to=self._fleet_pad)
+            if hasattr(self.pacing, "merge_stacked"):
+                return self.pacing.merge_stacked(
+                    self._ctx, model, state, new_stacked, sels, r)
+            return self.pacing.merge(
+                self._ctx, model, state, model.unstack(new_stacked, K),
+                sels, r)
+        models_list = model.unstack(state.cluster_models, K)
+        new_models = [
+            model.cluster_round(w_k, sel.participants,
+                                env.n_samples[sel.participants],
+                                cfg.local_epochs, sub)
+            for w_k, sel, sub in zip(models_list, sels, subs)]
+        return self.pacing.merge(self._ctx, model, state, new_models,
+                                 sels, r)
 
     # -- session -------------------------------------------------------------
     def run(self, rounds: Optional[int] = None,
@@ -116,23 +151,47 @@ class RoundEngine:
             state: Optional[SessionState] = None,
             ckpt_dir: Optional[str] = None,
             ckpt_every: int = 1,
+            eval_every: int = 1,
             ):
+        """``eval_every``: evaluate every N rounds (plus always the final
+        round) — long benchmark sessions stop blocking on a host-synced
+        eval each round; history rows keep their true round index."""
         cfg, env, model = self.cfg, self.env, self.model
         R = rounds if rounds is not None else cfg.rounds
         key = jax.random.PRNGKey(cfg.seed)
 
         ledger = state.ledger if state is not None else EnergyLedger()
-        ctx = self._make_ctx(ledger)
-        plan, key = self.clustering.build(ctx, key)
+        ctx = self._ctx = self._make_ctx(ledger)
+        # the cluster plan is a pure function of (env, cfg.seed,
+        # policy_params) — build() consumes only deterministic jax-key
+        # splits — so repeat run() calls on one engine (benchmark warmup +
+        # timed run, resume-in-place) reuse it instead of re-running the
+        # StarMask rollout, which otherwise dominates short sessions
+        pp = getattr(self.clustering, "policy_params", None)
+        # identity comparison: policy_params may be a dict of arrays
+        # (StarMask policy weights), where == would compare element-wise;
+        # a distinct-but-equal object just rebuilds (correct, not cached)
+        if self._plan_cache is not None and self._plan_cache[0] is pp:
+            plan, key = self._plan_cache[1], self._plan_cache[2]
+        else:
+            plan, key = self.clustering.build(ctx, key)
+            self._plan_cache = (pp, plan, key)
         ctx.transport.bind_clusters(plan, env)
+        self.last_plan = plan
         K = plan.n_clusters
         N_k = np.array([env.n_samples[c].sum() for c in plan.clusters],
                        np.float64)
+        self._use_fleet = cfg.batched_exec and hasattr(model, "fleet_round")
+        # pad every round to the max cluster size: one fleet compilation
+        # serves the whole session regardless of per-round participation
+        self._fleet_pad = max((len(c) for c in plan.clusters), default=1)
 
         if state is None:
             key, sub = jax.random.split(key)
             w0 = model.init(sub)
-            masters = (plan.masters if plan.masters is not None
+            # copy: master migration mutates state.masters in place, and
+            # the cached plan must stay pristine for the next run()
+            masters = (plan.masters.copy() if plan.masters is not None
                        else np.zeros(0, int))
             state = SessionState(
                 round_idx=0, cluster_models=model.stack([w0] * K),
@@ -141,10 +200,17 @@ class RoundEngine:
                 masters=masters, rng_key=key, ledger=ledger)
             self.mixing.bootstrap(ctx, plan, state)
             state.rng_state = self.rng.bit_generator.state
-        elif state.rng_state is not None:
-            # resume: restore the host RNG mid-stream, or selection jitter /
-            # group sampling silently diverge from the uninterrupted run
-            self.rng.bit_generator.state = state.rng_state
+        else:
+            if state.rng_state is not None:
+                # resume: restore the host RNG mid-stream, or selection
+                # jitter / group sampling silently diverge from the
+                # uninterrupted run
+                self.rng.bit_generator.state = state.rng_state
+            if hasattr(self.pacing, "load_state_dict"):
+                # unconditionally: a None snapshot must CLEAR any stash a
+                # previous run() left on this (reused) policy instance
+                self.pacing.load_state_dict(getattr(state, "pacing_state",
+                                                    None))
         key = state.rng_key
 
         history: list[dict] = []
@@ -154,21 +220,18 @@ class RoundEngine:
             self.pacing.begin_round(ctx, r)
             barriers: list[float] = []
             sels: list[RoundSelection] = []
-            new_models = []
-            models_list = model.unstack(state.cluster_models, K)
-            for kc, (c, w_k) in enumerate(zip(plan.clusters, models_list)):
+            subs = []
+            for kc, c in enumerate(plan.clusters):
                 sel, state.skip_states[kc] = self.selection.select(
                     ctx, c, state.skip_states[kc], r)
                 sels.append(sel)
-                part = sel.participants
                 key, sub = jax.random.split(key)
-                new_models.append(model.cluster_round(
-                    w_k, part, env.n_samples[part], cfg.local_epochs, sub))
+                subs.append(sub)
                 barriers.append(self.pacing.account_cluster(ctx, sel, kc))
-                self.mixing.upload(ctx, plan, state, kc, part, t_round)
+                self.mixing.upload(ctx, plan, state, kc, sel.participants,
+                                   t_round)
 
-            stacked = self.pacing.merge(ctx, model, state, new_models,
-                                        sels, r)
+            stacked = self._train_round(state, sels, subs, r)
             round_barrier = self.pacing.advance(barriers)
             stacked, dt_comm = self.mixing.mix(
                 ctx, plan, state, stacked, N_k, sels, r,
@@ -178,6 +241,9 @@ class RoundEngine:
             state.round_idx = r + 1
             state.rng_key = key
             state.rng_state = self.rng.bit_generator.state
+            state.pacing_state = (self.pacing.state_dict()
+                                  if hasattr(self.pacing, "state_dict")
+                                  else None)
             wall += round_barrier
             wall += dt_comm
             ledger.wall_clock_s = wall
@@ -186,7 +252,8 @@ class RoundEngine:
                 from repro.ckpt import save_session
                 save_session(state, os.path.join(ckpt_dir, f"step_{r + 1}"))
 
-            if eval_fn is not None:
+            if eval_fn is not None and ((r + 1) % eval_every == 0
+                                        or r + 1 == R):
                 w_glob = crossagg.consolidate(stacked, N_k)
                 m = eval_fn(w_glob, r)
                 m["round"] = r

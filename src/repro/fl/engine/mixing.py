@@ -61,10 +61,17 @@ def _components(adj: np.ndarray) -> list[list[int]]:
 
 
 class CrossAggMixing:
-    """Paper §IV-C (Eq. 34-38) + §III-A master migration."""
+    """Paper §IV-C (Eq. 34-38) + §III-A master migration.
 
-    def __init__(self, k_nbr: int = 2):
+    ``backend`` picks the executor for the mixing contraction itself:
+    ``"einsum"`` (the reference, core/crossagg.apply_mixing) or
+    ``"pallas"`` (the fused kernels/cross_agg tile kernel — interpret mode
+    off-TPU, float-tolerance parity pinned in tests).
+    """
+
+    def __init__(self, k_nbr: int = 2, backend: str = "einsum"):
         self.k_nbr = k_nbr
+        self.backend = backend
 
     # -- helpers -------------------------------------------------------------
     def _dist(self, ctx, i: int, j: int, t: float) -> float:
@@ -126,7 +133,7 @@ class CrossAggMixing:
         reach = env.master_reach(state.masters, t_round)
         groups = crossagg.sample_groups(reach, self.k_nbr, ctx.rng)
         M = crossagg.mixing_matrix(groups, N_k)
-        stacked = crossagg.apply_mixing(M, stacked)
+        stacked = crossagg.apply_mixing(M, stacked, backend=self.backend)
         for kc, g in enumerate(groups):
             for j in g:
                 if j == kc:
@@ -166,8 +173,8 @@ class GossipMixing(CrossAggMixing):
     """
 
     def __init__(self, k_nbr: int = 2, consensus_eps: float = 1e-2,
-                 max_consensus_rounds: int = 8):
-        super().__init__(k_nbr=k_nbr)
+                 max_consensus_rounds: int = 8, backend: str = "einsum"):
+        super().__init__(k_nbr=k_nbr, backend=backend)
         self.consensus_eps = consensus_eps
         self.max_consensus_rounds = max_consensus_rounds
         self.last_consensus: dict = {}   # report of the final consensus pass
@@ -239,7 +246,7 @@ class GossipMixing(CrossAggMixing):
                  for j in np.flatnonzero(adj[i]) if i < j]
         for _ in range(n_rounds):
             state.cluster_models = crossagg.apply_mixing(
-                M, state.cluster_models)
+                M, state.cluster_models, backend=self.backend)
             for i, j in edges:      # pairwise exchange along every edge
                 d = self._dist(ctx, int(state.masters[i]),
                                int(state.masters[j]), wall)

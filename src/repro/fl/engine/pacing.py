@@ -34,24 +34,34 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.engine.base import EngineContext, RoundSelection
 
 
-def _charge_train(ctx: EngineContext, sel: RoundSelection, kc) -> float:
+def _bcast(vec, leaf):
+    """(K,) -> (K, 1, ..., 1) broadcastable against a (K, ...) leaf."""
+    return jnp.asarray(vec).reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def _charge_train(ctx: EngineContext, sel: RoundSelection, kc,
+                  charge_wait: bool = True) -> float:
     """The uniform sync rule (engine docstring): charge participants'
     train energy (codec arith-scaled) and member idle at the cluster
-    barrier; return the cluster barrier."""
+    barrier; return the cluster barrier. ``charge_wait=False`` books the
+    energy only — for policies (semi-sync) that can price idle only once
+    the round-wide deadline is known."""
     mask, tt_r = sel.mask, sel.tt_r
     barrier = float(tt_r[mask].max()) if mask.any() else 0.0
     ctx.ledger.add_train(
         float(ctx.et_full[sel.ids][mask].sum())
         * ctx.transport.arith_scale_for(kc),
         barrier)
-    ctx.ledger.add_wait(float((barrier - tt_r[mask]).sum()
-                              + barrier * (~mask).sum()
-                              if mask.any() else 0.0))
+    if charge_wait:
+        ctx.ledger.add_wait(float((barrier - tt_r[mask]).sum()
+                                  + barrier * (~mask).sum()
+                                  if mask.any() else 0.0))
     return barrier
 
 
@@ -70,8 +80,18 @@ class SyncPacing:
               sels: list, round_idx: int):
         return model.stack(new_models)
 
+    def merge_stacked(self, ctx: EngineContext, model, state, new_stacked,
+                      sels: list, round_idx: int):
+        return new_stacked
+
     def advance(self, barriers: list) -> float:
         return max(barriers, default=0.0)
+
+    def state_dict(self):
+        return None
+
+    def load_state_dict(self, state) -> None:
+        pass
 
 
 class SemiSyncPacing:
@@ -88,11 +108,11 @@ class SemiSyncPacing:
     own overshoot is training, not waiting); skipped members idle the
     full deadline.
 
-    The straggler stash is policy-local state, NOT part of SessionState:
-    a disk checkpoint-resume of a semi-sync session is exact only at
-    round boundaries with no update pending (ROADMAP notes generalized
-    pacing-state checkpointing as an open item; the pinned bit-for-bit
-    resume guarantee covers the default SyncPacing).
+    The straggler stash is exported through ``state_dict()`` into
+    ``SessionState.pacing_state`` at every round boundary (ckpt/store.py
+    serializes it next to the cluster models), so a semi-sync disk resume
+    is exact even with a deferred update pending — pinned by the
+    resume-equals-uninterrupted test in tests/test_scenarios.py.
     """
 
     def __init__(self, quantile: float = 0.75, beta: float = 0.5,
@@ -113,19 +133,15 @@ class SemiSyncPacing:
 
     def account_cluster(self, ctx: EngineContext, sel: RoundSelection,
                         kc: int) -> float:
-        # energy now (same in-loop order as sync); idle deferred to merge,
-        # where the deadline over all clusters is known
-        mask = sel.mask
-        barrier = float(sel.tt_r[mask].max()) if mask.any() else 0.0
-        ctx.ledger.add_train(
-            float(ctx.et_full[sel.ids][mask].sum())
-            * ctx.transport.arith_scale_for(kc),
-            barrier)
+        # energy now (same in-loop order as sync, via the one shared
+        # rule); idle deferred to merge, where the deadline is known
+        barrier = _charge_train(ctx, sel, kc, charge_wait=False)
         self._barriers.append(barrier)
         return barrier
 
-    def merge(self, ctx: EngineContext, model, state, new_models: list,
-              sels: list, round_idx: int):
+    def _close_round(self, ctx: EngineContext, sels: list):
+        """Fix this round's deadline and book member idle (shared by the
+        list and stacked merge paths — identical floats, same order)."""
         barriers = np.asarray(self._barriers)
         if barriers.size == 0:
             D = 0.0
@@ -141,6 +157,11 @@ class SemiSyncPacing:
             ctx.ledger.add_wait(
                 float(np.maximum(0.0, D - tt[mask]).sum()
                       + D * (~mask).sum()))
+        return barriers, D
+
+    def merge(self, ctx: EngineContext, model, state, new_models: list,
+              sels: list, round_idx: int):
+        barriers, D = self._close_round(ctx, sels)
         K = len(new_models)
         old = model.unstack(state.cluster_models, K)
         merged = []
@@ -158,8 +179,43 @@ class SemiSyncPacing:
         self._pending = fresh_pending
         return model.stack(merged)
 
+    def merge_stacked(self, ctx: EngineContext, model, state, new_stacked,
+                      sels: list, round_idx: int):
+        """Same semantics as ``merge`` on (K, ...) leaves: on-time clusters
+        take their fresh model via a per-cluster ``where``, stragglers keep
+        the old row and stash the fresh one, last round's stash folds in
+        with weight beta."""
+        barriers, D = self._close_round(ctx, sels)
+        K = len(sels)
+        on_time = barriers <= D if barriers.size else np.zeros(K, bool)
+        merged = jax.tree.map(
+            lambda old, new: jnp.where(_bcast(on_time, old), new,
+                                       old).astype(old.dtype),
+            state.cluster_models, new_stacked)
+        fresh_pending = {
+            kc: jax.tree.map(lambda l, kc=kc: l[kc], new_stacked)
+            for kc in range(K) if not on_time[kc]}
+        for kc, w_late in self._pending.items():
+            merged = jax.tree.map(
+                lambda l, wl, kc=kc: l.at[kc].set(
+                    ((1.0 - self.beta) * l[kc]
+                     + self.beta * wl).astype(l.dtype)),
+                merged, w_late)
+        self._pending = fresh_pending
+        return merged
+
     def advance(self, barriers: list) -> float:
         return self._deadline      # already capped at the slowest barrier
+
+    def state_dict(self):
+        """The straggler stash (kc -> deferred fresh model); ``None`` when
+        nothing is pending so checkpoints stay byte-identical for sessions
+        that never defer."""
+        return {"pending": dict(self._pending)} if self._pending else None
+
+    def load_state_dict(self, state) -> None:
+        pending = (state or {}).get("pending") or {}
+        self._pending = {int(kc): w for kc, w in pending.items()}
 
 
 def _combine(stacked_pair, beta: float):
@@ -213,5 +269,20 @@ class AsyncPacing:
                   for kc in range(K)]
         return model.stack(merged)
 
+    def merge_stacked(self, ctx: EngineContext, model, state, new_stacked,
+                      sels: list, round_idx: int):
+        alphas = self.staleness_weights(np.asarray(self._barriers)
+                                        ).astype(np.float32)
+        return jax.tree.map(
+            lambda old, new: ((1.0 - _bcast(alphas, old)) * old
+                              + _bcast(alphas, new) * new).astype(old.dtype),
+            state.cluster_models, new_stacked)
+
     def advance(self, barriers: list) -> float:
         return float(np.mean(barriers)) if barriers else 0.0
+
+    def state_dict(self):
+        return None                  # barriers reset every begin_round
+
+    def load_state_dict(self, state) -> None:
+        pass

@@ -31,19 +31,23 @@ def make_crosatfl(cfg: EngineConfig, env, model, *,
                   starmask: Optional[StarMaskParams] = None,
                   policy_params: Optional[dict] = None,
                   mixing=None, pacing=None, codec=None,
+                  mixing_backend: Optional[str] = None,
                   name: str = "CroSatFL") -> RoundEngine:
     """CroSatFL = StarMask clustering x Skip-One x random-k cross-agg.
 
     ``mixing``/``pacing``/``codec`` override single policies for scenario
     variants (see ``make_scenario``) while keeping the CroSatFL quadruple
-    as the base.
+    as the base. ``mixing_backend="pallas"`` keeps the default
+    CrossAggMixing policy but routes its contraction through the fused
+    Pallas cross_agg kernel (ignored when ``mixing`` is given).
     """
     return RoundEngine(
         cfg, env, model,
         clustering=StarMaskClustering(starmask or StarMaskParams(),
                                       policy_params=policy_params),
         selection=SkipOneSelection(skip_one or SkipOneParams()),
-        mixing=mixing if mixing is not None else CrossAggMixing(k_nbr=k_nbr),
+        mixing=mixing if mixing is not None else CrossAggMixing(
+            k_nbr=k_nbr, backend=mixing_backend or "einsum"),
         pacing=pacing, codec=codec,
         name=name)
 

@@ -20,6 +20,8 @@ def cross_agg_tree(M: jax.Array, stacked, *, interpret: bool = True):
     """stacked: pytree with leading cluster dim K on every leaf."""
     leaves, treedef = jax.tree.flatten(stacked)
     K = leaves[0].shape[0]
+    if K == 0:          # zero-participant round: nothing to mix
+        return stacked
     dtype = leaves[0].dtype
     sizes = [int(np.prod(l.shape[1:])) for l in leaves]
     flat = jnp.concatenate(

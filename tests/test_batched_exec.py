@@ -1,0 +1,189 @@
+"""Device-resident batched round execution (DESIGN.md §9).
+
+Parity contract: the sequential path is the golden bit-parity reference
+(pinned in test_engine_parity.py); the batched path must match it within
+float tolerance on weights while its LEDGER — which is pure host-side
+accounting, untouched by how training executes — stays bit-for-bit, still
+equal to tests/golden_engine.json.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fl.engine import (AsyncPacing, EngineConfig, RoundEngine,
+                             SemiSyncPacing, SingleCluster, GSStarMixing,
+                             TopMEnergyUtility, make_crosatfl)
+
+from golden_capture import build_setup, session_config
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_engine.json")
+TOL = dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return build_setup()
+
+
+def engine(env, model, *, batched, rounds=None, mixing_backend=None,
+           pacing=None):
+    scfg = session_config(model)
+    cfg = scfg.engine_config()
+    if rounds is not None:
+        cfg = dataclasses.replace(cfg, rounds=rounds)
+    cfg = dataclasses.replace(cfg, batched_exec=batched)
+    return make_crosatfl(cfg, env, model, k_nbr=scfg.k_nbr,
+                         starmask=scfg.starmask,
+                         mixing_backend=mixing_backend)
+
+
+def assert_weights_close(w_a, w_b, **tol):
+    for a, b in zip(jax.tree.leaves(w_a), jax.tree.leaves(w_b)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **tol)
+
+
+class TestFleetRound:
+    def test_fleet_matches_sequential_cluster_rounds(self, setup):
+        """Unit parity: fleet_round == per-cluster cluster_round, including
+        a padded (short) cluster and a zero-participant cluster."""
+        env, model = setup
+        K = 3
+        w0 = model.init(jax.random.PRNGKey(0))
+        stacked = model.stack([w0] * K)
+        parts = [np.array([0, 1, 2]), np.array([3]), np.array([], int)]
+        subs = list(jax.random.split(jax.random.PRNGKey(1), K))
+
+        seq = [model.cluster_round(
+                   jax.tree.map(lambda l, kc=kc: l[kc], stacked), parts[kc],
+                   env.n_samples[parts[kc]], 1, subs[kc])
+               for kc in range(K)]
+        fleet = model.fleet_round(stacked, parts, env.n_samples, 1, subs,
+                                  pad_to=4)
+        for kc in range(K):
+            assert_weights_close(
+                jax.tree.map(lambda l, kc=kc: l[kc], fleet), seq[kc], **TOL)
+        # the empty cluster kept its model bit-for-bit
+        for a, b in zip(jax.tree.leaves(fleet), jax.tree.leaves(w0)):
+            np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b))
+
+    def test_device_data_built_once(self, setup):
+        env, model = setup
+        X1 = model._device_data()
+        X2 = model._device_data()
+        assert X1[0] is X2[0]          # one-time device-resident tensor
+
+    def test_padded_memoized(self, setup):
+        env, model = setup
+        a = model._padded(0)
+        b = model._padded(0)
+        assert a[0] is b[0]            # repeat rounds reuse device buffers
+
+    def test_model_bits_cached(self, setup):
+        env, model = setup
+        assert model.model_bits() == model.model_bits()
+        assert model._model_bits is not None
+
+
+class TestBatchedEngineParity:
+    def test_matches_sequential_and_golden_ledger(self, setup):
+        """The golden-engine scenario: batched ledger bit-equals both the
+        sequential run and tests/golden_engine.json; weights and history
+        match within tolerance."""
+        env, model = setup
+        ev = lambda p, r: model.evaluate(p)   # noqa: E731
+        w_s, led_s, hist_s = engine(env, model, batched=False).run(eval_fn=ev)
+        w_b, led_b, hist_b = engine(env, model, batched=True).run(eval_fn=ev)
+
+        assert dataclasses.asdict(led_b) == dataclasses.asdict(led_s)
+        with open(GOLDEN) as f:
+            golden = json.load(f)
+        assert dataclasses.asdict(led_b) == golden["CroSatFL"]["ledger"]
+        assert_weights_close(w_b, w_s, **TOL)
+        for a, b in zip(hist_b, hist_s):
+            assert a["round"] == b["round"]
+            assert abs(a["acc"] - b["acc"]) <= 0.03
+
+    @pytest.mark.parametrize("make_pacing", [
+        lambda: SemiSyncPacing(quantile=0.5),
+        lambda: AsyncPacing(),
+    ], ids=["semi-sync", "async"])
+    def test_merge_stacked_matches_merge(self, setup, make_pacing):
+        """Pacing policies' stacked merge path == the list merge path."""
+        env, model = setup
+        scfg = session_config(model)
+        kw = dict(k_nbr=scfg.k_nbr, starmask=scfg.starmask)
+        cfg = scfg.engine_config()
+        w_s, led_s, _ = make_crosatfl(cfg, env, model,
+                                      pacing=make_pacing(), **kw).run()
+        cfg_b = dataclasses.replace(cfg, batched_exec=True)
+        w_b, led_b, _ = make_crosatfl(cfg_b, env, model,
+                                      pacing=make_pacing(), **kw).run()
+        assert dataclasses.asdict(led_b) == dataclasses.asdict(led_s)
+        assert_weights_close(w_b, w_s, **TOL)
+
+    def test_pallas_mixing_matches_einsum(self, setup):
+        env, model = setup
+        w_e, led_e, _ = engine(env, model, batched=True).run()
+        w_p, led_p, _ = engine(env, model, batched=True,
+                               mixing_backend="pallas").run()
+        assert dataclasses.asdict(led_p) == dataclasses.asdict(led_e)
+        assert_weights_close(w_p, w_e, atol=1e-5, rtol=1e-5)
+
+    def test_zero_participant_round_completes(self, setup):
+        env, model = setup
+        eng = RoundEngine(
+            EngineConfig(rounds=1, local_epochs=1,
+                         model_bits=model.model_bits(), batched_exec=True),
+            env, model,
+            clustering=SingleCluster(),
+            selection=TopMEnergyUtility(select_m=0),
+            mixing=GSStarMixing(), name="empty-batched")
+        w, led, _ = eng.run()
+        assert led.train_energy_j == 0.0
+        assert np.isfinite(led.wall_clock_s)
+
+
+class TestEvalEvery:
+    def test_history_keeps_true_round_index(self, setup):
+        env, model = setup
+        ev = lambda p, r: model.evaluate(p)   # noqa: E731
+        eng = engine(env, model, batched=False, rounds=5)
+        _, _, hist = eng.run(eval_fn=ev, eval_every=2)
+        # rounds 1 and 3 hit the cadence; the final round always evals
+        assert [h["round"] for h in hist] == [1, 3, 4]
+
+    def test_default_evals_every_round(self, setup):
+        env, model = setup
+        ev = lambda p, r: model.evaluate(p)   # noqa: E731
+        _, _, hist = engine(env, model, batched=False, rounds=3).run(
+            eval_fn=ev)
+        assert [h["round"] for h in hist] == [0, 1, 2]
+
+
+class TestPlanCache:
+    def test_repeat_runs_reuse_plan(self, setup):
+        env, model = setup
+        eng = engine(env, model, batched=True, rounds=1)
+        calls = []
+        orig = eng.clustering.build
+        eng.clustering.build = lambda ctx, key: (calls.append(1),
+                                                 orig(ctx, key))[1]
+        eng.run()
+        eng.run()
+        assert len(calls) == 1         # second run hit the cache
+
+    def test_cached_plan_not_mutated_by_migration(self, setup):
+        """state.masters must be a copy: master migration writes through it
+        and the cached plan serves later runs."""
+        env, model = setup
+        eng = engine(env, model, batched=False, rounds=2)
+        eng.run()
+        masters_after_first = eng._plan_cache[1].masters.copy()
+        eng.run()
+        np.testing.assert_array_equal(eng._plan_cache[1].masters,
+                                      masters_after_first)

@@ -16,7 +16,7 @@ from repro.fl.engine import (AllParticipate, BlockMinifloatCodec,
                              Transport, resolve_c_flop)
 from repro.fl.engine import costs
 from repro.fl.engine.base import EngineContext
-from repro.fl.engine.engine import RoundEngine as _RE
+from repro.fl.engine.pacing import _charge_train
 
 from golden_capture import build_setup
 
@@ -61,7 +61,7 @@ class TestUniformAccounting:
         sel = RoundSelection(ids=np.array([0, 1, 2]),
                              mask=np.array([True, True, False]),
                              tt_r=np.array([3.0, 5.0, 100.0]))
-        barrier = _RE._account_train(ctx, sel)
+        barrier = _charge_train(ctx, sel, None)
         assert barrier == 5.0
         assert ctx.ledger.train_energy_j == 3.0          # skipped id 2 free
         # participant 0 idles 5-3=2s; skipped member idles the 5s barrier
@@ -71,7 +71,7 @@ class TestUniformAccounting:
         ctx = self._ctx(np.array([8.0]), codec=BlockMinifloatCodec())
         sel = RoundSelection(np.array([0]), np.array([True]),
                              np.array([2.0]))
-        _RE._account_train(ctx, sel)
+        _charge_train(ctx, sel, None)
         assert ctx.ledger.train_energy_j == 8.0 * 0.5
 
 

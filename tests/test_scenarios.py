@@ -197,6 +197,92 @@ class TestPacingIntegration:
         assert led.total_energy_j > 0
 
 
+class TestSemiSyncCheckpointResume:
+    def test_resume_with_pending_straggler_is_exact(self, setup, tmp_path):
+        """DESIGN.md §8 caveat, closed: SemiSyncPacing's straggler stash
+        rides in SessionState.pacing_state (serialized by ckpt/store.py),
+        so a semi-sync disk resume replays the uninterrupted session
+        bit-for-bit even when a deferred update is pending at the
+        checkpoint boundary."""
+        import json
+
+        import jax
+
+        from repro.ckpt import load_session
+        env, model = setup
+        ev = lambda p, r: model.evaluate(p)   # noqa: E731
+        kw = dict(rounds=4, quantile=0.5)
+        w_full, led_full, hist_full = scenario_engine(
+            "CroSatFL-SemiSync", env, model, **kw).run(
+            eval_fn=ev, ckpt_dir=str(tmp_path / "ck"))
+
+        with open(tmp_path / "ck" / "step_2" / "meta.json") as f:
+            meta = json.load(f)
+        # the whole point: a straggler IS pending at this boundary
+        # (quantile=0.5 over 4 distinct cluster barriers defers two)
+        assert meta["pacing_pending"], \
+            "fixture must leave a deferred update pending at the boundary"
+
+        K = len(meta["masters"])
+        like = model.stack([model.init(jax.random.PRNGKey(0))] * K)
+        st = load_session(str(tmp_path / "ck" / "step_2"), like)
+        assert st.round_idx == 2
+        assert st.pacing_state is not None
+        assert sorted(st.pacing_state["pending"]) == meta["pacing_pending"]
+
+        w_res, led_res, hist_res = scenario_engine(
+            "CroSatFL-SemiSync", env, model, **kw).run(eval_fn=ev, state=st)
+        assert dataclasses.asdict(led_res) == dataclasses.asdict(led_full)
+        for a, b in zip(jax.tree.leaves(w_res), jax.tree.leaves(w_full)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert ([h["acc"] for h in hist_res]
+                == [h["acc"] for h in hist_full[2:]])
+
+    def test_reused_engine_resume_clears_stale_stash(self, setup, tmp_path):
+        """Regression: resuming on an engine whose previous run() left a
+        straggler stash on the pacing policy must CLEAR it when the
+        checkpoint has no pending state — a None snapshot means 'nothing
+        pending', not 'keep whatever is lying around'."""
+        import jax
+
+        from repro.ckpt import load_session
+        env, model = setup
+        kw = dict(rounds=4, quantile=0.5)
+        eng = scenario_engine("CroSatFL-SemiSync", env, model, **kw)
+        eng.run(ckpt_dir=str(tmp_path / "ck"))
+        assert eng.pacing._pending          # prior run left a stash behind
+
+        K = len(eng.last_plan.clusters)
+        like = model.stack([model.init(jax.random.PRNGKey(0))] * K)
+        st_reused = load_session(str(tmp_path / "ck" / "step_2"), like)
+        st_fresh = load_session(str(tmp_path / "ck" / "step_2"), like)
+        st_reused.pacing_state = st_fresh.pacing_state = None  # no pending
+
+        w_reused, led_reused, _ = eng.run(state=st_reused)
+        w_fresh, led_fresh, _ = scenario_engine(
+            "CroSatFL-SemiSync", env, model, **kw).run(state=st_fresh)
+        assert (dataclasses.asdict(led_reused)
+                == dataclasses.asdict(led_fresh))
+        for a, b in zip(jax.tree.leaves(w_reused), jax.tree.leaves(w_fresh)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_sync_checkpoints_carry_no_pacing_payload(self, setup, tmp_path):
+        """Default SyncPacing sessions keep writing pacing-free checkpoints
+        (no pacing.npz, empty pending list) — byte-compatible with the
+        pre-field format."""
+        import json
+        import os
+
+        env, model = setup
+        crosatfl_engine(env, model, rounds=2).run(
+            ckpt_dir=str(tmp_path / "ck"))
+        step = tmp_path / "ck" / "step_2"
+        with open(step / "meta.json") as f:
+            meta = json.load(f)
+        assert meta["pacing_pending"] == []
+        assert not os.path.exists(step / "pacing.npz")
+
+
 # ---------------------------------------------------------------------------
 # Gossip-only sessions
 # ---------------------------------------------------------------------------
