@@ -21,6 +21,9 @@ from repro.core.session import Session, SessionConfig
 from repro.core.skipone import SkipOneParams
 from repro.core.starmask import (Instance, StarMaskParams, cluster,
                                  greedy_fallback, reward, train_policy)
+from repro.obs import get_logger
+
+log = get_logger("benchmarks.ablations")
 
 
 def make_instances(n_sats, count, seed0=100):
@@ -59,8 +62,8 @@ def ablate_starmask(n_sats=20, episodes=150):
         rows.append({"mechanism": "starmask", "variant": variant,
                      "mean_reward": float(np.mean(rewards)),
                      "std": float(np.std(rewards))})
-        print(f"starmask {variant:16s} reward {np.mean(rewards):+.4f} "
-              f"± {np.std(rewards):.4f}")
+        log.info(f"starmask {variant:16s} reward {np.mean(rewards):+.4f} "
+                 f"± {np.std(rewards):.4f}")
     return rows
 
 
@@ -77,9 +80,9 @@ def ablate_skipone(setup: BenchSetup):
         rows.append({"mechanism": "skip-one", "variant": "on" if on else "off",
                      "train_energy_kj": ledger.train_energy_j / 1e3,
                      "compute_time_s": ledger.compute_time_s})
-        print(f"skip-one {'on ' if on else 'off'}: "
-              f"E={ledger.train_energy_j/1e3:.3f}kJ "
-              f"barrier={ledger.compute_time_s:.1f}s")
+        log.info(f"skip-one {'on ' if on else 'off'}: "
+                 f"E={ledger.train_energy_j/1e3:.3f}kJ "
+                 f"barrier={ledger.compute_time_s:.1f}s")
     assert rows[0]["compute_time_s"] <= rows[1]["compute_time_s"] + 1e-9
     return rows
 
@@ -94,8 +97,8 @@ def ablate_knbr(setup: BenchSetup):
         rows.append({"mechanism": "random-k", "variant": f"k={k_nbr}",
                      "final_acc": hist[-1]["acc"],
                      "inter_lisl": ledger.inter_lisl_count})
-        print(f"random-k k_nbr={k_nbr}: acc={hist[-1]['acc']:.3f} "
-              f"inter-LISL={ledger.inter_lisl_count}")
+        log.info(f"random-k k_nbr={k_nbr}: acc={hist[-1]['acc']:.3f} "
+                 f"inter-LISL={ledger.inter_lisl_count}")
     return rows
 
 

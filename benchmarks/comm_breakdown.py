@@ -12,6 +12,9 @@ import argparse
 from benchmarks.common import (BenchSetup, print_csv, run_baseline,
                                run_crosatfl, save_rows)
 from repro.fl.baselines import BASELINES
+from repro.obs import get_logger
+
+log = get_logger("benchmarks.comm_breakdown")
 
 
 def run(rounds, n_train, n_clients, local_epochs):
@@ -27,20 +30,20 @@ def run(rounds, n_train, n_clients, local_epochs):
         row = {"method": method}
         row.update(ledger.row())
         rows.append(row)
-        print(f"{method:10s} intra={row['intra_lisl']:5d} "
-              f"inter={row['inter_lisl']:5d} gs={row['gs_comm']:5d} "
-              f"txE={row['tx_energy_kj']:8.2f}kJ "
-              f"trainE={row['train_energy_kj']:8.2f}kJ "
-              f"wait={row['waiting_h']:8.2f}h")
+        log.info(f"{method:10s} intra={row['intra_lisl']:5d} "
+                 f"inter={row['inter_lisl']:5d} gs={row['gs_comm']:5d} "
+                 f"txE={row['tx_energy_kj']:8.2f}kJ "
+                 f"trainE={row['train_energy_kj']:8.2f}kJ "
+                 f"wait={row['waiting_h']:8.2f}h")
     # headline ratios vs FedSyn (paper: >100x GS count, ~6x GS energy)
     base = next(r for r in rows if r["method"] == "FedSyn")
     ours = next(r for r in rows if r["method"] == "CroSatFL")
-    print(f"\nGS-comm reduction vs FedSyn: "
-          f"{base['gs_comm'] / max(ours['gs_comm'], 1):.1f}x")
-    print(f"Tx-energy reduction vs FedSyn: "
-          f"{base['tx_energy_kj'] / max(ours['tx_energy_kj'], 1e-9):.1f}x")
-    print(f"Waiting-time reduction vs FedSyn: "
-          f"{base['waiting_h'] / max(ours['waiting_h'], 1e-9):.1f}x")
+    log.info(f"GS-comm reduction vs FedSyn: "
+             f"{base['gs_comm'] / max(ours['gs_comm'], 1):.1f}x")
+    log.info(f"Tx-energy reduction vs FedSyn: "
+             f"{base['tx_energy_kj'] / max(ours['tx_energy_kj'], 1e-9):.1f}x")
+    log.info(f"Waiting-time reduction vs FedSyn: "
+             f"{base['waiting_h'] / max(ours['waiting_h'], 1e-9):.1f}x")
     return rows
 
 

@@ -18,8 +18,11 @@ from repro.core.starmask import StarMaskParams
 from repro.data.synth import dirichlet_partition, iid_partition, make_dataset
 from repro.fl.baselines import BASELINES, BaselineConfig
 from repro.fl.client import ImageFLModel
+from repro.obs import get_logger
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+log = get_logger("benchmarks")
 
 DATASETS = ("mnist-sim", "cifar10-sim", "eurosat-sim")
 TARGET_ACC = {"mnist-sim": 0.95, "cifar10-sim": 0.75, "eurosat-sim": 0.80}
@@ -72,29 +75,34 @@ class BenchSetup:
             seed=self.seed)
 
 
-def run_crosatfl(setup: BenchSetup, eval_every: bool = True):
+def run_crosatfl(setup: BenchSetup, eval_every: bool = True,
+                 observer=None):
     env, model = setup.build()
-    sess = Session(setup.session_config(model), env, model)
+    sess = Session(setup.session_config(model), env, model,
+                   observer=observer)
     eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
     return sess.run(eval_fn=eval_fn)
 
 
-def run_baseline(name: str, setup: BenchSetup, eval_every: bool = True):
+def run_baseline(name: str, setup: BenchSetup, eval_every: bool = True,
+                 observer=None):
     env, model = setup.build()
-    eng = BASELINES[name](setup.baseline_config(model), env, model)
+    eng = BASELINES[name](setup.baseline_config(model), env, model,
+                          observer=observer)
     eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
     return eng.run(eval_fn=eval_fn)
 
 
 def run_scenario(name: str, setup: BenchSetup, eval_every: bool = True,
-                 **kw):
+                 observer=None, **kw):
     """Scenario-zoo presets (fl/engine/presets.SCENARIO_NAMES): CroSatFL's
     quadruple with one policy swapped (pacing / gossip-only / codec map)."""
     from repro.fl.engine import make_scenario
     env, model = setup.build()
     scfg = setup.session_config(model)
     eng = make_scenario(name, scfg.engine_config(), env, model,
-                        k_nbr=scfg.k_nbr, starmask=scfg.starmask, **kw)
+                        k_nbr=scfg.k_nbr, starmask=scfg.starmask,
+                        observer=observer, **kw)
     eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
     return eng.run(eval_fn=eval_fn)
 
@@ -112,7 +120,8 @@ def print_csv(rows: list[dict]):
     if not rows:
         return
     keys = list(rows[0].keys())
-    print(",".join(keys))
+    log.raw(",".join(keys))
     for r in rows:
-        print(",".join(f"{r.get(k, '')}" if not isinstance(r.get(k), float)
-                       else f"{r[k]:.6g}" for k in keys))
+        log.raw(",".join(f"{r.get(k, '')}"
+                         if not isinstance(r.get(k), float)
+                         else f"{r[k]:.6g}" for k in keys))

@@ -12,6 +12,9 @@ import argparse
 from benchmarks.common import (BenchSetup, DATASETS, print_csv, run_baseline,
                                run_crosatfl, save_rows)
 from repro.fl.baselines import BASELINES
+from repro.obs import get_logger
+
+log = get_logger("benchmarks.convergence")
 
 
 def run(datasets, iid_modes, rounds, n_train, n_clients, local_epochs):
@@ -26,16 +29,16 @@ def run(datasets, iid_modes, rounds, n_train, n_clients, local_epochs):
                 rows.append({"method": "CroSatFL", "dataset": dataset,
                              "iid": iid, "round": h["round"],
                              "acc": h["acc"], "loss": h["loss"]})
-            print(f"CroSatFL {dataset} iid={iid}: "
-                  f"final acc {hist[-1]['acc']:.3f}")
+            log.info(f"CroSatFL {dataset} iid={iid}: "
+                     f"final acc {hist[-1]['acc']:.3f}")
             for name in BASELINES:
                 _, _, bh = run_baseline(name, setup)
                 for h in bh:
                     rows.append({"method": name, "dataset": dataset,
                                  "iid": iid, "round": h["round"],
                                  "acc": h["acc"], "loss": h["loss"]})
-                print(f"{name} {dataset} iid={iid}: "
-                      f"final acc {bh[-1]['acc']:.3f}")
+                log.info(f"{name} {dataset} iid={iid}: "
+                         f"final acc {bh[-1]['acc']:.3f}")
     return rows
 
 

@@ -11,6 +11,9 @@ import argparse
 from benchmarks.common import (BenchSetup, DATASETS, TARGET_ACC, print_csv,
                                run_baseline, run_crosatfl, save_rows)
 from repro.fl.baselines import BASELINES
+from repro.obs import get_logger
+
+log = get_logger("benchmarks.energy_time")
 
 
 def _to_target(hist, target):
@@ -45,9 +48,9 @@ def run(datasets, rounds, n_train, n_clients, local_epochs, scale=1.0):
                 "train_time_h": at["wall_clock_h"] + at["waiting_h"],
                 "final_acc": hist[-1]["acc"],
             })
-            print(f"{method:10s} {dataset}: reached={rows[-1]['reached']} "
-                  f"E={rows[-1]['total_energy_kj']:.2f}kJ "
-                  f"T={rows[-1]['train_time_h']:.1f}h")
+            log.info(f"{method:10s} {dataset}: reached={rows[-1]['reached']} "
+                     f"E={rows[-1]['total_energy_kj']:.2f}kJ "
+                     f"T={rows[-1]['train_time_h']:.1f}h")
     return rows
 
 

@@ -13,6 +13,9 @@ import numpy as np
 from benchmarks.common import BenchSetup, print_csv, save_rows
 from repro.core.energy import e_train, t_train
 from repro.core import skipone
+from repro.obs import get_logger
+
+log = get_logger("benchmarks.hardware_mix")
 
 
 def one_round(setup: BenchSetup, skip_one: bool, jitter):
@@ -56,8 +59,9 @@ def run(n_clients, n_train):
                      "crosatfl_time_s": t_skip,
                      "fedorbit_energy_kj": e_full * 0.5 / 1e3,  # minifloat
                      "fedorbit_time_s": t_full})
-        print(f"{name:10s} CroSatFL E={e_skip/1e3:7.2f}kJ T={t_skip:7.1f}s | "
-              f"FedOrbit E={e_full*0.5/1e3:7.2f}kJ T={t_full:7.1f}s")
+        log.info(f"{name:10s} CroSatFL E={e_skip/1e3:7.2f}kJ "
+                 f"T={t_skip:7.1f}s | "
+                 f"FedOrbit E={e_full*0.5/1e3:7.2f}kJ T={t_full:7.1f}s")
     # paper's qualitative claims
     assert rows[2]["crosatfl_energy_kj"] < rows[0]["crosatfl_energy_kj"], \
         "GPU fleet should be cheaper per round"

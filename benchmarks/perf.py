@@ -2,7 +2,7 @@
 batched execution vs batched + Pallas cross-agg mixing (DESIGN.md §9).
 
     PYTHONPATH=src python -m benchmarks.perf [--smoke] [--sizes a,b]
-        [--out PATH]
+        [--out PATH] [--trace]
 
 Per constellation size, builds ONE (env, model) setup and times a full
 ``RoundEngine.run`` per execution mode (after a 2-round warmup run that
@@ -10,6 +10,13 @@ pays all jit compiles), reporting rounds/sec and local-SGD steps/sec —
 steps counted exactly via a model proxy that records every trained
 participant, so the two paths are compared on identical realized work
 (same seed -> same Skip-One draws).
+
+XLA compile events (count + seconds per mode, via
+``repro.obs.jaxprof.CompileWatcher``) are always captured and land in
+the report — batched-vs-sequential compile overhead is part of the
+story. ``--trace`` additionally wraps each mode's first timed run in a
+``jax.profiler`` capture (TensorBoard-loadable, under
+results/jaxprof/).
 
 Writes ``BENCH_round_engine.json`` at the repo root (NOT results/, which
 is gitignored): the file seeds the repo's perf trajectory, is committed,
@@ -28,8 +35,15 @@ import os
 import sys
 import time
 
+from repro.obs import get_logger
+from repro.obs.jaxprof import CompileWatcher
+from repro.obs.jaxprof import trace as profiler_trace
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 DEFAULT_OUT = os.path.join(ROOT, "BENCH_round_engine.json")
+TRACE_DIR = os.path.join(ROOT, "results", "jaxprof")
+
+log = get_logger("benchmarks.perf")
 
 # constellation sizes: the 40-client/8-cluster cell is the pinned
 # acceptance config; 16/4 and 96/16 bracket it
@@ -103,37 +117,56 @@ def make_engine(mode: str, env, model, size_cfg: dict):
 
 
 def time_mode(mode: str, env, model, size_cfg: dict,
-              repeats: int = 3) -> dict:
+              repeats: int = 3, watcher: CompileWatcher = None,
+              trace_dir: str = None) -> dict:
     """Best-of-``repeats`` full runs (after a compile-paying warmup run):
     the container's CPU shares are bursty, and best-of is the standard
-    way to report the machine's actual capability per mode."""
+    way to report the machine's actual capability per mode.
+
+    ``watcher`` attributes the warmup's XLA compile events to this mode;
+    ``trace_dir`` wraps the first timed run in a jax profiler capture.
+    """
+    import contextlib
+
     import jax
 
     counter = _CountingModel(model)
     eng = make_engine(mode, env, counter, size_cfg)
-    eng.run(rounds=2)                        # warmup: pay every jit compile
+    label = f"warmup:{mode}"
+    with (watcher.track(label) if watcher is not None
+          else contextlib.nullcontext()):
+        eng.run(rounds=2)                    # warmup: pay every jit compile
     wall, steps = float("inf"), 0
-    for _ in range(repeats):
+    for rep in range(repeats):
         counter.participants = 0
-        t0 = time.perf_counter()
-        w, ledger, _ = eng.run()
-        jax.block_until_ready(jax.tree.leaves(w))
-        dt = time.perf_counter() - t0
+        prof = (profiler_trace(os.path.join(trace_dir, mode))
+                if trace_dir is not None and rep == 0
+                else contextlib.nullcontext())
+        with prof:
+            t0 = time.perf_counter()
+            w, ledger, _ = eng.run()
+            jax.block_until_ready(jax.tree.leaves(w))
+            dt = time.perf_counter() - t0
         if dt < wall:
             wall = dt
             steps = (counter.participants * EPOCHS
                      * (model.n_pad // model.batch))
     rounds = size_cfg["rounds"]
-    return {
+    out = {
         "wall_s": round(wall, 4),
         "rounds_per_s": round(rounds / wall, 4),
         "local_steps_per_s": round(steps / wall, 2),
         "n_clusters": eng.last_plan.n_clusters,
         "timing": f"best of {repeats}",
     }
+    if watcher is not None:
+        slot = watcher.by_label.get(label, {})
+        out["compile"] = {"events": slot.get("events", 0),
+                          "seconds": round(slot.get("seconds", 0.0), 4)}
+    return out
 
 
-def run(sizes: dict, out_path: str) -> int:
+def run(sizes: dict, out_path: str, trace: bool = False) -> int:
     import jax
 
     report = {
@@ -154,33 +187,43 @@ def run(sizes: dict, out_path: str) -> int:
         "sizes": {},
     }
     failures = 0
-    for name, size_cfg in sizes.items():
-        env, model = build_setup(size_cfg)
-        row: dict = {"config": dict(size_cfg), "modes": {}}
-        for mode in MODES:
-            try:
-                row["modes"][mode] = time_mode(mode, env, model, size_cfg)
-                m = row["modes"][mode]
-                print(f"{name:8s} {mode:20s} {m['wall_s']:8.3f}s "
-                      f"{m['rounds_per_s']:7.2f} rounds/s "
-                      f"{m['local_steps_per_s']:9.1f} steps/s "
-                      f"K={m['n_clusters']}")
-            except Exception as e:  # noqa: BLE001 — report, keep sweeping
-                failures += 1
-                print(f"FAILED {name}/{mode}: {type(e).__name__}: {e}")
-        seq = row["modes"].get("sequential")
-        if seq:
-            row["speedup_vs_sequential"] = {
-                mode: round(row["modes"][mode]["rounds_per_s"]
-                            / seq["rounds_per_s"], 3)
-                for mode in row["modes"] if mode != "sequential"}
-            print(f"{name:8s} speedup: " + "  ".join(
-                f"{k}={v}x" for k, v in row["speedup_vs_sequential"].items()))
-        report["sizes"][name] = row
+    with CompileWatcher() as watcher:
+        for name, size_cfg in sizes.items():
+            env, model = build_setup(size_cfg)
+            row: dict = {"config": dict(size_cfg), "modes": {}}
+            trace_dir = (os.path.join(TRACE_DIR, name) if trace else None)
+            for mode in MODES:
+                try:
+                    row["modes"][mode] = time_mode(
+                        mode, env, model, size_cfg, watcher=watcher,
+                        trace_dir=trace_dir)
+                    m = row["modes"][mode]
+                    log.raw(f"{name:8s} {mode:20s} {m['wall_s']:8.3f}s "
+                            f"{m['rounds_per_s']:7.2f} rounds/s "
+                            f"{m['local_steps_per_s']:9.1f} steps/s "
+                            f"K={m['n_clusters']} "
+                            f"compile={m['compile']['seconds']}s")
+                except Exception as e:  # noqa: BLE001 — keep sweeping
+                    failures += 1
+                    log.warn(f"FAILED {name}/{mode}: "
+                             f"{type(e).__name__}: {e}")
+            seq = row["modes"].get("sequential")
+            if seq:
+                row["speedup_vs_sequential"] = {
+                    mode: round(row["modes"][mode]["rounds_per_s"]
+                                / seq["rounds_per_s"], 3)
+                    for mode in row["modes"] if mode != "sequential"}
+                log.raw(f"{name:8s} speedup: " + "  ".join(
+                    f"{k}={v}x"
+                    for k, v in row["speedup_vs_sequential"].items()))
+            report["sizes"][name] = row
+        report["compile_events"] = watcher.summary()
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"wrote {out_path}")
+    log.info(f"wrote {out_path}")
+    if trace:
+        log.info(f"profiler traces under {TRACE_DIR}")
     return 1 if failures else 0
 
 
@@ -191,11 +234,14 @@ def main(argv=None) -> int:
     ap.add_argument("--sizes", default=None,
                     help=f"comma-separated subset of {list(SIZES)}")
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--trace", action="store_true",
+                    help="jax profiler capture of each mode's first timed "
+                         "run (results/jaxprof/)")
     args = ap.parse_args(argv)
     sizes = SMOKE_SIZES if args.smoke else SIZES
     if args.sizes:
         sizes = {k: SIZES[k] for k in args.sizes.split(",")}
-    return run(sizes, args.out)
+    return run(sizes, args.out, trace=args.trace)
 
 
 if __name__ == "__main__":

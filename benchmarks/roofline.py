@@ -11,7 +11,11 @@ import argparse
 import json
 import os
 
+from repro.obs import get_logger
+
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+log = get_logger("benchmarks.roofline")
 
 RECOMMEND = {
     "compute": "compute-bound: raise MXU utilization (bigger block shapes, "
@@ -42,20 +46,20 @@ def render(rows):
     hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} "
            f"{'t_comp(s)':>10s} {'t_mem(s)':>10s} {'t_coll(s)':>10s} "
            f"{'dominant':>10s} {'useful':>7s} {'frac':>6s}")
-    print(hdr)
-    print("-" * len(hdr))
+    log.raw(hdr)
+    log.raw("-" * len(hdr))
     for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
-        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
-              f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
-              f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
-              f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:6.3f}")
-    print()
+        log.raw(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+                f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
+                f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:6.3f}")
+    log.raw("")
     worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:3]
-    print("Hillclimb candidates (worst roofline fraction):")
+    log.info("Hillclimb candidates (worst roofline fraction):")
     for r in worst:
-        print(f"  {r['arch']} x {r['shape']} [{r['mesh']}] "
-              f"frac={r['roofline_fraction']:.4f} dom={r['dominant']}: "
-              f"{RECOMMEND[r['dominant']]}")
+        log.info(f"  {r['arch']} x {r['shape']} [{r['mesh']}] "
+                 f"frac={r['roofline_fraction']:.4f} dom={r['dominant']}: "
+                 f"{RECOMMEND[r['dominant']]}")
 
 
 def main(argv=None):
@@ -63,8 +67,8 @@ def main(argv=None):
     ap.add_argument("--json", default=os.path.join(RESULTS, "dryrun.jsonl"))
     args = ap.parse_args(argv)
     if not os.path.exists(args.json):
-        print(f"no dry-run results at {args.json}; run "
-              f"`python -m repro.launch.dryrun --all --both-meshes` first")
+        log.warn(f"no dry-run results at {args.json}; run "
+                 f"`python -m repro.launch.dryrun --all --both-meshes` first")
         return 1
     rows = load(args.json)
     render(rows)

@@ -12,8 +12,12 @@ import argparse
 import sys
 import time
 
+from repro.obs import get_logger
 
-def smoke(measured_cost: bool = False) -> int:
+log = get_logger("benchmarks.run")
+
+
+def smoke(measured_cost: bool = False, trace: bool = False) -> int:
     """1-round run of all six algorithms PLUS the scenario-zoo presets
     (semi-sync/async pacing, gossip-only, per-cluster codec map) on a tiny
     setup through the shared RoundEngine — catches engine regressions in
@@ -21,7 +25,10 @@ def smoke(measured_cost: bool = False) -> int:
     --quick profile). Writes every ledger to results/smoke_ledgers.json so
     CI can upload them as a diffable artifact. ``measured_cost``: resolve
     c_flop from the compiled-HLO estimate for the gemma3-1b/train_4k cell
-    instead of the 5e7 default.
+    instead of the 5e7 default. ``trace``: attach a ``TracingObserver``
+    per method, bit-reconcile each trace against its ledger, and write
+    the per-method JSONL traces + ``trace.json`` + the paper-style report
+    table under results/obs/.
     """
     import dataclasses
     import json
@@ -39,17 +46,29 @@ def smoke(measured_cost: bool = False) -> int:
     if measured_cost:
         setup = dataclasses.replace(
             setup, c_flop="measured:gemma3-1b/train_4k")
+    obs_dir = os.path.join(RESULTS, "obs")
+    if trace:
+        os.makedirs(obs_dir, exist_ok=True)
     failures = 0
     methods = ["CroSatFL"] + list(BASELINES) + list(SCENARIO_NAMES)
     ledgers = {}
+    trace_paths = []
     for method in methods:
         try:
+            obs = None
+            if trace:
+                from repro.obs import TracingObserver
+                obs = TracingObserver(
+                    os.path.join(obs_dir, f"{method}.jsonl"))
             if method == "CroSatFL":
-                _, ledger, _ = run_crosatfl(setup, eval_every=False)
+                _, ledger, _ = run_crosatfl(setup, eval_every=False,
+                                            observer=obs)
             elif method in BASELINES:
-                _, ledger, _ = run_baseline(method, setup, eval_every=False)
+                _, ledger, _ = run_baseline(method, setup,
+                                            eval_every=False, observer=obs)
             else:
-                _, ledger, _ = run_scenario(method, setup, eval_every=False)
+                _, ledger, _ = run_scenario(method, setup,
+                                            eval_every=False, observer=obs)
             ledgers[method] = dataclasses.asdict(ledger)
             row = ledger.row()
             # gossip-only sessions never touch the GS — that IS the point
@@ -58,20 +77,37 @@ def smoke(measured_cost: bool = False) -> int:
             ok = (gs_ok and ledger.total_energy_j > 0 and
                   all(np.isfinite(v) and v >= 0 for k, v in row.items()
                       if k.endswith(("_kj", "_h"))))
-            print(f"{'ok ' if ok else 'BAD'} {method:20s} "
-                  f"gs={row['gs_comm']:3d} intra={row['intra_lisl']:4d} "
-                  f"txE={row['tx_energy_kj']:.3g}kJ "
-                  f"trainE={row['train_energy_kj']:.3g}kJ")
+            if obs is not None:
+                rec = obs.reconcile(ledger)
+                ok = ok and rec["exact"]
+                obs.tracer.to_chrome_trace(
+                    os.path.join(obs_dir, f"{method}.trace.json"))
+                trace_paths.append(obs.tracer.jsonl_path)
+            log.info(f"{'ok ' if ok else 'BAD'} {method:20s} "
+                     f"gs={row['gs_comm']:3d} intra={row['intra_lisl']:4d} "
+                     f"txE={row['tx_energy_kj']:.3g}kJ "
+                     f"trainE={row['train_energy_kj']:.3g}kJ")
             failures += 0 if ok else 1
         except Exception as e:  # noqa: BLE001 — report, keep sweeping
             failures += 1
-            print(f"FAILED {method}: {type(e).__name__}: {e}")
+            log.warn(f"FAILED {method}: {type(e).__name__}: {e}")
     os.makedirs(RESULTS, exist_ok=True)
     out = os.path.join(RESULTS, "smoke_ledgers.json")
     with open(out, "w") as f:
         json.dump(ledgers, f, indent=1, sort_keys=True)
-    print(f"wrote {out}")
-    print(f"\nsmoke: {len(methods) - failures}/{len(methods)} algorithms ok")
+    log.info(f"wrote {out}")
+    if trace_paths:
+        from repro.obs.report import render
+        table = render(trace_paths)
+        report_path = os.path.join(obs_dir, "report.txt")
+        with open(report_path, "w") as f:
+            f.write(table + "\n")
+        log.raw("")
+        log.raw(table)
+        log.info(f"wrote {report_path}")
+    log.raw("")
+    log.info(f"smoke: {len(methods) - failures}/{len(methods)} "
+             "algorithms ok")
     return 1 if failures else 0
 
 
@@ -82,10 +118,13 @@ def main(argv=None):
                     help="1-round engine smoke of all six algorithms")
     ap.add_argument("--measured-cost", action="store_true",
                     help="with --smoke: c_flop from HLO dry-run estimates")
+    ap.add_argument("--trace", action="store_true",
+                    help="with --smoke: per-method TracingObserver; "
+                         "traces + report under results/obs/")
     ap.add_argument("--skip", nargs="*", default=[])
     args = ap.parse_args(argv)
     if args.smoke:
-        return smoke(measured_cost=args.measured_cost)
+        return smoke(measured_cost=args.measured_cost, trace=args.trace)
     quick = [] if args.full else ["--quick"]
 
     from benchmarks import (ablations, comm_breakdown, convergence,
@@ -109,14 +148,14 @@ def main(argv=None):
     for name, fn, fargs in suite:
         if any(s in name for s in args.skip):
             continue
-        print(f"\n=== {name} ===")
+        log.raw(f"\n=== {name} ===")
         t0 = time.time()
         try:
             fn(fargs)
         except Exception as e:  # keep the suite running
             failures += 1
-            print(f"FAILED {name}: {type(e).__name__}: {e}")
-        print(f"--- {name} done in {time.time() - t0:.0f}s ---")
+            log.warn(f"FAILED {name}: {type(e).__name__}: {e}")
+        log.raw(f"--- {name} done in {time.time() - t0:.0f}s ---")
     return 1 if failures else 0
 
 

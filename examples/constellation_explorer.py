@@ -13,31 +13,35 @@ from repro.constellation.sim import ConstellationEnv
 from repro.constellation.walker import WalkerDelta
 from repro.core.starmask import (Instance, StarMaskParams, cluster,
                                  effective_capacity, k_min)
+from repro.obs import get_logger
+
+log = get_logger("examples.constellation_explorer")
 
 
 def main():
     w = WalkerDelta()
-    print(f"Walker-Delta: {w.n_planes} planes x {w.sats_per_plane} sats, "
-          f"{w.altitude_m/1e3:.0f} km, {w.inclination_deg:.0f} deg incl., "
-          f"period {w.period_s/60:.1f} min")
+    log.info(f"Walker-Delta: {w.n_planes} planes x {w.sats_per_plane} sats, "
+             f"{w.altitude_m/1e3:.0f} km, {w.inclination_deg:.0f} deg incl., "
+             f"period {w.period_s/60:.1f} min")
 
-    print("\nLISL range sweep (paper Table I ranges):")
+    log.raw("\nLISL range sweep (paper Table I ranges):")
     for km in RANGE_SETTINGS_KM:
         cfg = LISLConfig(range_m=km * 1e3, fanout_default=10)
         adj = lisl_graph(w, 0.0, cfg)
         deg = adj.sum(1)
-        print(f"  {km:5d} km: mean degree {deg.mean():5.2f}, "
-              f"max {deg.max():2d} -> supports clusters of ~{deg.max() + 1}")
+        log.raw(f"  {km:5d} km: mean degree {deg.mean():5.2f}, "
+                f"max {deg.max():2d} -> supports clusters of "
+                f"~{deg.max() + 1}")
 
-    print("\nTopology dynamics over one orbit:")
+    log.raw("\nTopology dynamics over one orbit:")
     env = ConstellationEnv(n_clients=20, seed=0)
     for frac in (0.0, 0.25, 0.5):
         t = frac * w.period_s
         a = env.client_adjacency(t)
-        print(f"  t={t/60:6.1f} min: client reach degree "
-              f"{a.sum(1).mean():.1f}")
+        log.raw(f"  t={t/60:6.1f} min: client reach degree "
+                f"{a.sum(1).mean():.1f}")
 
-    print("\nStarMask clustering on 20 clients:")
+    log.raw("\nStarMask clustering on 20 clients:")
     rng = np.random.default_rng(0)
     n = 20
     inst = Instance(
@@ -48,18 +52,18 @@ def main():
         fanout=np.asarray(env.fanout),
         lisl_e=rng.uniform(1, 5, (n, n)))
     p = StarMaskParams(k_max=8, m_min=2)
-    print(f"  K_min (Eq. 25) = {k_min(inst, p)}")
+    log.raw(f"  K_min (Eq. 25) = {k_min(inst, p)}")
     res = cluster(inst, p, jax.random.PRNGKey(0), n_samples=6)
-    print(f"  feasible={res.feasible} K={len(res.clusters)} "
-          f"reward={res.reward:.4f} fallback={res.used_fallback}")
+    log.raw(f"  feasible={res.feasible} K={len(res.clusters)} "
+            f"reward={res.reward:.4f} fallback={res.used_fallback}")
     cap = effective_capacity(inst, p)
     for i, c in enumerate(res.clusters):
         hw = "".join("G" if inst.hw[j] else "C" for j in c)
-        print(f"  cluster {i}: n={len(c):2d} hw={hw:10s} "
-              f"t_comp range [{inst.t_comp[c].min():5.1f},"
-              f"{inst.t_comp[c].max():5.1f}]s "
-              f"cap={cap[c].max()+1}")
-    print("  (Eq. 23 master feasibility: every |C_k| <= max member cap)")
+        log.raw(f"  cluster {i}: n={len(c):2d} hw={hw:10s} "
+                f"t_comp range [{inst.t_comp[c].min():5.1f},"
+                f"{inst.t_comp[c].max():5.1f}]s "
+                f"cap={cap[c].max()+1}")
+    log.raw("  (Eq. 23 master feasibility: every |C_k| <= max member cap)")
 
 
 if __name__ == "__main__":

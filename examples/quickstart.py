@@ -16,10 +16,13 @@ from repro.core.session import Session, SessionConfig
 from repro.core.starmask import StarMaskParams
 from repro.data.synth import dirichlet_partition, make_dataset
 from repro.fl.client import ImageFLModel
+from repro.obs import get_logger
+
+log = get_logger("examples.quickstart")
 
 
 def main():
-    print("== CroSatFL quickstart ==")
+    log.info("== CroSatFL quickstart ==")
     ds = make_dataset("eurosat-sim", n=1200, seed=0)
     test = make_dataset("eurosat-sim", n=400, seed=99)
     n_clients = 12
@@ -36,17 +39,17 @@ def main():
     w_final, ledger, history = session.run(
         eval_fn=lambda p, r: model.evaluate(p))
 
-    print("\nround  acc    loss")
+    log.raw("\nround  acc    loss")
     for h in history:
-        print(f"{h['round']:5d}  {h['acc']:.3f}  {h['loss']:.3f}")
+        log.raw(f"{h['round']:5d}  {h['acc']:.3f}  {h['loss']:.3f}")
 
-    print("\nsession ledger (Table-II shape):")
+    log.raw("\nsession ledger (Table-II shape):")
     for k, v in ledger.row().items():
-        print(f"  {k:16s} {v:10.3f}" if isinstance(v, float)
-              else f"  {k:16s} {v:10d}")
-    print(f"\nfinal accuracy: {model.evaluate(w_final)['acc']:.3f}")
-    print("GS was contacted", ledger.gs_count,
-          "times total (bootstrap + final collection only).")
+        log.raw(f"  {k:16s} {v:10.3f}" if isinstance(v, float)
+                else f"  {k:16s} {v:10d}")
+    log.info(f"final accuracy: {model.evaluate(w_final)['acc']:.3f}")
+    log.info(f"GS was contacted {ledger.gs_count} times total "
+             "(bootstrap + final collection only).")
 
 
 if __name__ == "__main__":

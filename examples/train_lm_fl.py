@@ -27,6 +27,9 @@ from repro.data.synth import SynthLMDataset
 from repro.launch import steps as S
 from repro.launch.mesh import make_test_mesh
 from repro.models import api
+from repro.obs import get_logger
+
+log = get_logger("examples.train_lm_fl")
 
 
 def main():
@@ -49,8 +52,8 @@ def main():
         d_ff=args.d_model * 2 if get_config(args.arch).d_ff else 0,
         vocab_size=256)
     n_params = api.count_params(cfg)
-    print(f"arch={args.arch} reduced to {n_params/1e6:.1f}M params, "
-          f"K={args.clusters} clusters")
+    log.info(f"arch={args.arch} reduced to {n_params/1e6:.1f}M params, "
+             f"K={args.clusters} clusters")
 
     K = args.clusters
     data = SynthLMDataset.make(n=K * 512, seq=args.seq + 1, vocab=256,
@@ -73,7 +76,7 @@ def main():
                                      cluster_params)
         mom = load_pytree(os.path.join(args.ckpt_dir, "m.npz"), mom)
         start = int(np.load(os.path.join(args.ckpt_dir, "step.npy")))
-        print(f"resumed from step {start}")
+        log.info(f"resumed from step {start}")
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -100,9 +103,9 @@ def main():
             cluster_params, mom, losses = step_fn(
                 cluster_params, mom, batch, jnp.asarray(M, jnp.float32))
             if it % 20 == 0 or it == args.steps - 1:
-                print(f"step {it:4d} losses="
-                      f"{[f'{float(l):.3f}' for l in losses]} "
-                      f"({time.time()-t0:.0f}s)")
+                log.info(f"step {it:4d} losses="
+                         f"{[f'{float(l):.3f}' for l in losses]} "
+                         f"({time.time()-t0:.0f}s)")
             if it % args.ckpt_every == args.ckpt_every - 1:
                 os.makedirs(args.ckpt_dir, exist_ok=True)
                 save_pytree(cluster_params,
@@ -111,9 +114,10 @@ def main():
                 np.save(os.path.join(args.ckpt_dir, "step.npy"), it + 1)
 
     final = crossagg.consolidate(cluster_params, n_samples)
-    print(f"consolidated final model: "
-          f"{sum(l.size for l in jax.tree.leaves(final))/1e6:.1f}M params")
-    print("done.")
+    log.info(f"consolidated final model: "
+             f"{sum(l.size for l in jax.tree.leaves(final))/1e6:.1f}M "
+             f"params")
+    log.info("done.")
 
 
 if __name__ == "__main__":

@@ -174,6 +174,13 @@ class EnergyLedger:
             "wall_clock_h": self.wall_clock_s / 3600,
         }
 
+    def snapshot(self) -> dict:
+        """Raw SI field values (unlike ``row``, no unit rescaling) — the
+        reconciliation surface for repro.obs: an observer mirror is
+        bit-exact iff its snapshot equals the session ledger's."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(EnergyLedger)}
+
     def merged(self, other: "EnergyLedger") -> "EnergyLedger":
         out = dataclasses.replace(self)
         for f in dataclasses.fields(EnergyLedger):

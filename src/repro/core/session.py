@@ -71,10 +71,11 @@ class Session:
 
     RELAY_FALLBACK_M = 3e6   # nominal relayed path when instantaneously cut
 
-    def __init__(self, cfg: SessionConfig, env, model):
+    def __init__(self, cfg: SessionConfig, env, model, observer=None):
         self.engine = make_crosatfl(cfg.engine_config(), env, model,
                                     k_nbr=cfg.k_nbr, skip_one=cfg.skip_one,
-                                    starmask=cfg.starmask)
+                                    starmask=cfg.starmask,
+                                    observer=observer)
         self.cfg, self.env, self.model = cfg, env, model
         self.rng = self.engine.rng
 

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.data.synth import SynthImageDataset
 from repro.fl.models_image import MODEL_ZOO
+from repro.obs.jaxprof import annotate
 from repro.optim.optimizers import sgd_init, sgd_update
 
 F32 = jnp.float32
@@ -215,9 +216,10 @@ class ImageFLModel:
 
     def local_update(self, w, cid: int, epochs: int, key):
         x, y, m = self._padded(cid)
-        return _local_train(w, x, y, m, key, apply_fn=self.apply_fn,
-                            epochs=epochs, batch=self.batch, lr=self.lr,
-                            momentum=self.momentum)
+        with annotate("local_train"):
+            return _local_train(w, x, y, m, key, apply_fn=self.apply_fn,
+                                epochs=epochs, batch=self.batch, lr=self.lr,
+                                momentum=self.momentum)
 
     def cluster_round(self, w, participant_ids, n_samples, epochs: int, key):
         if len(participant_ids) == 0:
@@ -258,11 +260,12 @@ class ImageFLModel:
             keys[kc, :n] = np.asarray(jax.random.split(cluster_keys[kc], n))
         X, Y, M = self._device_data()
         unroll = epochs * (self.n_pad // self.batch) <= _UNROLL_LIMIT
-        return _fleet_round(stacked_w, X, Y, M, jnp.asarray(idx),
-                            jnp.asarray(wt), jnp.asarray(keys),
-                            apply_fn=self.apply_fn, epochs=epochs,
-                            batch=self.batch, lr=self.lr,
-                            momentum=self.momentum, unroll=unroll)
+        with annotate("fleet_round"):
+            return _fleet_round(stacked_w, X, Y, M, jnp.asarray(idx),
+                                jnp.asarray(wt), jnp.asarray(keys),
+                                apply_fn=self.apply_fn, epochs=epochs,
+                                batch=self.batch, lr=self.lr,
+                                momentum=self.momentum, unroll=unroll)
 
     def stack(self, params_list: list[Any]):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)

@@ -133,7 +133,13 @@ class SessionState:
 
 @dataclass
 class EngineContext:
-    """Read-mostly bundle threaded through policies each call."""
+    """Read-mostly bundle threaded through policies each call.
+
+    ``obs`` is the session's ``EngineObserver`` (repro.obs.observer) or
+    ``None`` when observability is disabled — every hook site guards with
+    ``if ctx.obs is not None`` so the disabled path costs one pointer
+    comparison and the golden ledgers stay bit-for-bit (DESIGN.md §10).
+    """
     cfg: EngineConfig
     env: Any
     model: Any
@@ -142,6 +148,7 @@ class EngineContext:
     tt_full: np.ndarray              # (n,) per-round train seconds
     et_full: np.ndarray              # (n,) per-round train joules
     hw_penalty: np.ndarray           # (n,) Skip-One hardware-rarity term
+    obs: Any = None                  # EngineObserver | None
 
     @property
     def ledger(self) -> EnergyLedger:

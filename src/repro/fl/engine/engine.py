@@ -80,13 +80,14 @@ class RoundEngine:
 
     def __init__(self, cfg: EngineConfig, env, model, *, clustering,
                  selection, mixing, codec=None, pacing=None,
-                 name: str = "engine"):
+                 name: str = "engine", observer=None):
         cfg = resolve_c_flop(cfg)
         self.cfg, self.env, self.model = cfg, env, model
         self.clustering, self.selection, self.mixing = \
             clustering, selection, mixing
         self.codec = codec if codec is not None else IdentityCodec()
         self.pacing = pacing if pacing is not None else SyncPacing()
+        self.observer = observer     # EngineObserver | None (repro.obs)
         self.name = name
         self.rng = np.random.default_rng(cfg.seed)
         self._plan_cache = None      # (policy_params, plan, post-build key)
@@ -100,8 +101,8 @@ class RoundEngine:
         return EngineContext(
             cfg=cfg, env=env, model=self.model,
             transport=Transport(ledger, env.link_params, cfg.model_bits,
-                                self.codec),
-            rng=self.rng,
+                                self.codec, obs=self.observer),
+            rng=self.rng, obs=self.observer,
             tt_full=t_train(env.n_samples, cfg.c_flop, self._alpha,
                             cfg.local_epochs),
             et_full=e_train(env.n_samples, cfg.c_flop, env.profiles,
@@ -186,6 +187,10 @@ class RoundEngine:
         # serves the whole session regardless of per-round participation
         self._fleet_pad = max((len(c) for c in plan.clusters), default=1)
 
+        obs = self.observer
+        if obs is not None:
+            obs.session_start(self.name, plan, cfg, ledger.wall_clock_s)
+
         if state is None:
             key, sub = jax.random.split(key)
             w0 = model.init(sub)
@@ -198,7 +203,11 @@ class RoundEngine:
                 skip_states=[self.selection.init_state(len(c))
                              for c in plan.clusters],
                 masters=masters, rng_key=key, ledger=ledger)
+            if obs is not None:
+                obs.phase_start("bootstrap")
             self.mixing.bootstrap(ctx, plan, state)
+            if obs is not None:
+                obs.phase_end("bootstrap")
             state.rng_state = self.rng.bit_generator.state
         else:
             if state.rng_state is not None:
@@ -217,6 +226,9 @@ class RoundEngine:
         wall = ledger.wall_clock_s
         for r in range(state.round_idx, R):
             t_round = wall
+            if obs is not None:
+                obs.round_start(r, wall)
+                obs.phase_start("select+upload")
             self.pacing.begin_round(ctx, r)
             barriers: list[float] = []
             sels: list[RoundSelection] = []
@@ -225,17 +237,28 @@ class RoundEngine:
                 sel, state.skip_states[kc] = self.selection.select(
                     ctx, c, state.skip_states[kc], r)
                 sels.append(sel)
+                if obs is not None:
+                    obs.select(r, kc, sel)
                 key, sub = jax.random.split(key)
                 subs.append(sub)
                 barriers.append(self.pacing.account_cluster(ctx, sel, kc))
                 self.mixing.upload(ctx, plan, state, kc, sel.participants,
                                    t_round)
 
+            if obs is not None:
+                obs.phase_end("select+upload")
+                obs.phase_start("train")
             stacked = self._train_round(state, sels, subs, r)
             round_barrier = self.pacing.advance(barriers)
+            if obs is not None:
+                obs.phase_end("train", sim_dur=round_barrier)
+                obs.phase_start("mix")
             stacked, dt_comm = self.mixing.mix(
                 ctx, plan, state, stacked, N_k, sels, r,
                 t_round, wall + round_barrier)
+            if obs is not None:
+                obs.phase_end("mix", sim_t0=wall + round_barrier,
+                              sim_dur=dt_comm)
 
             state.cluster_models = stacked
             state.round_idx = r + 1
@@ -247,6 +270,8 @@ class RoundEngine:
             wall += round_barrier
             wall += dt_comm
             ledger.wall_clock_s = wall
+            if obs is not None:
+                obs.round_end(r, wall, wall - t_round)
 
             if ckpt_dir is not None and (r + 1) % ckpt_every == 0:
                 from repro.ckpt import save_session
@@ -254,11 +279,20 @@ class RoundEngine:
 
             if eval_fn is not None and ((r + 1) % eval_every == 0
                                         or r + 1 == R):
+                if obs is not None:
+                    obs.phase_start("eval")
                 w_glob = crossagg.consolidate(stacked, N_k)
                 m = eval_fn(w_glob, r)
                 m["round"] = r
                 m.update(ledger.row())
                 history.append(m)
+                if obs is not None:
+                    obs.phase_end("eval")
 
+        if obs is not None:
+            obs.phase_start("finalize")
         w_final = self.mixing.finalize(ctx, plan, state, N_k, wall)
+        if obs is not None:
+            obs.phase_end("finalize")
+            obs.session_end(ledger.wall_clock_s, ledger)
         return w_final, ledger, history

@@ -121,9 +121,13 @@ class CrossAggMixing:
             dist = env.lisl_distance(int(i), int(mk), t_now)
             if not np.isfinite(dist):
                 # master migration: re-designate a reachable member
+                old_mk = int(mk)
                 mk = self._migrate(ctx, plan.clusters[kc], i, t_now)
                 state.masters[kc] = mk
                 dist = self._dist(ctx, int(i), int(mk), t_now)
+                if ctx.obs is not None:
+                    ctx.obs.note("master_migration", cluster=int(kc),
+                                 old_master=old_mk, new_master=int(mk))
             tr.intra(1, dist)
 
     def mix(self, ctx: EngineContext, plan: ClusterPlan, state: SessionState,
@@ -256,6 +260,8 @@ class GossipMixing(CrossAggMixing):
             "sigma2": float(sigma2), "rounds": int(n_rounds),
             "eps": self.consensus_eps}
         plan.meta["gossip_consensus"] = self.last_consensus
+        if ctx.obs is not None:
+            ctx.obs.note("gossip_consensus", **self.last_consensus)
         return crossagg.consolidate(state.cluster_models, N_k)
 
 
@@ -279,7 +285,7 @@ class _GSCentricMixing:
         if not waits:
             return 0.0
         wmax = max(waits)
-        tr.wait(float(np.sum(wmax - np.asarray(waits))))
+        tr.wait(float(np.sum(wmax - np.asarray(waits))), "sync")
         return wmax
 
 

@@ -54,14 +54,20 @@ def _charge_train(ctx: EngineContext, sel: RoundSelection, kc,
     the round-wide deadline is known."""
     mask, tt_r = sel.mask, sel.tt_r
     barrier = float(tt_r[mask].max()) if mask.any() else 0.0
-    ctx.ledger.add_train(
-        float(ctx.et_full[sel.ids][mask].sum())
-        * ctx.transport.arith_scale_for(kc),
-        barrier)
+    # energy/idle go through locals so observer and ledger see the SAME
+    # floats (bit-exact reconciliation, DESIGN.md §10)
+    e_tr = (float(ctx.et_full[sel.ids][mask].sum())
+            * ctx.transport.arith_scale_for(kc))
+    ctx.ledger.add_train(e_tr, barrier)
+    if ctx.obs is not None:
+        ctx.obs.train(kc, e_tr, barrier)
     if charge_wait:
-        ctx.ledger.add_wait(float((barrier - tt_r[mask]).sum()
-                                  + barrier * (~mask).sum()
-                                  if mask.any() else 0.0))
+        idle = float((barrier - tt_r[mask]).sum()
+                     + barrier * (~mask).sum()
+                     if mask.any() else 0.0)
+        ctx.ledger.add_wait(idle)
+        if ctx.obs is not None:
+            ctx.obs.wait(idle, "barrier", kc)
     return barrier
 
 
@@ -152,11 +158,13 @@ class SemiSyncPacing:
         self._deadline = D
         # idle: everyone waits to the deadline at most; stragglers' own
         # overshoot is work, not waiting
-        for sel in sels:
+        for kc, sel in enumerate(sels):
             tt, mask = sel.tt_r, sel.mask
-            ctx.ledger.add_wait(
-                float(np.maximum(0.0, D - tt[mask]).sum()
-                      + D * (~mask).sum()))
+            idle = float(np.maximum(0.0, D - tt[mask]).sum()
+                         + D * (~mask).sum())
+            ctx.ledger.add_wait(idle)
+            if ctx.obs is not None:
+                ctx.obs.wait(idle, "deadline", kc)
         return barriers, D
 
     def merge(self, ctx: EngineContext, model, state, new_models: list,
@@ -172,9 +180,13 @@ class SemiSyncPacing:
             else:
                 w_k = old[kc]                          # late: defer update
                 fresh_pending[kc] = new_models[kc]
+                if ctx.obs is not None:
+                    ctx.obs.straggler(kc, "stash")
             if kc in self._pending:     # fold last round's straggler in
                 w_k = _combine(model.stack([w_k, self._pending[kc]]),
                                self.beta)
+                if ctx.obs is not None:
+                    ctx.obs.straggler(kc, "fold")
             merged.append(w_k)
         self._pending = fresh_pending
         return model.stack(merged)
@@ -195,12 +207,17 @@ class SemiSyncPacing:
         fresh_pending = {
             kc: jax.tree.map(lambda l, kc=kc: l[kc], new_stacked)
             for kc in range(K) if not on_time[kc]}
+        if ctx.obs is not None:
+            for kc in fresh_pending:
+                ctx.obs.straggler(kc, "stash")
         for kc, w_late in self._pending.items():
             merged = jax.tree.map(
                 lambda l, wl, kc=kc: l.at[kc].set(
                     ((1.0 - self.beta) * l[kc]
                      + self.beta * wl).astype(l.dtype)),
                 merged, w_late)
+            if ctx.obs is not None:
+                ctx.obs.straggler(kc, "fold")
         self._pending = fresh_pending
         return merged
 
@@ -254,15 +271,27 @@ class AsyncPacing:
         self._barriers.append(barrier)
         return barrier
 
-    def staleness_weights(self, barriers: np.ndarray) -> np.ndarray:
+    @staticmethod
+    def _ranks(barriers: np.ndarray) -> np.ndarray:
         ranks = np.empty(len(barriers), int)
         ranks[np.argsort(barriers, kind="stable")] = np.arange(len(barriers))
-        return self.alpha0 / (1.0 + ranks) ** self.decay
+        return ranks
+
+    def staleness_weights(self, barriers: np.ndarray) -> np.ndarray:
+        return self.alpha0 / (1.0 + self._ranks(barriers)) ** self.decay
+
+    def _observe_merge(self, ctx: EngineContext,
+                       alphas: np.ndarray) -> None:
+        if ctx.obs is None:
+            return
+        for kc, rk in enumerate(self._ranks(np.asarray(self._barriers))):
+            ctx.obs.async_merge(kc, int(rk), float(alphas[kc]))
 
     def merge(self, ctx: EngineContext, model, state, new_models: list,
               sels: list, round_idx: int):
         K = len(new_models)
         alphas = self.staleness_weights(np.asarray(self._barriers))
+        self._observe_merge(ctx, alphas)
         old = model.unstack(state.cluster_models, K)
         merged = [_combine(model.stack([old[kc], new_models[kc]]),
                            float(alphas[kc]))
@@ -273,6 +302,7 @@ class AsyncPacing:
                       sels: list, round_idx: int):
         alphas = self.staleness_weights(np.asarray(self._barriers)
                                         ).astype(np.float32)
+        self._observe_merge(ctx, alphas)
         return jax.tree.map(
             lambda old, new: ((1.0 - _bcast(alphas, old)) * old
                               + _bcast(alphas, new) * new).astype(old.dtype),

@@ -32,7 +32,7 @@ def make_crosatfl(cfg: EngineConfig, env, model, *,
                   policy_params: Optional[dict] = None,
                   mixing=None, pacing=None, codec=None,
                   mixing_backend: Optional[str] = None,
-                  name: str = "CroSatFL") -> RoundEngine:
+                  name: str = "CroSatFL", observer=None) -> RoundEngine:
     """CroSatFL = StarMask clustering x Skip-One x random-k cross-agg.
 
     ``mixing``/``pacing``/``codec`` override single policies for scenario
@@ -40,6 +40,7 @@ def make_crosatfl(cfg: EngineConfig, env, model, *,
     as the base. ``mixing_backend="pallas"`` keeps the default
     CrossAggMixing policy but routes its contraction through the fused
     Pallas cross_agg kernel (ignored when ``mixing`` is given).
+    ``observer`` attaches an ``EngineObserver`` (repro.obs) to the session.
     """
     return RoundEngine(
         cfg, env, model,
@@ -49,13 +50,13 @@ def make_crosatfl(cfg: EngineConfig, env, model, *,
         mixing=mixing if mixing is not None else CrossAggMixing(
             k_nbr=k_nbr, backend=mixing_backend or "einsum"),
         pacing=pacing, codec=codec,
-        name=name)
+        name=name, observer=observer)
 
 
 def make_baseline(name: str, cfg: EngineConfig, env, model, *,
                   select_m: int = 16, minifloat_bits: int = 12,
                   arith_scale: float = 0.5,
-                  n_clusters: int = 9) -> RoundEngine:
+                  n_clusters: int = 9, observer=None) -> RoundEngine:
     """The five comparison baselines (paper §V-A) as policy quadruples.
 
       FedSyn   = single cluster x all x GS star
@@ -88,7 +89,8 @@ def make_baseline(name: str, cfg: EngineConfig, env, model, *,
                                                   arith_scale=arith_scale))
     else:
         raise KeyError(f"unknown baseline {name!r}")
-    return RoundEngine(cfg, env, model, name=name, **policies)
+    return RoundEngine(cfg, env, model, name=name, observer=observer,
+                       **policies)
 
 
 BASELINE_NAMES = ("FedSyn", "FedLEO", "FELLO", "FedSCS", "FedOrbit")
@@ -98,7 +100,7 @@ def make_scenario(name: str, cfg: EngineConfig, env, model, *,
                   k_nbr: int = 2,
                   skip_one: Optional[SkipOneParams] = None,
                   starmask: Optional[StarMaskParams] = None,
-                  **kw) -> RoundEngine:
+                  observer=None, **kw) -> RoundEngine:
     """Scenario-zoo presets (DESIGN.md §8): CroSatFL's policy quadruple
     with ONE surface swapped — each scenario is a policy, not a loop.
 
@@ -115,7 +117,8 @@ def make_scenario(name: str, cfg: EngineConfig, env, model, *,
     ``**kw`` feeds the swapped policy's constructor (e.g. ``quantile``,
     ``alpha0``, ``consensus_eps``, ``cpu_threshold``).
     """
-    base = dict(k_nbr=k_nbr, skip_one=skip_one, starmask=starmask, name=name)
+    base = dict(k_nbr=k_nbr, skip_one=skip_one, starmask=starmask,
+                name=name, observer=observer)
     if name == "CroSatFL-SemiSync":
         return make_crosatfl(cfg, env, model,
                              pacing=SemiSyncPacing(**kw), **base)

@@ -110,21 +110,31 @@ class Transport:
     ``codec`` may be a single PayloadCodec (engine-global, the default) or
     a ``CodecMap``; cluster-scoped policies call ``for_cluster(kc)`` to get
     a view with that cluster's codec over the same ledger.
+
+    ``obs`` (an ``EngineObserver``) sees every message with the EXACT
+    energy/time floats the ledger was charged; ``cluster`` labels which
+    training cluster this view accounts for (``None`` for engine-global /
+    GS-bootstrap traffic). With ``obs`` set, ``for_cluster`` returns
+    cluster-labelled views even for the default codec — with it unset the
+    pre-obs view caching (and thus the accounting path) is untouched.
     """
 
     RELAY_FALLBACK_M = 3e6   # nominal relayed path when instantaneously cut
 
     def __init__(self, ledger: EnergyLedger, link_params: LinkParams,
-                 model_bits: float, codec=None):
+                 model_bits: float, codec=None, obs=None,
+                 cluster: Optional[int] = None):
         self.ledger = ledger
         self.lp = link_params
         self.model_bits = model_bits
+        self.obs = obs
+        self.cluster = cluster
         if codec is None:
             codec = IdentityCodec()
         self.codec_map = (codec if isinstance(codec, CodecMap)
                           else CodecMap(default=codec))
         self.codec = self.codec_map.default
-        self._views: dict = {}       # codec id -> cached for_cluster view
+        self._views: dict = {}       # codec id / (codec id, kc) -> view
 
     def bind_clusters(self, plan, env) -> None:
         """Resolve rule-based codec maps against the built cluster plan."""
@@ -133,14 +143,25 @@ class Transport:
     def for_cluster(self, kc: Optional[int]) -> "Transport":
         """View with cluster ``kc``'s codec (same ledger). Returns ``self``
         when the cluster uses the default codec, so engine-global codecs
-        keep the exact pre-map accounting path."""
+        keep the exact pre-map accounting path. With an observer attached
+        the view additionally carries ``cluster=kc`` so comm events are
+        attributed (same ledger, same floats — labels only)."""
         c = self.codec_map.codec_for(kc)
-        if c is self.codec:
-            return self
-        view = self._views.get(id(c))
+        if self.obs is None:
+            if c is self.codec:
+                return self
+            view = self._views.get(id(c))
+            if view is None:
+                view = Transport(self.ledger, self.lp, self.model_bits, c)
+                self._views[id(c)] = view
+            return view
+        k = (id(c), None if kc is None else int(kc))
+        view = self._views.get(k)
         if view is None:
-            view = Transport(self.ledger, self.lp, self.model_bits, c)
-            self._views[id(c)] = view
+            view = Transport(self.ledger, self.lp, self.model_bits, c,
+                             obs=self.obs,
+                             cluster=None if kc is None else int(kc))
+            self._views[k] = view
         return view
 
     def arith_scale_for(self, kc: Optional[int]) -> float:
@@ -155,20 +176,33 @@ class Transport:
         return self.codec.arith_scale
 
     # -- message accounting --------------------------------------------------
+    # e/t go through locals so observer and ledger see the SAME floats
     def gs(self, n: int, distance_m: float) -> None:
         d, lp = self.payload_bits, self.lp
-        self.ledger.add_gs(n, n * e_gs(d, lp.gs_rate, distance_m, lp),
-                           n * t_gs(d, lp.gs_rate, distance_m, lp))
+        e = n * e_gs(d, lp.gs_rate, distance_m, lp)
+        t = n * t_gs(d, lp.gs_rate, distance_m, lp)
+        self.ledger.add_gs(n, e, t)
+        if self.obs is not None:
+            self.obs.comm("gs", self.cluster, n, d, e, t)
 
     def intra(self, n: int, distance_m: float) -> None:
         d, lp = self.payload_bits, self.lp
-        self.ledger.add_intra(n, n * e_lisl(d, lp.lisl_rate, distance_m, lp),
-                              n * t_lisl(d, lp.lisl_rate, distance_m, lp))
+        e = n * e_lisl(d, lp.lisl_rate, distance_m, lp)
+        t = n * t_lisl(d, lp.lisl_rate, distance_m, lp)
+        self.ledger.add_intra(n, e, t)
+        if self.obs is not None:
+            self.obs.comm("intra", self.cluster, n, d, e, t)
 
     def inter(self, n: int, distance_m: float) -> None:
         d, lp = self.payload_bits, self.lp
-        self.ledger.add_inter(n, n * e_lisl(d, lp.lisl_rate, distance_m, lp),
-                              n * t_lisl(d, lp.lisl_rate, distance_m, lp))
+        e = n * e_lisl(d, lp.lisl_rate, distance_m, lp)
+        t = n * t_lisl(d, lp.lisl_rate, distance_m, lp)
+        self.ledger.add_inter(n, e, t)
+        if self.obs is not None:
+            self.obs.comm("inter", self.cluster, n, d, e, t)
 
-    def wait(self, seconds: float) -> None:
-        self.ledger.add_wait(float(seconds))
+    def wait(self, seconds: float, cause: str = "contact") -> None:
+        s = float(seconds)
+        self.ledger.add_wait(s)
+        if self.obs is not None:
+            self.obs.wait(s, cause, self.cluster)

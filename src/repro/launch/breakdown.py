@@ -6,6 +6,10 @@ compiled dry-run cell come from?
 Groups execution-count-weighted collective bytes by (kind, op_name metadata
 prefix) and memory bytes by computation, so each hillclimb hypothesis can
 be checked against the actual dominant source.
+
+``analyze(text)`` is the pure core (HLO text in, attribution dict out);
+``breakdown(path)`` renders it. tests/test_breakdown.py pins the analysis
+on a small synthetic-HLO golden.
 """
 from __future__ import annotations
 
@@ -13,10 +17,17 @@ import re
 import sys
 from collections import defaultdict
 
-from repro.launch.hlo_cost import (_COLLECTIVES, _call_edges, _comp_cost,
+from repro.launch.hlo_cost import (_COLLECTIVES, _call_edges,
                                    _fusion_out_bytes, _fusion_param_bytes,
                                    _instr_bytes, _shape_bytes, _SKIP_OPS,
                                    parse_hlo)
+from repro.obs import get_logger
+
+log = get_logger("launch.breakdown")
+
+# per-device bandwidth assumptions used for the printed time estimates
+COLL_BW = 50e9     # B/s interconnect
+MEM_BW = 819e9     # B/s HBM
 
 
 def _counts(comps, entry):
@@ -43,48 +54,68 @@ def _opname(line: str) -> str:
     return "/".join(parts[-3:]) if parts else name[:60]
 
 
-def breakdown(path: str, top: int = 15):
-    text = open(path).read()
+def analyze(text: str) -> dict:
+    """Execution-count-weighted byte attribution over HLO text.
+
+    Returns ``{"collective": {(kind, op_name): bytes},
+    "memory": {(op, op_name): bytes}, "collective_total": float,
+    "memory_total": float, "t_coll_s": float, "t_mem_s": float}`` —
+    all per device."""
     comps, entry = parse_hlo(text)
-    counts = _counts(comps, entry)
-    fusion_names = set()
-    for comp in comps.values():
-        for inst in comp.instrs:
-            if inst.op == "fusion":
-                m = re.search(r"calls=(%[\w.\-]+)", inst.line)
-                if m:
-                    fusion_names.add(m.group(1))
-    fp = {n: _fusion_param_bytes(comps[n]) for n in fusion_names if n in comps}
-    fo = {n: _fusion_out_bytes(comps[n]) for n in fusion_names if n in comps}
+    coll: dict = defaultdict(float)
+    mem: dict = defaultdict(float)
+    if entry:
+        counts = _counts(comps, entry)
+        fusion_names = set()
+        for comp in comps.values():
+            for inst in comp.instrs:
+                if inst.op == "fusion":
+                    m = re.search(r"calls=(%[\w.\-]+)", inst.line)
+                    if m:
+                        fusion_names.add(m.group(1))
+        fp = {n: _fusion_param_bytes(comps[n]) for n in fusion_names
+              if n in comps}
+        fo = {n: _fusion_out_bytes(comps[n]) for n in fusion_names
+              if n in comps}
+        for name, comp in comps.items():
+            c = counts[name]
+            if c == 0:
+                continue
+            for inst in comp.instrs:
+                base = (inst.op[:-6] if inst.op.endswith("-start")
+                        else inst.op)
+                if base in _COLLECTIVES:
+                    rb = _shape_bytes(inst.result_type)
+                    mult = 2.0 if base == "all-reduce" else 1.0
+                    coll[(base, _opname(inst.line))] += c * rb * mult
+                if name not in fusion_names and inst.op not in _SKIP_OPS:
+                    b = _instr_bytes(inst, comp, fp, fo)
+                    if b:
+                        mem[(inst.op, _opname(inst.line))] += c * b
+    coll_tot = sum(coll.values())
+    mem_tot = sum(mem.values())
+    return {"collective": dict(coll), "memory": dict(mem),
+            "collective_total": coll_tot, "memory_total": mem_tot,
+            "t_coll_s": coll_tot / COLL_BW, "t_mem_s": mem_tot / MEM_BW}
 
-    coll = defaultdict(float)
-    mem = defaultdict(float)
-    for name, comp in comps.items():
-        c = counts[name]
-        if c == 0:
-            continue
-        for inst in comp.instrs:
-            base = inst.op[:-6] if inst.op.endswith("-start") else inst.op
-            if base in _COLLECTIVES:
-                rb = _shape_bytes(inst.result_type)
-                mult = 2.0 if base == "all-reduce" else 1.0
-                coll[(base, _opname(inst.line))] += c * rb * mult
-            if name not in fusion_names and inst.op not in _SKIP_OPS:
-                b = _instr_bytes(inst, comp, fp, fo)
-                if b:
-                    mem[(inst.op, _opname(inst.line))] += c * b
 
-    print(f"== {path}")
-    print(f"-- collective bytes by (kind, op_name), per device, top {top}:")
-    tot = sum(coll.values())
-    for (k, o), v in sorted(coll.items(), key=lambda kv: -kv[1])[:top]:
-        print(f"  {v:12.3e} ({v/max(tot,1e-9)*100:5.1f}%) {k:20s} {o}")
-    print(f"  total: {tot:.3e} B/device -> t_coll {tot/50e9:.3f}s")
-    print(f"-- memory bytes by (op, op_name), per device, top {top}:")
-    tot = sum(mem.values())
-    for (k, o), v in sorted(mem.items(), key=lambda kv: -kv[1])[:top]:
-        print(f"  {v:12.3e} ({v/max(tot,1e-9)*100:5.1f}%) {k:20s} {o}")
-    print(f"  total: {tot:.3e} B/device -> t_mem {tot/819e9:.3f}s")
+def breakdown(path: str, top: int = 15) -> dict:
+    res = analyze(open(path).read())
+    log.raw(f"== {path}")
+    log.raw(f"-- collective bytes by (kind, op_name), per device, "
+            f"top {top}:")
+    tot = res["collective_total"]
+    for (k, o), v in sorted(res["collective"].items(),
+                            key=lambda kv: -kv[1])[:top]:
+        log.raw(f"  {v:12.3e} ({v/max(tot,1e-9)*100:5.1f}%) {k:20s} {o}")
+    log.raw(f"  total: {tot:.3e} B/device -> t_coll {res['t_coll_s']:.3f}s")
+    log.raw(f"-- memory bytes by (op, op_name), per device, top {top}:")
+    tot = res["memory_total"]
+    for (k, o), v in sorted(res["memory"].items(),
+                            key=lambda kv: -kv[1])[:top]:
+        log.raw(f"  {v:12.3e} ({v/max(tot,1e-9)*100:5.1f}%) {k:20s} {o}")
+    log.raw(f"  total: {tot:.3e} B/device -> t_mem {res['t_mem_s']:.3f}s")
+    return res
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+"""repro.obs: tracing, metrics, and profiler hooks for the round engine.
+
+See DESIGN.md §10. Public surface:
+
+* ``EngineObserver`` / ``TracingObserver`` — engine hook protocol + the
+  full tracer/metrics/mirror-ledger implementation.
+* ``SpanTracer`` / ``validate_event`` / ``load_events`` — versioned
+  JSONL trace events and Chrome trace export.
+* ``Metrics`` — counter/gauge/histogram registry.
+* ``get_logger`` — console sink replacing bare print() in benchmarks.
+* ``annotate`` / ``trace`` / ``CompileWatcher`` — jax profiler hooks.
+"""
+from repro.obs.console import ConsoleLogger, get_logger
+from repro.obs.jaxprof import CompileWatcher, annotate, trace
+from repro.obs.metrics import Metrics
+from repro.obs.observer import EngineObserver, TracingObserver
+from repro.obs.trace import (TRACE_SCHEMA_VERSION, SpanTracer, load_events,
+                             validate_event)
+
+__all__ = [
+    "CompileWatcher", "ConsoleLogger", "EngineObserver", "Metrics",
+    "SpanTracer", "TRACE_SCHEMA_VERSION", "TracingObserver", "annotate",
+    "get_logger", "load_events", "trace", "validate_event",
+]

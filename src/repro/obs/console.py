@@ -1,0 +1,86 @@
+"""Console logger/sink for benchmarks and examples.
+
+The repo's human-facing scripts print run headers, per-round lines and
+result tables. This module gives them one consistent sink instead of
+bare ``print()``: text mode by default, structured JSON-lines mode when
+``REPRO_LOG_JSON=1`` is set — so benchmark output is machine-parseable
+with the same event discipline as the trace JSONL.
+
+Usage::
+
+    from repro.obs import get_logger
+    log = get_logger("benchmarks.run")
+    log.info("round complete", round=3, acc=0.91)   # labelled fields
+    log.raw(table_string)                           # verbatim passthrough
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Optional, TextIO
+
+
+def _json_mode() -> bool:
+    return os.environ.get("REPRO_LOG_JSON", "") == "1"
+
+
+class ConsoleLogger:
+    """Named logger writing text or JSON lines to one stream."""
+
+    def __init__(self, name: str, stream: Optional[TextIO] = None):
+        self.name = name
+        self._stream = stream
+
+    @property
+    def stream(self) -> TextIO:
+        # resolved per write: loggers are module-level singletons, and
+        # sys.stdout may be swapped after import (pytest capture, redirects)
+        return self._stream if self._stream is not None else sys.stdout
+
+    def _write(self, level: str, msg: str, fields: dict) -> None:
+        if _json_mode():
+            rec = {"t": time.time(), "logger": self.name, "level": level,
+                   "msg": msg, **fields}
+            self.stream.write(json.dumps(rec, default=str) + "\n")
+        else:
+            tail = "".join(f"  {k}={_fmt(v)}" for k, v in fields.items())
+            self.stream.write(f"{msg}{tail}\n")
+        self.stream.flush()
+
+    def info(self, msg: str, **fields) -> None:
+        self._write("info", msg, fields)
+
+    def warn(self, msg: str, **fields) -> None:
+        if not _json_mode():
+            msg = f"WARNING: {msg}"
+        self._write("warn", msg, fields)
+
+    def raw(self, text: str = "") -> None:
+        """Verbatim line(s): preformatted tables, blank separators.
+        In JSON mode each line becomes a {"raw": ...} record."""
+        if _json_mode():
+            for line in text.split("\n"):
+                self.stream.write(json.dumps(
+                    {"t": time.time(), "logger": self.name,
+                     "raw": line}) + "\n")
+        else:
+            self.stream.write(text + "\n")
+        self.stream.flush()
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+_loggers: dict[str, ConsoleLogger] = {}
+
+
+def get_logger(name: str) -> ConsoleLogger:
+    """Process-wide logger registry (one instance per name)."""
+    if name not in _loggers:
+        _loggers[name] = ConsoleLogger(name)
+    return _loggers[name]

@@ -1,0 +1,161 @@
+"""Opt-in ``jax.profiler`` capture and compile-event accounting.
+
+Two independent facilities:
+
+* ``annotate(name)`` / ``trace(logdir)`` — named TraceAnnotation scopes
+  around ``fleet_round`` / ``_local_train`` dispatches and an opt-in
+  profiler trace capture. Annotations are ~free when no trace is active,
+  so the engine applies them unconditionally once an observer enables
+  them; ``trace`` writes a TensorBoard-loadable profile under ``logdir``.
+
+* ``CompileWatcher`` — records XLA compile events via
+  ``jax.monitoring``'s duration listeners (jaxpr trace, MLIR lowering,
+  backend compile), with per-function attribution via ``track``: calls
+  are synchronous, so durations arriving during a tracked window belong
+  to that function, and ``_cache_size`` deltas confirm whether the call
+  actually compiled. This is how batched-vs-sequential compile overhead
+  lands in ``BENCH_round_engine.json``.
+
+Everything degrades to a no-op if the running jax lacks the private
+monitoring hooks — the engine must never fail because profiling is
+unavailable.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+# Compile-related jax.monitoring event names (jax 0.4.x). The listener
+# API has no metadata channel, hence the call-window attribution below.
+_COMPILE_EVENTS = (
+    "/jax/core/compile/jaxpr_trace_duration",
+    "/jax/core/compile/jaxpr_to_mlir_module_duration",
+    "/jax/core/compile/backend_compile_duration",
+)
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """Named scope visible in profiler traces (no-op when not tracing)."""
+    try:
+        ctx = jax.profiler.TraceAnnotation(name)
+    except Exception:                               # pragma: no cover
+        yield
+        return
+    with ctx:
+        yield
+
+
+@contextlib.contextmanager
+def trace(logdir: str):
+    """Capture a jax profiler trace into ``logdir`` for the duration."""
+    try:
+        jax.profiler.start_trace(logdir)
+        started = True
+    except Exception:                               # pragma: no cover
+        started = False
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+            except Exception:                       # pragma: no cover
+                pass
+
+
+class CompileWatcher:
+    """Aggregates XLA compile count/time, attributable per tracked label.
+
+    ``events`` maps monitoring-event name -> [durations]; ``by_label``
+    maps a ``track`` label -> {"events": n, "seconds": s, "compiles": c}
+    where ``compiles`` counts tracked calls whose jit cache actually
+    grew (a new specialization was compiled).
+    """
+
+    def __init__(self):
+        self.events: dict[str, list[float]] = {e: [] for e in
+                                               _COMPILE_EVENTS}
+        self.by_label: dict[str, dict] = {}
+        self._current: Optional[str] = None
+        self._installed = False
+
+    # -- listener lifecycle --------------------------------------------------
+    def _listener(self, event: str, duration: float, **kw) -> None:
+        if event not in self.events:
+            return
+        self.events[event].append(duration)
+        if self._current is not None:
+            slot = self.by_label[self._current]
+            slot["events"] += 1
+            slot["seconds"] += duration
+
+    def install(self) -> "CompileWatcher":
+        if not self._installed:
+            try:
+                jax.monitoring.register_event_duration_secs_listener(
+                    self._listener)
+                self._installed = True
+            except Exception:                       # pragma: no cover
+                pass
+        return self
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        self._installed = False
+        try:                                        # no public unregister
+            from jax._src import monitoring as _m
+            _m._unregister_event_duration_listener_by_callback(
+                self._listener)
+        except Exception:                           # pragma: no cover
+            pass
+
+    def __enter__(self):
+        return self.install()
+
+    def __exit__(self, *exc):
+        self.uninstall()
+
+    # -- attribution ---------------------------------------------------------
+    @contextlib.contextmanager
+    def track(self, label: str, fn=None):
+        """Attribute compile events fired inside this scope to ``label``.
+        Pass the jitted ``fn`` to also detect cache growth (a compile
+        this call actually triggered, not a warm hit)."""
+        slot = self.by_label.setdefault(
+            label, {"events": 0, "seconds": 0.0, "compiles": 0,
+                    "calls": 0})
+        slot["calls"] += 1
+        before = _cache_size(fn)
+        prev, self._current = self._current, label
+        try:
+            yield slot
+        finally:
+            self._current = prev
+            if _cache_size(fn) > before:
+                slot["compiles"] += 1
+
+    # -- export --------------------------------------------------------------
+    def summary(self) -> dict:
+        return {
+            "total": {
+                "events": sum(len(v) for v in self.events.values()),
+                "seconds": sum(sum(v) for v in self.events.values()),
+            },
+            "by_event": {e.rsplit("/", 1)[-1]:
+                         {"count": len(v), "seconds": sum(v)}
+                         for e, v in self.events.items()},
+            "by_label": {k: dict(v) for k, v in self.by_label.items()},
+        }
+
+
+def _cache_size(fn) -> int:
+    if fn is None:
+        return 0
+    try:
+        return fn._cache_size()
+    except Exception:                               # pragma: no cover
+        return 0

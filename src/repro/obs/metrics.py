@@ -1,0 +1,115 @@
+"""Counter / gauge / histogram registry for round-engine metrics.
+
+Labels are free-form keyword arguments; each (name, label-set) pair is an
+independent series. Insertion order is preserved, which matters for the
+ledger-reconciliation guarantee: a series accumulated in event order
+replays the exact float-addition sequence the ``EnergyLedger`` performed,
+so totals reconcile bit-for-bit, not approximately (see
+observer.TracingObserver and DESIGN.md §10).
+
+``total(name, **filter)`` sums matching series in insertion order with a
+plain running ``+=`` — again the ledger's own accumulation scheme — so a
+single-source decomposition (e.g. ``train_joules`` per round x cluster)
+sums back to the ledger field exactly.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+
+def _key(name: str, labels: dict) -> tuple:
+    return (name,) + tuple(sorted(labels.items()))
+
+
+class Metrics:
+    """Minimal multi-series registry: counters, gauges, histograms."""
+
+    def __init__(self):
+        self._counters: dict[tuple, float] = {}
+        self._gauges: dict[tuple, float] = {}
+        self._hists: dict[tuple, list[float]] = {}
+
+    # -- instruments ---------------------------------------------------------
+    def count(self, name: str, value: float = 1.0, **labels) -> None:
+        k = _key(name, labels)
+        self._counters[k] = self._counters.get(k, 0.0) + value
+
+    def gauge(self, name: str, value: float, **labels) -> None:
+        self._gauges[_key(name, labels)] = value
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        self._hists.setdefault(_key(name, labels), []).append(float(value))
+
+    # -- reads ---------------------------------------------------------------
+    def get(self, name: str, default: float = 0.0, **labels) -> float:
+        return self._counters.get(_key(name, labels), default)
+
+    def series(self, name: str, **label_filter):
+        """[(labels_dict, value)] for every counter series of ``name``
+        whose labels are a superset of ``label_filter``, insertion order."""
+        out = []
+        for k, v in self._counters.items():
+            if k[0] != name:
+                continue
+            labels = dict(k[1:])
+            if all(labels.get(f) == fv for f, fv in label_filter.items()):
+                out.append((labels, v))
+        return out
+
+    def total(self, name: str, **label_filter) -> float:
+        """In-order running sum over matching series (see module doc)."""
+        tot = 0.0
+        for _, v in self.series(name, **label_filter):
+            tot += v
+        return tot
+
+    def values(self, name: str, **label_filter) -> list[float]:
+        """Concatenated histogram observations across matching series."""
+        out: list[float] = []
+        for k, vs in self._hists.items():
+            if k[0] != name:
+                continue
+            labels = dict(k[1:])
+            if all(labels.get(f) == fv for f, fv in label_filter.items()):
+                out.extend(vs)
+        return out
+
+    def histogram(self, name: str, bins: int = 10,
+                  **label_filter) -> list[tuple[float, float, int]]:
+        """Equal-width (lo, hi, count) bins over matching observations."""
+        vs = self.values(name, **label_filter)
+        if not vs:
+            return []
+        lo, hi = min(vs), max(vs)
+        width = (hi - lo) / bins or 1.0
+        counts = [0] * bins
+        for v in vs:
+            counts[min(int((v - lo) / width), bins - 1)] += 1
+        return [(lo + i * width, lo + (i + 1) * width, c)
+                for i, c in enumerate(counts)]
+
+    # -- export --------------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"counters": self._group(self._counters),
+                "gauges": self._group(self._gauges),
+                "histograms": {name: [{"labels": dict(k[1:]), "values": v}
+                                      for k, v in self._hists.items()
+                                      if k[0] == name]
+                               for name in {k[0] for k in self._hists}}}
+
+    @staticmethod
+    def _group(d: dict) -> dict:
+        out: dict[str, list] = {}
+        for k, v in d.items():
+            out.setdefault(k[0], []).append({"labels": dict(k[1:]),
+                                             "value": v})
+        return out
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        s = json.dumps(self.to_dict(), indent=1, sort_keys=True,
+                       default=float)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(s + "\n")
+        return s

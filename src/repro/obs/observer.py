@@ -1,0 +1,197 @@
+"""EngineObserver: the round engine's observability hook surface.
+
+The engine (and its pacing / transport / mixing policies) call these
+hooks with the EXACT floats they hand the ``EnergyLedger``, at the exact
+call sites that mutate it — observer events are the only new code on the
+hot path, and every hook site is guarded with ``if obs is not None`` so
+a disabled observer costs one pointer comparison (golden-ledger
+bit-parity is preserved by construction; pinned in tests/test_obs.py).
+
+``EngineObserver`` is the no-op base — subclass and override what you
+need. ``TracingObserver`` is the full implementation: it feeds a
+``SpanTracer`` (JSONL + Chrome trace), a ``Metrics`` registry decomposing
+the ledger per round x cluster x phase and per link class, and a
+**mirror ledger** that replays every hook value through the same
+``EnergyLedger`` ``add_*`` methods in arrival order — so at session end
+``mirror`` equals the engine's ledger bit-for-bit, proving the trace
+captured every joule/second exactly once (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.energy import EnergyLedger
+from repro.obs.metrics import Metrics
+from repro.obs.trace import SpanTracer
+
+
+class EngineObserver:
+    """No-op base: every hook the engine stack calls, in call order.
+
+    Hook arguments are host-side scalars only — observers must never
+    touch device arrays, the engine's RNG streams, or the real ledger
+    (read-only observation; the engine does not read anything back).
+    """
+
+    def session_start(self, algo: str, plan, cfg, sim_t: float) -> None:
+        """After the cluster plan is built, before bootstrap comm."""
+
+    def round_start(self, r: int, sim_t: float) -> None:
+        pass
+
+    def select(self, r: int, kc: int, sel) -> None:
+        """After SelectionPolicy.select for cluster ``kc``."""
+
+    def train(self, kc: int, energy_j: float, barrier_s: float) -> None:
+        """Train energy + cluster barrier, as charged to the ledger."""
+
+    def wait(self, seconds: float, cause: str,
+             kc: Optional[int] = None) -> None:
+        """Latency-only idle time, as charged to the ledger."""
+
+    def comm(self, link: str, kc: Optional[int], n: int, bits: float,
+             energy_j: float, time_s: float) -> None:
+        """One Transport message batch (link in {gs, intra, inter})."""
+
+    def straggler(self, kc: int, action: str) -> None:
+        """Semi-sync deadline events: action in {stash, fold}."""
+
+    def async_merge(self, kc: int, rank: int, alpha: float) -> None:
+        """Async pacing: cluster kc merged at arrival ``rank`` with
+        staleness weight ``alpha``."""
+
+    def note(self, name: str, **fields) -> None:
+        """Free-form instant (master migration, gossip consensus, ...)."""
+
+    def phase_start(self, name: str, sim_t: Optional[float] = None) -> None:
+        pass
+
+    def phase_end(self, name: str, sim_t0: Optional[float] = None,
+                  sim_dur: Optional[float] = None) -> None:
+        pass
+
+    def round_end(self, r: int, sim_t: float, sim_dur: float) -> None:
+        pass
+
+    def session_end(self, sim_t: float, ledger: EnergyLedger) -> None:
+        pass
+
+
+class TracingObserver(EngineObserver):
+    """Spans + metrics + bit-exact ledger mirror (see module docstring).
+
+    ``jsonl_path``: stream events to this file as they happen (optional;
+    the in-memory trace is always kept). Out-of-round hooks (bootstrap /
+    finalize comm) are attributed to the session phase they occur in;
+    in-round hooks get the current round index automatically.
+    """
+
+    def __init__(self, jsonl_path: Optional[str] = None):
+        self.tracer = SpanTracer(jsonl_path)
+        self.metrics = Metrics()
+        self.mirror = EnergyLedger()
+        self._round: Optional[int] = None
+        self._phase = "bootstrap"
+        self._t_round = 0.0
+        self._t_round_host = 0.0
+        self.algo = "?"
+
+    # -- session -------------------------------------------------------------
+    def session_start(self, algo, plan, cfg, sim_t):
+        self.algo = algo
+        self.mirror.wall_clock_s = sim_t      # resumed sessions start hot
+        self.tracer.emit("session_start", algo=algo,
+                         n_clusters=plan.n_clusters, sim_t=sim_t,
+                         rounds=getattr(cfg, "rounds", None))
+
+    def round_start(self, r, sim_t):
+        self._round, self._phase = r, "round"
+        self._t_round = sim_t
+        self._t_round_host = self.tracer.now()
+        self.tracer.emit("round_start", round=r, sim_t=sim_t)
+
+    def select(self, r, kc, sel):
+        engaged = int(len(sel.ids))
+        trained = int(sel.mask.sum())
+        self.metrics.count("skipped", engaged - trained, round=r, cluster=kc)
+        self.tracer.emit("select", round=r, cluster=kc, engaged=engaged,
+                         trained=trained, skipped=engaged - trained)
+
+    def train(self, kc, energy_j, barrier_s):
+        self.mirror.add_train(energy_j, barrier_s)
+        r = self._round
+        self.metrics.count("train_joules", energy_j, round=r, cluster=kc)
+        self.metrics.count("barrier_s", barrier_s, round=r, cluster=kc)
+        self.tracer.emit("train", round=r, cluster=kc,
+                         energy_j=float(energy_j),
+                         barrier_s=float(barrier_s), sim_t0=self._t_round)
+
+    def wait(self, seconds, cause, kc=None):
+        self.mirror.add_wait(seconds)
+        self.metrics.count("wait_s", seconds, round=self._round, cluster=kc,
+                           cause=cause, phase=self._phase)
+        self.tracer.emit("wait", seconds=float(seconds), cause=cause,
+                         round=self._round, cluster=kc)
+
+    def comm(self, link, kc, n, bits, energy_j, time_s):
+        getattr(self.mirror, f"add_{link}")(n, energy_j, time_s)
+        lab = dict(link=link, round=self._round, cluster=kc,
+                   phase=self._phase)
+        self.metrics.count("msgs", n, **lab)
+        self.metrics.count("comm_bits", n * bits, **lab)
+        self.metrics.count("comm_joules", energy_j, **lab)
+        self.metrics.count("comm_seconds", time_s, **lab)
+        # link-class reconciliation series, accumulated in strict arrival
+        # order across links sharing a ledger field (intra+inter -> lisl)
+        fld = "gs" if link == "gs" else "lisl"
+        self.metrics.count(f"{fld}_joules_inorder", energy_j)
+        self.tracer.emit("comm", link=link, cluster=kc, n=int(n),
+                         bits=float(n * bits), energy_j=float(energy_j),
+                         time_s=float(time_s), phase=self._phase,
+                         round=self._round, sim_t0=self._t_round)
+
+    def straggler(self, kc, action):
+        self.metrics.count(f"straggler_{action}", 1, round=self._round,
+                           cluster=kc)
+        self.tracer.emit("straggler", round=self._round, cluster=kc,
+                         action=action)
+
+    def async_merge(self, kc, rank, alpha):
+        self.metrics.observe("async_rank", rank, cluster=kc)
+        self.tracer.emit("async_merge", round=self._round, cluster=kc,
+                         rank=int(rank), alpha=float(alpha))
+
+    def note(self, name, **fields):
+        self.tracer.emit("note", name=name, **fields)
+
+    def phase_start(self, name, sim_t=None):
+        self.tracer.begin_span(name)
+
+    def phase_end(self, name, sim_t0=None, sim_dur=None):
+        self.tracer.end_span(name, round=self._round,
+                             sim_t0=self._t_round if sim_t0 is None
+                             else sim_t0, sim_dur=sim_dur)
+
+    def round_end(self, r, sim_t, sim_dur):
+        self.metrics.observe("round_latency_s", sim_dur)
+        self.tracer.emit("round_end", round=r, sim_t=sim_t,
+                         sim_dur=sim_dur,
+                         host_dur=self.tracer.now() - self._t_round_host)
+        self._round, self._phase = None, "finalize"
+
+    def session_end(self, sim_t, ledger):
+        self.mirror.wall_clock_s = sim_t
+        self.tracer.emit("session_end", sim_t=sim_t,
+                         ledger={k: v for k, v in ledger.row().items()})
+        self.tracer.close()
+
+    # -- reconciliation ------------------------------------------------------
+    def reconcile(self, ledger: EnergyLedger) -> dict:
+        """Field-by-field comparison of the mirror against the engine's
+        ledger. ``exact`` is True only when EVERY field is bit-equal —
+        the acceptance check of DESIGN.md §10."""
+        a, b = self.mirror.snapshot(), ledger.snapshot()
+        fields = {k: {"mirror": a[k], "ledger": b[k], "equal": a[k] == b[k]}
+                  for k in a}
+        return {"exact": all(v["equal"] for v in fields.values()),
+                "fields": fields}

@@ -1,0 +1,132 @@
+"""Render a run's trace JSONL into the paper-style breakdown tables.
+
+``summarize(events)`` recomputes — from the trace alone, no ledger —
+the columns the paper reports: per-phase energy (train / intra / inter /
+GS), GS contact count, wait time, and the round-latency histogram.
+Because the observer emitted every ledger charge as an event in order,
+the in-order sums here reconcile with ``EnergyLedger.row()`` exactly
+(tests/test_obs.py pins this).
+
+CLI::
+
+    python -m repro.obs.report run_trace.jsonl [more.jsonl ...]
+
+prints one breakdown row per trace (per-method comparison when each
+method wrote its own trace file).
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.obs.trace import load_events
+
+
+def summarize(events: list[dict]) -> dict:
+    """Paper-style totals from trace events alone (see module doc)."""
+    s = {"algo": "?", "rounds": 0,
+         "train_j": 0.0, "intra_j": 0.0, "inter_j": 0.0, "gs_j": 0.0,
+         "lisl_j": 0.0,    # in event order across intra+inter, so this
+                           # one field reconciles bit-exact with the
+                           # ledger's interleaved lisl_energy_j
+         "gs_comm": 0, "intra_comm": 0, "inter_comm": 0,
+         "gs_bits": 0.0, "lisl_bits": 0.0,
+         "wait_s": 0.0, "sim_time_s": 0.0,
+         "round_latencies": [], "wait_by_cause": {}}
+    for ev in events:
+        kind = ev["kind"]
+        if kind == "session_start":
+            s["algo"] = ev["algo"]
+        elif kind == "train":
+            s["train_j"] += ev["energy_j"]
+        elif kind == "comm":
+            link = ev["link"]
+            s[f"{link}_j"] += ev["energy_j"]
+            s[f"{link}_comm"] += ev["n"]
+            if link == "gs":
+                s["gs_bits"] += ev["bits"]
+            else:
+                s["lisl_bits"] += ev["bits"]
+                s["lisl_j"] += ev["energy_j"]
+        elif kind == "wait":
+            s["wait_s"] += ev["seconds"]
+            c = ev.get("cause", "?")
+            s["wait_by_cause"][c] = (s["wait_by_cause"].get(c, 0.0)
+                                     + ev["seconds"])
+        elif kind == "round_end":
+            s["rounds"] += 1
+            s["round_latencies"].append(ev["sim_dur"])
+        elif kind == "session_end":
+            s["sim_time_s"] = ev["sim_t"]
+    s["total_j"] = (s["train_j"] + s["intra_j"] + s["inter_j"]
+                    + s["gs_j"])
+    return s
+
+
+def latency_histogram(lats: list[float], bins: int = 8) -> list[str]:
+    """ASCII histogram lines for the round-latency distribution."""
+    if not lats:
+        return ["  (no rounds)"]
+    lo, hi = min(lats), max(lats)
+    width = (hi - lo) / bins or 1.0
+    counts = [0] * bins
+    for v in lats:
+        counts[min(int((v - lo) / width), bins - 1)] += 1
+    peak = max(counts)
+    return [f"  [{lo + i * width:9.2f}, {lo + (i + 1) * width:9.2f}) s "
+            f"{'#' * round(20 * c / peak):<20} {c}"
+            for i, c in enumerate(counts)]
+
+
+_COLS = [("method", "algo", "s"), ("rounds", "rounds", "d"),
+         ("train J", "train_j", ".3g"), ("intra J", "intra_j", ".3g"),
+         ("inter J", "inter_j", ".3g"), ("GS J", "gs_j", ".3g"),
+         ("total J", "total_j", ".3g"), ("GS msgs", "gs_comm", "d"),
+         ("LISL msgs", None, "d"), ("wait s", "wait_s", ".3g"),
+         ("sim s", "sim_time_s", ".4g")]
+
+
+def breakdown_table(summaries: list[dict]) -> str:
+    """Per-method phase-energy / contact-count comparison table."""
+    rows = []
+    for s in summaries:
+        row = []
+        for title, key, fmt in _COLS:
+            v = (s["intra_comm"] + s["inter_comm"]) if key is None \
+                else s[key]
+            row.append(format(v, fmt))
+        rows.append(row)
+    heads = [c[0] for c in _COLS]
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(heads)]
+    line = "  ".join(h.rjust(w) for h, w in zip(heads, widths))
+    sep = "-" * len(line)
+    body = ["  ".join(c.rjust(w) for c, w in zip(r, widths))
+            for r in rows]
+    return "\n".join([line, sep] + body)
+
+
+def render(paths: list[str]) -> str:
+    summaries = [summarize(load_events(p)) for p in paths]
+    out = [breakdown_table(summaries)]
+    for p, s in zip(paths, summaries):
+        out.append("")
+        out.append(f"{s['algo']} round-latency histogram ({p}):")
+        out.extend(latency_histogram(s["round_latencies"]))
+        if s["wait_by_cause"]:
+            causes = ", ".join(f"{c}={v:.3g}s" for c, v in
+                               sorted(s["wait_by_cause"].items()))
+            out.append(f"  wait by cause: {causes}")
+    return "\n".join(out)
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python -m repro.obs.report TRACE.jsonl [...]",
+              file=sys.stderr)
+        return 2
+    print(render(argv))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

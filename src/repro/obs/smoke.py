@@ -1,0 +1,109 @@
+"""CI obs-smoke: a 3-round traced CroSatFL session, end to end.
+
+Runs with a ``TracingObserver`` attached, then checks the whole
+observability contract in one shot:
+
+1. every emitted event validates against the versioned JSONL schema;
+2. the observer's mirror ledger reconciles BIT-EXACT with the session's
+   ``EnergyLedger`` (every joule/second traced exactly once);
+3. the report's trace-only totals reproduce the ledger's GS contact
+   count and phase-energy columns;
+4. artifacts land in ``--out`` (default results/obs_smoke/): the event
+   JSONL, the Perfetto-loadable ``trace.json``, the metrics JSON, and
+   the rendered report table.
+
+Exit code 0 iff all checks pass — CI uploads the artifacts either way.
+
+    PYTHONPATH=src python -m repro.obs.smoke [--rounds 3] [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+from repro.obs import TracingObserver, get_logger, validate_event
+from repro.obs.report import render, summarize
+
+log = get_logger("obs.smoke")
+
+
+def build_session(observer, rounds: int, n_clients: int = 8):
+    from repro.constellation import ConstellationEnv
+    from repro.core.session import Session, SessionConfig
+    from repro.core.starmask import StarMaskParams
+    from repro.data.synth import dirichlet_partition, make_dataset
+
+    ds = make_dataset("eurosat-sim", n=600, seed=0)
+    test = make_dataset("eurosat-sim", n=200, seed=99)
+    parts = dirichlet_partition(ds.y, n_clients, alpha=100.0, seed=0)
+    env = ConstellationEnv(
+        n_clients=n_clients,
+        n_samples=np.array([len(p) for p in parts], float), seed=0)
+    from repro.fl.client import ImageFLModel
+    model = ImageFLModel(ds, parts, test)
+    cfg = SessionConfig(edge_rounds=rounds, local_epochs=1, k_nbr=2,
+                        model_bits=model.model_bits(),
+                        starmask=StarMaskParams(k_max=4, m_min=2))
+    return Session(cfg, env, model, observer=observer)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--out", default=os.path.join("results", "obs_smoke"))
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    jsonl = os.path.join(args.out, "trace.jsonl")
+    obs = TracingObserver(jsonl)
+    session = build_session(obs, args.rounds)
+    _, ledger, _ = session.run()
+
+    failures = []
+
+    errs = [f"event {i}: {e}" for i, ev in enumerate(obs.tracer.events)
+            for e in validate_event(ev)]
+    if errs:
+        failures.append(f"{len(errs)} schema violations: {errs[:5]}")
+    log.info("schema validation", events=len(obs.tracer.events),
+             errors=len(errs))
+
+    rec = obs.reconcile(ledger)
+    if not rec["exact"]:
+        bad = {k: v for k, v in rec["fields"].items() if not v["equal"]}
+        failures.append(f"mirror ledger not bit-exact: {bad}")
+    log.info("ledger reconciliation", exact=rec["exact"])
+
+    s = summarize(obs.tracer.events)
+    checks = [("gs_comm", s["gs_comm"], ledger.gs_count),
+              ("train_j", s["train_j"], ledger.train_energy_j),
+              ("gs_j", s["gs_j"], ledger.gs_energy_j),
+              ("lisl_j", s["lisl_j"], ledger.lisl_energy_j),
+              ("wait_s", s["wait_s"], ledger.waiting_time_s)]
+    for name, got, want in checks:
+        if got != want:
+            failures.append(f"report.{name}: trace {got!r} != "
+                            f"ledger {want!r}")
+    log.info("report-vs-ledger columns",
+             ok=sum(g == w for _, g, w in checks), of=len(checks))
+
+    obs.tracer.to_chrome_trace(os.path.join(args.out, "trace.json"))
+    obs.metrics.to_json(os.path.join(args.out, "metrics.json"))
+    table = render([jsonl])
+    with open(os.path.join(args.out, "report.txt"), "w") as f:
+        f.write(table + "\n")
+    log.raw(table)
+
+    if failures:
+        for f in failures:
+            log.warn(f)
+        return 1
+    log.info("obs-smoke PASS", artifacts=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""Hierarchical span tracer with a dual timeline (DESIGN.md §10).
+
+Every event carries BOTH clocks of a federated-constellation run:
+
+* **host** — wall seconds since the tracer started (``time.perf_counter``);
+  where the Python/XLA time of this process actually went.
+* **sim**  — the simulated-constellation clock the ``EnergyLedger`` /
+  ``WindowTable`` accounting advances (seconds since session t0); where
+  the *satellites'* time went.
+
+Events are appended to an in-memory list and (optionally) streamed to a
+JSONL file, one event per line, so a crashed run still leaves a readable
+trace. The JSONL schema is versioned (``TRACE_SCHEMA_VERSION``); CI's
+``obs-smoke`` job validates every emitted event with ``validate_event``.
+
+``to_chrome_trace`` renders the collected events into a Chrome
+trace-event file (load in Perfetto / chrome://tracing): the **sim**
+timeline is pid 1 with one track per training cluster plus a GS track,
+the **host** timeline is pid 2 with the engine's phase spans. Sim seconds
+map to trace microseconds (1 sim second -> 1 display second).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import IO, Optional
+
+TRACE_SCHEMA_VERSION = 1
+
+# kind -> {field: type-or-tuple-of-types}. ``None`` values are allowed for
+# any field listed in _NULLABLE; extra fields are allowed everywhere (the
+# schema is open — readers must ignore unknown fields).
+_NUM = (int, float)
+SCHEMA: dict[str, dict[str, tuple]] = {
+    "session_start": {"algo": (str,), "n_clusters": (int,), "sim_t": _NUM},
+    "round_start": {"round": (int,), "sim_t": _NUM},
+    "select": {"round": (int,), "cluster": (int,), "engaged": (int,),
+               "trained": (int,), "skipped": (int,)},
+    "train": {"round": (int,), "cluster": (int,), "energy_j": _NUM,
+              "barrier_s": _NUM, "sim_t0": _NUM},
+    "comm": {"link": (str,), "n": (int,), "bits": _NUM, "energy_j": _NUM,
+             "time_s": _NUM, "phase": (str,), "round": (int,),
+             "cluster": (int,)},
+    "wait": {"seconds": _NUM, "cause": (str,), "round": (int,),
+             "cluster": (int,)},
+    "phase": {"name": (str,), "round": (int,), "host_dur": _NUM,
+              "sim_t0": _NUM, "sim_dur": _NUM},
+    "straggler": {"round": (int,), "cluster": (int,), "action": (str,)},
+    "async_merge": {"round": (int,), "cluster": (int,), "rank": (int,),
+                    "alpha": _NUM},
+    "note": {"name": (str,)},
+    "round_end": {"round": (int,), "sim_t": _NUM, "sim_dur": _NUM,
+                  "host_dur": _NUM},
+    "session_end": {"sim_t": _NUM, "ledger": (dict,)},
+}
+_NULLABLE = {"round", "cluster", "sim_t0", "sim_dur"}
+_COMM_LINKS = ("gs", "intra", "inter")
+
+
+def validate_event(ev: dict) -> list[str]:
+    """Schema errors for one event dict (empty list == valid)."""
+    errs = []
+    if not isinstance(ev, dict):
+        return [f"event is {type(ev).__name__}, not dict"]
+    if ev.get("v") != TRACE_SCHEMA_VERSION:
+        errs.append(f"bad schema version {ev.get('v')!r}")
+    kind = ev.get("kind")
+    if kind not in SCHEMA:
+        return errs + [f"unknown kind {kind!r}"]
+    if not isinstance(ev.get("t_host"), _NUM):
+        errs.append("missing/non-numeric t_host")
+    for f, types in SCHEMA[kind].items():
+        v = ev.get(f, None)
+        if v is None:
+            if f in _NULLABLE:
+                continue
+            errs.append(f"{kind}: missing field {f!r}")
+        elif not isinstance(v, types) or isinstance(v, bool):
+            errs.append(f"{kind}.{f}: {type(v).__name__} not in "
+                        f"{[t.__name__ for t in types]}")
+    if kind == "comm" and ev.get("link") not in _COMM_LINKS:
+        errs.append(f"comm.link {ev.get('link')!r} not in {_COMM_LINKS}")
+    return errs
+
+
+class SpanTracer:
+    """Collects schema'd events; streams JSONL; renders Chrome traces.
+
+    ``emit`` stamps ``v`` and ``t_host`` (host seconds since tracer
+    start) on every event. Imperative span pairs (``begin_span`` /
+    ``end_span``) measure host duration across calls, for callers that
+    cannot hold a context manager open (the engine's phase hooks).
+    """
+
+    def __init__(self, jsonl_path: Optional[str] = None):
+        self.events: list[dict] = []
+        self._t0 = time.perf_counter()
+        self._fh: Optional[IO] = None
+        self.jsonl_path = jsonl_path
+        if jsonl_path is not None:
+            self._fh = open(jsonl_path, "w")
+        self._open: dict[tuple, float] = {}   # (name, key) -> host_t0
+
+    # -- events --------------------------------------------------------------
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def emit(self, kind: str, **fields) -> dict:
+        ev = {"v": TRACE_SCHEMA_VERSION, "kind": kind,
+              "t_host": self.now(), **fields}
+        self.events.append(ev)
+        if self._fh is not None:
+            self._fh.write(json.dumps(ev, default=float) + "\n")
+        return ev
+
+    def begin_span(self, name: str, key=None) -> None:
+        self._open[(name, key)] = self.now()
+
+    def end_span(self, name: str, key=None, **fields) -> dict:
+        t0 = self._open.pop((name, key), self.now())
+        return self.emit("phase", name=name, host_dur=self.now() - t0,
+                         **fields)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- Chrome trace-event export -------------------------------------------
+    @staticmethod
+    def _track(ev: dict) -> str:
+        kc = ev.get("cluster")
+        if ev.get("link") == "gs" or (ev.get("kind") == "wait"
+                                      and kc is None):
+            return "GS"
+        return "GS" if kc is None else f"cluster{kc}"
+
+    def chrome_events(self) -> list[dict]:
+        """Trace-event list: pid 1 = sim timeline (per-cluster + GS
+        tracks), pid 2 = host timeline (engine phases/rounds)."""
+        out = []
+        tids: dict[tuple, int] = {}
+
+        def tid(pid, track):
+            k = (pid, track)
+            if k not in tids:
+                tids[k] = len([t for t in tids if t[0] == pid]) + 1
+                out.append({"ph": "M", "pid": pid, "tid": tids[k],
+                            "name": "thread_name",
+                            "args": {"name": track}})
+            return tids[k]
+
+        for pid, name in ((1, "sim timeline"), (2, "host timeline")):
+            out.append({"ph": "M", "pid": pid, "tid": 0,
+                        "name": "process_name", "args": {"name": name}})
+        for ev in self.events:
+            kind = ev["kind"]
+            if kind == "train":
+                out.append({
+                    "ph": "X", "pid": 1,
+                    "tid": tid(1, f"cluster{ev['cluster']}"),
+                    "name": "train", "ts": ev["sim_t0"] * 1e6,
+                    "dur": max(ev["barrier_s"], 1e-9) * 1e6,
+                    "args": {"round": ev["round"],
+                             "energy_j": ev["energy_j"]}})
+            elif kind == "comm":
+                out.append({
+                    "ph": "i", "pid": 1, "tid": tid(1, self._track(ev)),
+                    "name": f"{ev['link']} x{ev['n']}", "s": "t",
+                    "ts": (ev.get("sim_t0") or 0.0) * 1e6,
+                    "args": {k: ev[k] for k in
+                             ("energy_j", "time_s", "bits", "phase")}})
+            elif kind == "round_end":
+                out.append({
+                    "ph": "X", "pid": 1, "tid": tid(1, "rounds"),
+                    "name": f"round {ev['round']}",
+                    "ts": (ev["sim_t"] - ev["sim_dur"]) * 1e6,
+                    "dur": max(ev["sim_dur"], 1e-9) * 1e6, "args": {}})
+            elif kind == "phase":
+                out.append({
+                    "ph": "X", "pid": 2, "tid": tid(2, "engine"),
+                    "name": ev["name"], "ts": (ev["t_host"]
+                                               - ev["host_dur"]) * 1e6,
+                    "dur": max(ev["host_dur"], 1e-9) * 1e6,
+                    "args": {"round": ev.get("round"),
+                             "sim_dur": ev.get("sim_dur")}})
+        return out
+
+    def to_chrome_trace(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.chrome_events(),
+                       "displayTimeUnit": "ms"}, f, default=float)
+        return path
+
+
+def load_events(path: str) -> list[dict]:
+    """Read a trace JSONL file back into event dicts."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

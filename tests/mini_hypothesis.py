@@ -1,0 +1,105 @@
+"""Deterministic stand-in for the ``hypothesis`` API surface that
+tests/test_property.py uses, for containers where hypothesis is not
+installed (this repo forbids ad-hoc pip installs).
+
+Covers exactly: ``given(**strategies)``, ``settings(max_examples=...,
+deadline=...)`` stacked above ``given``, and ``strategies.integers(a, b)``
+/ ``strategies.floats(a, b)``. Draws are deterministic per test (seeded
+by the test's qualified name) and boundary-first: example 0 pins every
+parameter to its minimum, example 1 to its maximum, example 2 mixes
+min/max alternately, and the rest are uniform draws — so the classic
+edge cases (empty reach graphs, k=2, alpha at both ends) are always
+exercised regardless of ``max_examples``.
+
+Real hypothesis wins when present: test_property.py imports this module
+only as a fallback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Integers:
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng, i, slot):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        if i == 2:
+            return self.lo if slot % 2 else self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats:
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng, i, slot):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        if i == 2:
+            return self.lo if slot % 2 else self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Floats(min_value, max_value)
+
+
+st = strategies
+
+
+def settings(**kw):
+    """Stores the config on the (already-``given``-wrapped) function; the
+    ``given`` wrapper reads it at call time, matching hypothesis's
+    ``@settings`` -> ``@given`` stacking order."""
+    def deco(fn):
+        fn._mh_settings = dict(kw)
+        return fn
+    return deco
+
+
+def given(**strategy_kw):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        # pytest must only see the non-drawn params (fixtures)
+        fixture_params = [p for name, p in sig.parameters.items()
+                         if name not in strategy_kw]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_mh_settings", {})
+            n = int(conf.get("max_examples", DEFAULT_MAX_EXAMPLES))
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            names = sorted(strategy_kw)
+            for i in range(n):
+                rng = np.random.default_rng((seed0 + i) % 2**32)
+                drawn = {name: strategy_kw[name].example(rng, i, slot)
+                         for slot, name in enumerate(names)}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): "
+                        f"{fn.__name__}({drawn})") from e
+
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        return wrapper
+    return deco

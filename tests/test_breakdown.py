@@ -1,0 +1,89 @@
+"""repro.launch.breakdown on a small synthetic-HLO golden.
+
+The module is a 4-trip ``while`` loop (the shape every lax.scan lowers
+to) whose body does one all-reduce, so the expected attribution is
+hand-computable:
+
+  * collective: all-reduce of f32[128] = 512 B result, ring multiplier
+    2x, executed 4 times -> 4096 B under op_name tail
+    ``body/grad/all_reduce``.
+  * memory: body ``add`` (4 B result + 4 B non-constant operand) x 4
+    trips = 32 B, entry ``add`` (512 result + 512 + 512 operands)
+    = 1536 B, plus the all-reduce's own 1024 B x 4 trips.
+"""
+import os
+
+from repro.launch.breakdown import analyze, breakdown, _opname
+
+GOLDEN_HLO = """\
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[128]) %p), index=0
+  %x = f32[128] get-tuple-element((s32[], f32[128]) %p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(s32[] %i, s32[] %one)
+  %ar = f32[128] all-reduce(f32[128] %x), replica_groups={}, op_name="jit(step)/while/body/grad/all_reduce"
+  ROOT %t = (s32[], f32[128]) tuple(s32[] %ni, f32[128] %ar)
+}
+
+%cond (p.1: (s32[], f32[128])) -> pred[] {
+  %p.1 = (s32[], f32[128]) parameter(0)
+  %i.1 = s32[] get-tuple-element((s32[], f32[128]) %p.1), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(s32[] %i.1, s32[] %n), direction=LT
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128]) tuple(s32[] %zero, f32[128] %a)
+  %w = (s32[], f32[128]) while((s32[], f32[128]) %init), condition=%cond, body=%body
+  %res = f32[128] get-tuple-element((s32[], f32[128]) %w), index=1
+  ROOT %out = f32[128] add(f32[128] %res, f32[128] %a)
+}
+"""
+
+
+def test_collective_attribution_golden():
+    res = analyze(GOLDEN_HLO)
+    # one all-reduce of 512 B, 2x ring multiplier, 4 loop trips
+    assert res["collective"] == {
+        ("all-reduce", "body/grad/all_reduce"): 4096.0}
+    assert res["collective_total"] == 4096.0
+    assert res["t_coll_s"] == 4096.0 / 50e9
+
+
+def test_memory_attribution_golden():
+    res = analyze(GOLDEN_HLO)
+    mem = res["memory"]
+    # body add: (4 B result + 4 B gte operand; constant excluded) x 4
+    # entry add: 512 B result + 512 + 512 B operands, once
+    assert mem[("add", "(none)")] == 4 * 8 + 1536
+    # the all-reduce's HBM traffic: (512 result + 512 operand) x 4
+    assert mem[("all-reduce", "body/grad/all_reduce")] == 4096.0
+    assert res["memory_total"] == sum(mem.values())
+    # tuple/get-tuple-element/parameter/constant/while contribute nothing
+    assert all(op in ("add", "all-reduce") for op, _ in mem)
+
+
+def test_no_entry_is_empty():
+    res = analyze("")
+    assert res["collective_total"] == 0.0
+    assert res["memory_total"] == 0.0
+    assert res["collective"] == {} and res["memory"] == {}
+
+
+def test_opname_tail():
+    assert _opname('x op_name="jit(step)/while/body/grad/all_reduce" y') \
+        == "body/grad/all_reduce"
+    assert _opname("no metadata here") == "(none)"
+
+
+def test_breakdown_renders_from_file(tmp_path, capsys):
+    p = os.path.join(tmp_path, "cell.hlo")
+    with open(p, "w") as f:
+        f.write(GOLDEN_HLO)
+    res = breakdown(p, top=5)
+    assert res == analyze(GOLDEN_HLO)
+    out = capsys.readouterr().out
+    assert "collective bytes" in out and "all-reduce" in out

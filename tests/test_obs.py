@@ -1,0 +1,223 @@
+"""repro.obs acceptance tests (DESIGN.md §10).
+
+The load-bearing guarantees:
+
+1. observers DISABLED -> the engine's ledgers are bit-for-bit identical
+   to an observer-free run (the golden-parity suite keeps covering the
+   pre-obs behavior; here we pin on/off equality directly);
+2. observers ENABLED -> the TracingObserver's mirror ledger reconciles
+   BIT-EXACT with the engine's EnergyLedger for a full CroSatFL session
+   and a baseline (every joule/second traced exactly once, in order);
+3. the report reproduces the paper columns (GS contact count, per-phase
+   energies) from the trace alone — no ledger access;
+4. every emitted event validates against the versioned JSONL schema.
+
+Plus unit coverage of SpanTracer / Metrics / schema validation.
+"""
+import json
+import os
+
+import pytest
+
+from golden_capture import baseline_config, build_setup, session_config
+from repro.core.session import Session
+from repro.fl.baselines import BASELINES
+from repro.obs import (Metrics, SpanTracer, TRACE_SCHEMA_VERSION,
+                       TracingObserver, load_events, validate_event)
+from repro.obs.report import breakdown_table, summarize
+
+
+# ---------------------------------------------------------------------------
+# traced runs (one per module; ledgers are host-side numpy -> reproducible)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_crosatfl(tmp_path_factory):
+    jsonl = str(tmp_path_factory.mktemp("obs") / "crosatfl.jsonl")
+    obs = TracingObserver(jsonl)
+    env, model = build_setup()
+    _, ledger, _ = Session(session_config(model), env, model,
+                           observer=obs).run()
+    return obs, ledger, jsonl
+
+
+@pytest.fixture(scope="module")
+def traced_baseline():
+    obs = TracingObserver()
+    env, model = build_setup()
+    _, ledger, _ = BASELINES["FedSyn"](baseline_config(model), env, model,
+                                       observer=obs).run()
+    return obs, ledger
+
+
+# ---------------------------------------------------------------------------
+# 1. observer off == no observer, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_disabled_observer_preserves_ledger_bits():
+    env, model = build_setup()
+    _, plain, _ = Session(session_config(model), env, model).run()
+    env, model = build_setup()
+    _, observed, _ = Session(session_config(model), env, model,
+                             observer=TracingObserver()).run()
+    assert plain.snapshot() == observed.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# 2. mirror-ledger reconciliation, bit exact
+# ---------------------------------------------------------------------------
+
+def test_crosatfl_reconciles_bit_exact(traced_crosatfl):
+    obs, ledger, _ = traced_crosatfl
+    rec = obs.reconcile(ledger)
+    bad = {k: v for k, v in rec["fields"].items() if not v["equal"]}
+    assert rec["exact"], f"mirror != ledger: {bad}"
+
+
+def test_baseline_reconciles_bit_exact(traced_baseline):
+    obs, ledger = traced_baseline
+    assert obs.reconcile(ledger)["exact"]
+
+
+def test_metric_sums_reconcile_bit_exact(traced_crosatfl):
+    """Per-(round x cluster) and per-link decompositions sum back to the
+    ledger fields with the SAME floats (in-order accumulation)."""
+    obs, ledger, _ = traced_crosatfl
+    m = obs.metrics
+    assert m.total("train_joules") == ledger.train_energy_j
+    assert m.get("gs_joules_inorder") == ledger.gs_energy_j
+    assert m.get("lisl_joules_inorder") == ledger.lisl_energy_j
+    # the decomposition is real: >1 series, every round/cluster labelled
+    series = m.series("train_joules")
+    assert len(series) > 1
+    assert all({"round", "cluster"} <= set(lab) for lab, _ in series)
+
+
+# ---------------------------------------------------------------------------
+# 3. report columns from the trace alone
+# ---------------------------------------------------------------------------
+
+def test_report_reproduces_ledger_columns(traced_crosatfl):
+    obs, ledger, jsonl = traced_crosatfl
+    s = summarize(load_events(jsonl))            # from the FILE, not memory
+    assert s["algo"] == "CroSatFL"
+    assert s["gs_comm"] == ledger.gs_count
+    assert s["train_j"] == ledger.train_energy_j
+    assert s["gs_j"] == ledger.gs_energy_j
+    assert s["lisl_j"] == ledger.lisl_energy_j
+    assert s["wait_s"] == ledger.waiting_time_s
+    assert s["rounds"] == 3 and len(s["round_latencies"]) == 3
+    table = breakdown_table([s])
+    assert "CroSatFL" in table and "GS msgs" in table
+
+
+def test_report_baseline_columns(traced_baseline):
+    obs, ledger = traced_baseline
+    s = summarize(obs.tracer.events)
+    assert s["gs_comm"] == ledger.gs_count
+    assert s["train_j"] == ledger.train_energy_j
+    assert s["gs_j"] == ledger.gs_energy_j
+
+
+# ---------------------------------------------------------------------------
+# 4. schema
+# ---------------------------------------------------------------------------
+
+def test_all_emitted_events_validate(traced_crosatfl, traced_baseline):
+    for obs in (traced_crosatfl[0], traced_baseline[0]):
+        errs = [e for ev in obs.tracer.events for e in validate_event(ev)]
+        assert errs == []
+        assert all(ev["v"] == TRACE_SCHEMA_VERSION
+                   for ev in obs.tracer.events)
+
+
+def test_validate_rejects_malformed():
+    assert validate_event("nope")
+    assert validate_event({"v": 99, "kind": "comm"})
+    assert any("unknown kind" in e for e in
+               validate_event({"v": 1, "kind": "bogus", "t_host": 0.0}))
+    ok = {"v": 1, "kind": "comm", "t_host": 0.0, "link": "gs", "n": 2,
+          "bits": 1.0, "energy_j": 1.0, "time_s": 0.5, "phase": "round",
+          "round": 0, "cluster": None}
+    assert validate_event(ok) == []
+    assert any("comm.link" in e for e in
+               validate_event({**ok, "link": "laser"}))
+    assert any("missing field" in e for e in
+               validate_event({k: v for k, v in ok.items() if k != "n"}))
+
+
+# ---------------------------------------------------------------------------
+# SpanTracer units
+# ---------------------------------------------------------------------------
+
+def test_tracer_jsonl_stream_roundtrip(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tr = SpanTracer(path)
+    tr.emit("round_start", round=0, sim_t=0.0)
+    tr.emit("round_end", round=0, sim_t=5.0, sim_dur=5.0, host_dur=0.01)
+    tr.close()
+    assert load_events(path) == tr.events
+    assert all(validate_event(ev) == [] for ev in tr.events)
+
+
+def test_tracer_spans_measure_host_time():
+    tr = SpanTracer()
+    tr.begin_span("train")
+    ev = tr.end_span("train", sim_t0=10.0, sim_dur=3.0)
+    assert ev["kind"] == "phase" and ev["name"] == "train"
+    assert ev["host_dur"] >= 0.0 and ev["sim_dur"] == 3.0
+
+
+def test_chrome_trace_dual_timeline(tmp_path, traced_crosatfl):
+    obs, _, _ = traced_crosatfl
+    path = str(tmp_path / "trace.json")
+    obs.tracer.to_chrome_trace(path)
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    pids = {e["pid"] for e in evs}
+    assert pids == {1, 2}                      # sim + host timelines
+    tracks = {e["args"]["name"] for e in evs
+              if e.get("name") == "thread_name"}
+    assert "GS" in tracks and "rounds" in tracks
+    assert any(t.startswith("cluster") for t in tracks)
+    assert any(e["ph"] == "X" and e["pid"] == 2 for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# Metrics units
+# ---------------------------------------------------------------------------
+
+def test_metrics_counters_and_series():
+    m = Metrics()
+    m.count("e", 1.5, round=0, cluster=0)
+    m.count("e", 2.5, round=0, cluster=1)
+    m.count("e", 4.0, round=1, cluster=0)
+    m.count("other", 99.0)
+    assert m.get("e", round=0, cluster=1) == 2.5
+    assert m.total("e") == 8.0
+    assert m.total("e", round=0) == 4.0
+    assert [v for _, v in m.series("e", cluster=0)] == [1.5, 4.0]
+
+
+def test_metrics_histogram_and_gauge():
+    m = Metrics()
+    for v in (1.0, 2.0, 2.5, 9.0):
+        m.observe("lat", v)
+    bins = m.histogram("lat", bins=4)
+    assert len(bins) == 4 and sum(c for _, _, c in bins) == 4
+    m.gauge("clusters", 4)
+    d = m.to_dict()
+    assert d["gauges"]["clusters"][0]["value"] == 4
+    assert "lat" in d["histograms"]
+
+
+def test_metrics_json_export(tmp_path):
+    m = Metrics()
+    m.count("x", 1.0, phase="round")
+    p = os.path.join(tmp_path, "m.json")
+    m.to_json(p)
+    with open(p) as f:
+        d = json.load(f)
+    assert d["counters"]["x"][0] == {"labels": {"phase": "round"},
+                                     "value": 1.0}
