@@ -17,7 +17,8 @@ from repro.obs import get_logger
 log = get_logger("benchmarks.run")
 
 
-def smoke(measured_cost: bool = False, trace: bool = False) -> int:
+def smoke(measured_cost: bool = False, trace: bool = False,
+          only: list | None = None) -> int:
     """1-round run of all six algorithms PLUS the scenario-zoo presets
     (semi-sync/async pacing, gossip-only, per-cluster codec map) on a tiny
     setup through the shared RoundEngine — catches engine regressions in
@@ -51,6 +52,13 @@ def smoke(measured_cost: bool = False, trace: bool = False) -> int:
         os.makedirs(obs_dir, exist_ok=True)
     failures = 0
     methods = ["CroSatFL"] + list(BASELINES) + list(SCENARIO_NAMES)
+    if only:
+        unknown = sorted(set(only) - set(methods))
+        if unknown:
+            log.warn(f"--only: unknown methods {unknown} "
+                     f"(choose from {methods})")
+            return 1
+        methods = [m for m in methods if m in set(only)]
     ledgers = {}
     trace_paths = []
     for method in methods:
@@ -121,10 +129,15 @@ def main(argv=None):
     ap.add_argument("--trace", action="store_true",
                     help="with --smoke: per-method TracingObserver; "
                          "traces + report under results/obs/")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="with --smoke: run only these methods (e.g. "
+                         "--only CroSatFL-EventAsync for CI's "
+                         "event-sim-smoke job)")
     ap.add_argument("--skip", nargs="*", default=[])
     args = ap.parse_args(argv)
     if args.smoke:
-        return smoke(measured_cost=args.measured_cost, trace=args.trace)
+        return smoke(measured_cost=args.measured_cost, trace=args.trace,
+                     only=args.only)
     quick = [] if args.full else ["--quick"]
 
     from benchmarks import (ablations, comm_breakdown, convergence,

@@ -84,6 +84,12 @@ def save_session(state, path: str) -> None:
     if pending:
         save_pytree({str(kc): w for kc, w in pending.items()},
                     os.path.join(path, "pacing.npz"))
+    # every non-"pending" pacing_state key is JSON-able by contract
+    # (event-driven pacing: kernel tie-break RNG state, virtual clocks,
+    # per-cluster last-sync times — repro.sim.driver) and rides in meta;
+    # sessions without extras keep the exact pre-existing meta schema
+    extras = ({k: v for k, v in pstate.items() if k != "pending"}
+              if isinstance(pstate, dict) else {})
     meta = {
         "round_idx": state.round_idx,
         "masters": state.masters.tolist(),
@@ -93,6 +99,7 @@ def save_session(state, path: str) -> None:
         # selection jitter / group samples than the uninterrupted one
         "host_rng": state.rng_state,
         "pacing_pending": sorted(int(kc) for kc in pending) if pending else [],
+        **({"pacing_extras": extras} if extras else {}),
         "ledger": dataclasses.asdict(state.ledger),
         "skip": [{"kappa": s.kappa.tolist(), "tau": s.tau.tolist(),
                   "phi": s.phi.tolist()} for s in state.skip_states],
@@ -112,15 +119,17 @@ def load_session(path: str, models_like) -> "SessionState":
     skip = [SkipOneState(np.array(s["kappa"]), np.array(s["tau"]),
                          np.array(s["phi"])) for s in meta["skip"]]
     ledger = EnergyLedger(**meta["ledger"])
-    pacing_state = None
+    pacing_state = dict(meta.get("pacing_extras") or {})
     pend_keys = meta.get("pacing_pending") or []
     if pend_keys:
         # every stashed model shares the single-cluster-model structure
         single_like = jax.tree.map(lambda l: l[0], models_like)
         loaded = load_pytree(os.path.join(path, "pacing.npz"),
                              {str(kc): single_like for kc in pend_keys})
-        pacing_state = {"pending": {int(kc): loaded[str(kc)]
-                                    for kc in pend_keys}}
+        pacing_state["pending"] = {int(kc): loaded[str(kc)]
+                                   for kc in pend_keys}
+    if not pacing_state:
+        pacing_state = None
     return SessionState(
         round_idx=meta["round_idx"], cluster_models=models,
         skip_states=skip, masters=np.array(meta["masters"]),

@@ -121,3 +121,48 @@ class WindowTable:
                     j, idx = i0 + (self.n_steps - start0) + hit, hit
                 return max(0.0, j * self.step_s - t0), float(col_r[idx])
         return self.horizon_s, 2_000_000.0
+
+    def windows(self, sat: int, t0: float = 0.0,
+                horizon_s: float | None = None) -> list[tuple[float, float]]:
+        """Contact windows for ``sat`` opening in [t0, t0 + horizon_s):
+        absolute (t_open, t_close) pairs, in order.
+
+        Opens are grid-aligned (first visible sample at/after t0) except
+        for a pass already in progress at an off-grid t0, which opens at
+        t0 itself — the same ongoing-pass rule ``next_window`` applies.
+        Closes are always the pass's TRUE close (first invisible sample,
+        scanned past the query horizon if needed, up to one table
+        period), never truncated at the horizon: the event kernel
+        (repro.sim.windows) schedules CONTACT_CLOSE from these, and a
+        truncated close would fabricate a loss of visibility. Absolute
+        step indices wrap periodically through the table, so a pass
+        straddling the table boundary reads as ONE window.
+        """
+        horizon = self.horizon_s if horizon_s is None else float(horizon_s)
+        step, n = self.step_s, self.n_steps
+        col = self.vis[:, sat]
+        i0 = int(np.ceil(t0 / step))
+        i_end = int(np.ceil((t0 + horizon) / step))
+        i_floor = int(np.floor(t0 / step))
+        out: list[tuple[float, float]] = []
+        open_t: float | None = None
+        j = i0
+        while j < i_end:
+            v = bool(col[j % n])
+            if v and open_t is None:
+                ongoing = (j == i0 and i_floor != i0
+                           and bool(col[i_floor % n]))
+                open_t = float(t0) if ongoing else j * step
+            elif not v and open_t is not None:
+                out.append((open_t, j * step))
+                open_t = None
+            j += 1
+        if open_t is not None:
+            # pass still open at the query horizon: find its true close
+            for k in range(j, j + n):
+                if not col[k % n]:
+                    out.append((open_t, k * step))
+                    break
+            else:           # visible the whole period (not a LEO pass,
+                out.append((open_t, (j + n) * step))   # but stay total)
+        return out

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.constellation.gs import GroundStation
 from repro.constellation.hardware import fanout_for_range, make_profiles
-from repro.constellation.lisl import LISLConfig, lisl_graph
+from repro.constellation.lisl import LISLConfig, earth_blocked, lisl_graph
 from repro.constellation.walker import WalkerDelta
 from repro.core.energy import HardwareProfile, LinkParams
 
@@ -103,6 +103,61 @@ class ConstellationEnv:
         sats = self.sat_ids[masters]
         return self._full_reach(t)[np.ix_(sats, sats)]
 
+    def next_master_contact(self, masters: np.ndarray, kc: int, t0: float,
+                            max_wait_s: float = 1800.0,
+                            step_s: float = 60.0) -> float:
+        """Wait (s) from t0 until cluster ``kc``'s master can reach ANY
+        other master over routed LISLs — the merge-commit gate of the
+        event-driven async pacing (repro.sim.driver).
+
+        Scans forward on the same 1-minute topology epochs that
+        ``_full_reach`` caches on, so repeated queries within a round are
+        cache hits. Capped at ``max_wait_s``: the mesh is dense enough
+        that a master isolated for half an hour is a modeling bug, and
+        the mixers already price relayed/deferred exchange, so the cap
+        degrades to "merge now over the relay path" rather than hanging
+        the simulation."""
+        masters = np.asarray(masters, int)
+        if masters.size <= 1:
+            return 0.0
+        t = float(t0)
+        while t - t0 <= max_wait_s:
+            row = self.master_reach(masters, t)[kc].copy()
+            row[kc] = False
+            if row.any():
+                return t - t0
+            t = (np.floor(t / step_s) + 1.0) * step_s
+        return float(max_wait_s)
+
+    def lisl_contact_windows(self, i: int, j: int, t0: float = 0.0,
+                             horizon_s: float = 5_700.0,
+                             step_s: float = 30.0,
+                             ) -> list[tuple[float, float]]:
+        """Direct-LISL visibility windows for client pair (i, j):
+        absolute (t_open, t_close) pairs in [t0, t0 + horizon_s) where
+        the pair is within LISL range and clear of the Earth's limb.
+
+        Pairwise grid scan via ``WalkerDelta.subset_positions`` (two
+        satellites, not 720) — an event source for inter-master transfer
+        scheduling, complementing the GS ``WindowTable``."""
+        si, sj = int(self.sat_ids[i]), int(self.sat_ids[j])
+        ts = t0 + np.arange(0.0, horizon_s, step_s)
+        pos = self.constellation.subset_positions([si, sj], ts)  # (T,2,3)
+        pi, pj = pos[:, 0], pos[:, 1]
+        dist = np.linalg.norm(pi - pj, axis=-1)
+        ok = (dist < self.lisl_cfg.range_m) & ~earth_blocked(pi, pj)
+        out: list[tuple[float, float]] = []
+        open_t = None
+        for k, v in enumerate(ok):
+            if v and open_t is None:
+                open_t = float(ts[k])
+            elif not v and open_t is not None:
+                out.append((open_t, float(ts[k])))
+                open_t = None
+        if open_t is not None:
+            out.append((open_t, float(t0 + horizon_s)))
+        return out
+
     # ---- GS -------------------------------------------------------------------
     @property
     def _windows(self):
@@ -110,6 +165,14 @@ class ConstellationEnv:
             from repro.constellation.gs import WindowTable
             self._window_table = WindowTable(self.gs, self.constellation)
         return self._window_table
+
+    @property
+    def window_table(self):
+        """Public handle on the precomputed GS-visibility table — the
+        event kernel (repro.sim.windows) iterates its contact windows as
+        an event source; built lazily on first access like the private
+        ``next_window`` path."""
+        return self._windows
 
     def gs_window_wait(self, client: int, t: float) -> tuple[float, float]:
         return self._windows.next_window(int(self.sat_ids[client]), t)

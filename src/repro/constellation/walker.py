@@ -83,3 +83,41 @@ class WalkerDelta:
         pos = self.positions(t)
         diff = pos[:, None, :] - pos[None, :, :]
         return np.linalg.norm(diff, axis=-1)
+
+    def subset_positions(self, sats: np.ndarray | list,
+                         t: float | np.ndarray) -> np.ndarray:
+        """ECI positions (..., len(sats), 3) for a subset of satellites.
+
+        Same rotation composition as ``positions`` restricted to the
+        requested ids — scanning a long horizon for a handful of masters
+        (the event kernel's window iteration) stays O(T x M), not
+        O(T x n_sats)."""
+        t = np.asarray(t, np.float64)
+        squeeze = t.ndim == 0
+        t = np.atleast_1d(t)
+        sats = np.atleast_1d(np.asarray(sats, int))
+        p = sats // self.sats_per_plane
+        s = sats % self.sats_per_plane
+        raan = 2 * np.pi * p / self.n_planes                        # (M,)
+        u0 = (2 * np.pi * s / self.sats_per_plane
+              + 2 * np.pi * self.phasing_f * p / self.n_sats)       # (M,)
+        u = u0[None, :] + self.mean_motion * t[:, None]             # (T,M)
+
+        inc = np.deg2rad(self.inclination_deg)
+        cu, su = np.cos(u), np.sin(u)
+        x_i = cu
+        y_i = su * np.cos(inc)
+        z_i = su * np.sin(inc)
+        cr, sr = np.cos(raan), np.sin(raan)                         # (M,)
+        x = cr[None, :] * x_i - sr[None, :] * y_i
+        y = sr[None, :] * x_i + cr[None, :] * y_i
+        pos = np.stack([x, y, z_i], -1) * self.radius_m             # (T,M,3)
+        return pos[0] if squeeze else pos
+
+    def pair_distance(self, i: int, j: int,
+                      t: float | np.ndarray) -> np.ndarray:
+        """|r_i - r_j| in meters at time(s) t, without forming all
+        n_sats positions — the LISL contact-window scan for one master
+        pair calls this over thousands of grid points."""
+        pos = self.subset_positions([int(i), int(j)], t)
+        return np.linalg.norm(pos[..., 0, :] - pos[..., 1, :], axis=-1)

@@ -112,13 +112,24 @@ def measured_c_flop(arch: str = "gemma3-1b", shape: str = "train_4k",
         except (json.JSONDecodeError, OSError):
             cache = {}
     if not refresh and cell in cache:
-        return float(cache[cell]["c_flop"])
-
-    value = _from_dryrun_rows(arch, shape)
-    source = "dryrun-jsonl"
-    if value is None:
-        value = _probe_compile(arch, shape)
-        source = "reduced-probe"
+        entry = cache[cell]
+        if entry.get("source") == "dryrun-jsonl":
+            return float(entry["c_flop"])
+        # a cached reduced-probe ESTIMATE is only a fallback: a dry-run
+        # row saved since (launch/dryrun persists to results/ by default)
+        # carries the real HLO-measured FLOPs for the cell and must win —
+        # returning the stale probe forever was the ROADMAP's "gemma cell
+        # falls back to the reduced-probe estimate" bug
+        row = _from_dryrun_rows(arch, shape)
+        if row is None:
+            return float(entry["c_flop"])
+        value, source = row, "dryrun-jsonl"
+    else:
+        value = _from_dryrun_rows(arch, shape)
+        source = "dryrun-jsonl"
+        if value is None:
+            value = _probe_compile(arch, shape)
+            source = "reduced-probe"
     cache[cell] = {"c_flop": value, "source": source}
     try:
         os.makedirs(_results_dir(), exist_ok=True)

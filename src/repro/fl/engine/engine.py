@@ -222,6 +222,12 @@ class RoundEngine:
                                                     None))
         key = state.rng_key
 
+        if hasattr(self.pacing, "bind"):
+            # event-driven pacing (repro.sim.driver): hand the kernel the
+            # plan, masters, and current wall clock before the first
+            # round — after resume, so restored clocks are not clobbered
+            self.pacing.bind(ctx, plan, state)
+
         history: list[dict] = []
         wall = ledger.wall_clock_s
         for r in range(state.round_idx, R):

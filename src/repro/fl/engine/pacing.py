@@ -45,6 +45,18 @@ def _bcast(vec, leaf):
     return jnp.asarray(vec).reshape((-1,) + (1,) * (leaf.ndim - 1))
 
 
+def weights_from_staleness(alpha0: float, decay: float, staleness,
+                           tau: float = 1.0) -> np.ndarray:
+    """alpha0 / (1 + s/tau)^decay — the FedAsync polynomial discount on
+    a continuous staleness measure s. ``AsyncPacing`` feeds arrival RANK
+    (tau=1, so s/tau is exact and the rank path stays bit-identical);
+    the event-driven async pacing (repro.sim.driver) feeds sim-SECONDS
+    with tau = the mean cluster cycle, making the discount scale-free in
+    wall time."""
+    s = np.asarray(staleness, np.float64)
+    return alpha0 / (1.0 + s / tau) ** decay
+
+
 def _charge_train(ctx: EngineContext, sel: RoundSelection, kc,
                   charge_wait: bool = True) -> float:
     """The uniform sync rule (engine docstring): charge participants'
@@ -278,7 +290,8 @@ class AsyncPacing:
         return ranks
 
     def staleness_weights(self, barriers: np.ndarray) -> np.ndarray:
-        return self.alpha0 / (1.0 + self._ranks(barriers)) ** self.decay
+        return weights_from_staleness(self.alpha0, self.decay,
+                                      self._ranks(barriers))
 
     def _observe_merge(self, ctx: EngineContext,
                        alphas: np.ndarray) -> None:

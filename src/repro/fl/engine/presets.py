@@ -113,6 +113,12 @@ def make_scenario(name: str, cfg: EngineConfig, env, model, *,
       CroSatFL-HeteroCodec = CroSatFL x per-cluster codec map
                              (block-minifloat on CPU-heavy clusters,
                              identity on GPU clusters)
+      CroSatFL-EventSync   = CroSatFL x sync pacing REPLAYED through the
+                             discrete-event kernel (repro.sim; golden
+                             ledger bit-parity by construction)
+      CroSatFL-EventAsync  = CroSatFL x event-driven async: true
+                             per-cluster clocks, merges fire on LISL
+                             availability, sim-time staleness weights
 
     ``**kw`` feeds the swapped policy's constructor (e.g. ``quantile``,
     ``alpha0``, ``consensus_eps``, ``cpu_threshold``).
@@ -131,8 +137,18 @@ def make_scenario(name: str, cfg: EngineConfig, env, model, *,
     if name == "CroSatFL-HeteroCodec":
         return make_crosatfl(cfg, env, model,
                              codec=HardwareAwareCodecMap(**kw), **base)
+    if name in ("CroSatFL-EventSync", "CroSatFL-EventAsync"):
+        # lazy import: repro.sim.driver imports this package's pacing
+        # module, so a top-level import here would be circular
+        from repro.sim.driver import EventAsyncPacing, EventDrivenPacing
+        kw.setdefault("seed", cfg.seed)
+        pacing = (EventDrivenPacing(**kw)
+                  if name == "CroSatFL-EventSync"
+                  else EventAsyncPacing(**kw))
+        return make_crosatfl(cfg, env, model, pacing=pacing, **base)
     raise KeyError(f"unknown scenario {name!r}")
 
 
 SCENARIO_NAMES = ("CroSatFL-SemiSync", "CroSatFL-Async", "CroSatFL-Gossip",
-                  "CroSatFL-HeteroCodec")
+                  "CroSatFL-HeteroCodec", "CroSatFL-EventSync",
+                  "CroSatFL-EventAsync")

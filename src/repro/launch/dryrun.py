@@ -228,7 +228,12 @@ def main(argv=None):
     ap.add_argument("--no-mix", action="store_true")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--causal-skip", action="store_true")
-    ap.add_argument("--json", default=None, help="append JSONL rows here")
+    ap.add_argument("--json", default=os.path.join("results",
+                                                   "dryrun.jsonl"),
+                    help="append JSONL rows here (default: "
+                         "results/dryrun.jsonl, where fl/engine/costs.py "
+                         "resolves 'measured:' c_flop cells from; "
+                         "--json '' disables)")
     ap.add_argument("--save-hlo", default=None, help="dir for compiled HLO text")
     args = ap.parse_args(argv)
 
@@ -257,6 +262,9 @@ def main(argv=None):
                              "mesh": "2x16x16" if mp else "16x16",
                              "status": "fail", "error": str(e)[:500]})
             if args.json:
+                d = os.path.dirname(args.json)
+                if d:
+                    os.makedirs(d, exist_ok=True)
                 with open(args.json, "a") as f:
                     f.write(json.dumps(rows[-1]) + "\n")
     n_ok = sum(r["status"] == "ok" for r in rows)

@@ -60,6 +60,18 @@ class EngineObserver:
         """Async pacing: cluster kc merged at arrival ``rank`` with
         staleness weight ``alpha``."""
 
+    def sim_event(self, etype: str, sim_t: float,
+                  cluster: Optional[int] = None,
+                  sat: Optional[int] = None, seq: int = 0,
+                  **payload) -> None:
+        """One event popped from the discrete-event kernel
+        (repro.sim.events), in kernel order: ``etype`` is the kernel
+        taxonomy (contact_open/contact_close/train_done/transfer_done/
+        straggler_timeout/merge_commit), ``sim_t`` the absolute sim time
+        it fired. Kernel events are timing/ordering observability only —
+        implementations must never route them into the mirror ledger
+        (the accounting hooks above already carry every joule/second)."""
+
     def note(self, name: str, **fields) -> None:
         """Free-form instant (master migration, gossip consensus, ...)."""
 
@@ -160,6 +172,17 @@ class TracingObserver(EngineObserver):
         self.metrics.observe("async_rank", rank, cluster=kc)
         self.tracer.emit("async_merge", round=self._round, cluster=kc,
                          rank=int(rank), alpha=float(alpha))
+
+    def sim_event(self, etype, sim_t, cluster=None, sat=None, seq=0,
+                  **payload):
+        # the kernel stamps its own round index in the payload (events
+        # can pop a round after they were scheduled); fall back to the
+        # observer's current round for sources that do not
+        rnd = payload.pop("round", self._round)
+        self.metrics.count("sim_events", 1, etype=etype)
+        self.tracer.emit("sim_event", etype=etype, sim_t=float(sim_t),
+                         seq=int(seq), cluster=cluster, sat=sat, round=rnd,
+                         **{k: float(v) for k, v in payload.items()})
 
     def note(self, name, **fields):
         self.tracer.emit("note", name=name, **fields)

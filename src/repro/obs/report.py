@@ -31,7 +31,7 @@ def summarize(events: list[dict]) -> dict:
          "gs_comm": 0, "intra_comm": 0, "inter_comm": 0,
          "gs_bits": 0.0, "lisl_bits": 0.0,
          "wait_s": 0.0, "sim_time_s": 0.0,
-         "round_latencies": [], "wait_by_cause": {}}
+         "round_latencies": [], "wait_by_cause": {}, "sim_events": {}}
     for ev in events:
         kind = ev["kind"]
         if kind == "session_start":
@@ -52,6 +52,9 @@ def summarize(events: list[dict]) -> dict:
             c = ev.get("cause", "?")
             s["wait_by_cause"][c] = (s["wait_by_cause"].get(c, 0.0)
                                      + ev["seconds"])
+        elif kind == "sim_event":
+            et = ev.get("etype", "?")
+            s["sim_events"][et] = s["sim_events"].get(et, 0) + 1
         elif kind == "round_end":
             s["rounds"] += 1
             s["round_latencies"].append(ev["sim_dur"])
@@ -67,7 +70,14 @@ def latency_histogram(lats: list[float], bins: int = 8) -> list[str]:
     if not lats:
         return ["  (no rounds)"]
     lo, hi = min(lats), max(lats)
-    width = (hi - lo) / bins or 1.0
+    if hi == lo:
+        # degenerate distribution (single-round traces, or every round
+        # identical): one explicit full bin, not 8 zero-width buckets
+        # with the whole mass crammed into the first
+        return [f"  [{lo:9.2f}] s (all {len(lats)} round"
+                f"{'s' if len(lats) != 1 else ''} identical) "
+                f"{'#' * 20} {len(lats)}"]
+    width = (hi - lo) / bins
     counts = [0] * bins
     for v in lats:
         counts[min(int((v - lo) / width), bins - 1)] += 1
@@ -116,6 +126,10 @@ def render(paths: list[str]) -> str:
             causes = ", ".join(f"{c}={v:.3g}s" for c, v in
                                sorted(s["wait_by_cause"].items()))
             out.append(f"  wait by cause: {causes}")
+        if s["sim_events"]:
+            evs = ", ".join(f"{k}={v}" for k, v in
+                            sorted(s["sim_events"].items()))
+            out.append(f"  kernel events: {evs}")
     return "\n".join(out)
 
 

@@ -49,11 +49,13 @@ SCHEMA: dict[str, dict[str, tuple]] = {
     "async_merge": {"round": (int,), "cluster": (int,), "rank": (int,),
                     "alpha": _NUM},
     "note": {"name": (str,)},
+    "sim_event": {"etype": (str,), "sim_t": _NUM, "seq": (int,),
+                  "round": (int,), "cluster": (int,), "sat": (int,)},
     "round_end": {"round": (int,), "sim_t": _NUM, "sim_dur": _NUM,
                   "host_dur": _NUM},
     "session_end": {"sim_t": _NUM, "ledger": (dict,)},
 }
-_NULLABLE = {"round", "cluster", "sim_t0", "sim_dur"}
+_NULLABLE = {"round", "cluster", "sat", "sim_t0", "sim_dur"}
 _COMM_LINKS = ("gs", "intra", "inter")
 
 
@@ -176,6 +178,28 @@ class SpanTracer:
                     "name": f"round {ev['round']}",
                     "ts": (ev["sim_t"] - ev["sim_dur"]) * 1e6,
                     "dur": max(ev["sim_dur"], 1e-9) * 1e6, "args": {}})
+            elif kind == "sim_event":
+                et = ev["etype"]
+                if et == "contact_open" and "close_t" in ev:
+                    # one span per GS pass, anchored at the open event
+                    # (its payload carries the true close time); the
+                    # matching contact_close event is subsumed
+                    out.append({
+                        "ph": "X", "pid": 1, "tid": tid(1, "GS contacts"),
+                        "name": f"sat {ev.get('sat')}",
+                        "ts": ev["sim_t"] * 1e6,
+                        "dur": max(ev["close_t"] - ev["sim_t"],
+                                   1e-9) * 1e6,
+                        "args": {"cluster": ev.get("cluster")}})
+                elif et != "contact_close":
+                    kc = ev.get("cluster")
+                    out.append({
+                        "ph": "i", "pid": 1,
+                        "tid": tid(1, "GS" if kc is None
+                                   else f"cluster{kc}"),
+                        "name": et, "s": "t", "ts": ev["sim_t"] * 1e6,
+                        "args": {"seq": ev.get("seq"),
+                                 "round": ev.get("round")}})
             elif kind == "phase":
                 out.append({
                     "ph": "X", "pid": 2, "tid": tid(2, "engine"),

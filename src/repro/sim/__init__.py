@@ -1,0 +1,27 @@
+"""repro.sim — deterministic discrete-event constellation simulation
+(DESIGN.md §11).
+
+* ``events``  — the kernel: heap-ordered ``EventQueue`` with a seeded,
+  bit-reproducible total order and the event taxonomy (contact
+  open/close, train done, transfer done, straggler timeout, merge
+  commit).
+* ``clocks``  — per-cluster / per-GS monotone virtual clocks.
+* ``windows`` — ``WindowTable`` contact windows streamed as events.
+* ``driver``  — pacing policies that run the ``RoundEngine`` on the
+  kernel: ``EventDrivenPacing`` (replay any round-granular policy;
+  sync replay is golden-ledger bit-exact) and ``EventAsyncPacing``
+  (true per-cluster clocks, LISL-availability merge commits,
+  sim-time staleness).
+"""
+from repro.sim.clocks import ClockSet
+from repro.sim.driver import EventAsyncPacing, EventDrivenPacing
+from repro.sim.events import (CONTACT_CLOSE, CONTACT_OPEN, MERGE_COMMIT,
+                              STRAGGLER_TIMEOUT, TRAIN_DONE, TRANSFER_DONE,
+                              Event, EventQueue)
+from repro.sim.windows import WindowEventSource
+
+__all__ = [
+    "CONTACT_CLOSE", "CONTACT_OPEN", "MERGE_COMMIT", "STRAGGLER_TIMEOUT",
+    "TRAIN_DONE", "TRANSFER_DONE", "ClockSet", "Event", "EventAsyncPacing",
+    "EventDrivenPacing", "EventQueue", "WindowEventSource",
+]

@@ -1,0 +1,63 @@
+"""Virtual clocks for the event kernel (DESIGN.md §11).
+
+A ``ClockSet`` is a bag of named monotone clocks on the simulated
+timeline: one per training cluster (integer keys), one per ground
+station track (string keys like ``"gs"``), plus whatever a driver
+registers. Clocks only move forward — ``advance_to`` clamps against the
+current value, so an out-of-order event can never rewind a timeline —
+and export/import as a flat JSON-able dict for checkpointing.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Union
+
+Key = Union[int, str]
+
+
+class ClockSet:
+    def __init__(self):
+        self._t: dict[Key, float] = {}
+
+    def __contains__(self, name: Key) -> bool:
+        return name in self._t
+
+    def __getitem__(self, name: Key) -> float:
+        return self._t[name]
+
+    def __len__(self) -> int:
+        return len(self._t)
+
+    def names(self) -> list[Key]:
+        return list(self._t)
+
+    def init(self, name: Key, t: float) -> None:
+        """Register a clock at t — no-op if it already exists (a resumed
+        session's restored clocks must not be clobbered by bind())."""
+        self._t.setdefault(name, float(t))
+
+    def reset(self, t: Optional[float] = None) -> None:
+        """Drop every clock (t=None) or rewind all of them to t — only
+        legal at session start, before any event has been scheduled."""
+        if t is None:
+            self._t.clear()
+        else:
+            self._t = {k: float(t) for k in self._t}
+
+    def advance_to(self, name: Key, t: float) -> float:
+        """Move ``name`` forward to t (monotone: never rewinds)."""
+        cur = self._t.get(name, float("-inf"))
+        self._t[name] = max(cur, float(t))
+        return self._t[name]
+
+    def max(self, names: Optional[Iterable[Key]] = None) -> float:
+        keys = list(self._t if names is None else names)
+        return max(self._t[k] for k in keys) if keys else 0.0
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        # JSON object keys are strings; load_state_dict undoes this.
+        return {str(k): float(v) for k, v in self._t.items()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._t = {(int(k) if str(k).lstrip("-").isdigit() else str(k)):
+                   float(v) for k, v in state.items()}

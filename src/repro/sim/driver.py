@@ -1,0 +1,361 @@
+"""Event-driven pacing: the RoundEngine's policies on the kernel clock
+(DESIGN.md §11).
+
+Two pacing policies built on ``repro.sim.events``:
+
+``EventDrivenPacing``
+    Wraps any round-granular pacing policy (Sync / SemiSync / Async) and
+    REPLAYS it through the event kernel: every cluster completion is
+    scheduled as a TRAIN_DONE event at (round start + barrier), straggler
+    overruns become STRAGGLER_TIMEOUT events at the inner deadline, the
+    round close becomes a MERGE_COMMIT, and GS contact windows stream
+    from the ``WindowTable`` as CONTACT_OPEN/CLOSE. The kernel orders the
+    events; per-cluster and GS virtual clocks advance from the popped
+    stream; every pop emits through ``EngineObserver.sim_event``.
+
+    Bit-parity argument (pinned in tests/test_sim_events.py): all
+    accounting stays in the wrapped policy — the kernel never touches the
+    ledger, the engine's host RNG, or its JAX key stream (the tie-break
+    generator is the kernel's own). TRAIN_DONE events carry the RAW
+    barrier float as payload, so for a ``SyncPacing`` inner the replayed
+    round advance is ``max`` over exactly the floats the lock-step loop
+    would have maxed — NOT a difference of absolute event times, which
+    would not be bit-stable — and the golden ``EnergyLedger`` reproduces
+    bit-for-bit.
+
+``EventAsyncPacing``
+    True per-cluster clocks. Each cluster runs on its own timeline:
+    clock(kc) advances by that cluster's realized barrier, the merge for
+    a finished cluster fires at the next LISL availability epoch
+    (``env.next_master_contact``, 1-minute topology granularity — not a
+    mean-cycle estimate), and the commit wait is charged to the ledger as
+    ``merge_window`` waiting. Staleness is measured in sim SECONDS
+    (commit time minus the cluster's previous commit) and discounted by
+    the shared ``weights_from_staleness`` rule with tau = this
+    generation's mean cycle; commit arrival order (kernel pop order,
+    seeded tie-breaks) is reported as the merge rank. The global wall
+    advances to the latest commit — max over per-cluster timelines, which
+    over a session is ≤ the sum of per-round maxima the sync barrier
+    pays. Cross-cluster mixing time (charged globally by the engine)
+    re-enters every timeline at the next ``begin_round`` since all
+    clusters take part in the exchange.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.engine.pacing import (SyncPacing, _bcast, _charge_train,
+                                    _combine, weights_from_staleness)
+from repro.sim.clocks import ClockSet
+from repro.sim.events import (CONTACT_CLOSE, CONTACT_OPEN, MERGE_COMMIT,
+                              STRAGGLER_TIMEOUT, TRAIN_DONE, TRANSFER_DONE,
+                              EventQueue)
+from repro.sim.windows import WindowEventSource
+
+
+def _make_contact_source(ctx, state) -> Optional[WindowEventSource]:
+    """GS contact streaming is observability (events -> trace), so it is
+    built only when an observer is attached AND the env exposes the
+    window table + client->satellite ids; toy unit-test envs get None."""
+    if ctx.obs is None or getattr(state, "masters", None) is None:
+        return None
+    masters = np.asarray(state.masters, int)
+    table = getattr(ctx.env, "window_table", None)
+    sat_ids = getattr(ctx.env, "sat_ids", None)
+    if table is None or sat_ids is None or masters.size == 0:
+        return None
+    sats = [int(sat_ids[m]) for m in masters]
+    cluster_of = {int(sat_ids[m]): kc for kc, m in enumerate(masters)}
+    src = WindowEventSource(table, sats, cluster_of)
+    src.start(float(ctx.ledger.wall_clock_s))
+    return src
+
+
+class EventDrivenPacing:
+    """Replay a round-granular pacing policy through the event kernel."""
+
+    def __init__(self, inner=None, seed: int = 0):
+        self.inner = inner if inner is not None else SyncPacing()
+        self.kernel = EventQueue(seed)
+        self.clocks = ClockSet()
+        self._source: Optional[WindowEventSource] = None
+        self._ctx = None
+        self._t0 = 0.0
+        self._round = 0
+
+    # -- engine hooks ---------------------------------------------------------
+    def bind(self, ctx, plan, state) -> None:
+        """Called once per ``run()`` with the final (fresh or resumed)
+        state: seed the clocks at the current wall and attach the contact
+        source. A fresh session resets the kernel so reruns on a reused
+        engine replay the exact same tie-break stream."""
+        self._ctx = ctx
+        if state.round_idx == 0:
+            self.kernel.reset()
+            self.clocks.reset()
+        wall = float(ctx.ledger.wall_clock_s)
+        for kc in range(plan.n_clusters):
+            self.clocks.init(kc, wall)
+        self.clocks.init("gs", wall)
+        self._source = _make_contact_source(ctx, state)
+
+    def begin_round(self, ctx, round_idx: int) -> None:
+        self._ctx, self._round = ctx, round_idx
+        self._t0 = float(ctx.ledger.wall_clock_s)
+        self.inner.begin_round(ctx, round_idx)
+
+    def account_cluster(self, ctx, sel, kc: int) -> float:
+        barrier = self.inner.account_cluster(ctx, sel, kc)
+        self.kernel.push(self._t0 + barrier, TRAIN_DONE, cluster=kc,
+                         barrier=barrier, round=self._round)
+        return barrier
+
+    def merge(self, ctx, model, state, new_models, sels, round_idx):
+        return self.inner.merge(ctx, model, state, new_models, sels,
+                                round_idx)
+
+    def merge_stacked(self, ctx, model, state, new_stacked, sels,
+                      round_idx):
+        if hasattr(self.inner, "merge_stacked"):
+            return self.inner.merge_stacked(ctx, model, state, new_stacked,
+                                            sels, round_idx)
+        return self.inner.merge(ctx, model, state,
+                                model.unstack(new_stacked, len(sels)),
+                                sels, round_idx)
+
+    def advance(self, barriers: list) -> float:
+        dt = self.inner.advance(barriers)
+        t_close = self._t0 + dt
+        # a cluster finishing past the inner policy's round close is a
+        # straggler: mark the overrun on the event timeline (SemiSync is
+        # the only stock inner that produces these)
+        for kc, b in enumerate(barriers):
+            if b > dt:
+                self.kernel.push(t_close, STRAGGLER_TIMEOUT, cluster=kc,
+                                 overrun=b - dt, round=self._round)
+        self.kernel.push(t_close, MERGE_COMMIT, round=self._round,
+                         barrier=dt)
+        if self._source is not None:
+            self._source.extend(self.kernel, t_close)
+        popped = self.kernel.pop_until(t_close)
+        if isinstance(self.inner, SyncPacing):
+            # replayed sync advance: max over the RAW barrier payloads of
+            # this round's TRAIN_DONE pops — the same floats, the same
+            # max, so golden-ledger parity is bit-for-bit by construction
+            dt = max((ev.payload["barrier"] for ev in popped
+                      if ev.kind == TRAIN_DONE), default=0.0)
+        self._drain(popped)
+        return dt
+
+    def _drain(self, popped) -> None:
+        obs = self._ctx.obs if self._ctx is not None else None
+        for ev in popped:
+            if ev.kind in (TRAIN_DONE, STRAGGLER_TIMEOUT) \
+                    and ev.cluster is not None:
+                self.clocks.advance_to(ev.cluster, ev.t)
+            elif ev.kind in (CONTACT_OPEN, CONTACT_CLOSE):
+                self.clocks.advance_to("gs", ev.t)
+            if obs is not None:
+                obs.sim_event(ev.kind, ev.t, cluster=ev.cluster,
+                              sat=ev.sat, seq=ev.seq, **ev.payload)
+
+    # -- checkpointing --------------------------------------------------------
+    def state_dict(self):
+        sd = {"kernel": self.kernel.state_dict(),
+              "clocks": self.clocks.state_dict()}
+        inner_sd = (self.inner.state_dict()
+                    if hasattr(self.inner, "state_dict") else None)
+        if inner_sd:
+            sd.update(inner_sd)     # e.g. SemiSync's {"pending": ...}
+        return sd
+
+    def load_state_dict(self, state) -> None:
+        state = state or {}
+        if "kernel" in state:
+            self.kernel.load_state_dict(state["kernel"])
+        if "clocks" in state:
+            self.clocks.load_state_dict(state["clocks"])
+        if hasattr(self.inner, "load_state_dict"):
+            self.inner.load_state_dict(state if state.get("pending")
+                                       else None)
+
+
+class EventAsyncPacing:
+    """Per-cluster clocks with LISL-availability merge commits."""
+
+    def __init__(self, alpha0: float = 0.6, decay: float = 0.5,
+                 tau_s: Optional[float] = None,
+                 max_merge_wait_s: float = 1800.0, seed: int = 0):
+        if not 0.0 < alpha0 <= 1.0:
+            raise ValueError(f"alpha0 must be in (0, 1], got {alpha0}")
+        self.alpha0, self.decay, self.tau_s = alpha0, decay, tau_s
+        self.max_merge_wait_s = max_merge_wait_s
+        self.kernel = EventQueue(seed)
+        self.clocks = ClockSet()
+        self._last_sync: dict[int, float] = {}
+        self._wall_end: Optional[float] = None
+        self._source: Optional[WindowEventSource] = None
+        self._ctx = None
+        self._state = None
+        self._barriers: list[float] = []
+        self._t0 = 0.0
+        self._dt = 0.0
+        self._round = 0
+
+    # -- engine hooks ---------------------------------------------------------
+    def bind(self, ctx, plan, state) -> None:
+        self._ctx, self._state = ctx, state
+        if state.round_idx == 0:
+            self.kernel.reset()
+            self.clocks.reset()
+            self._last_sync = {}
+            self._wall_end = None
+        wall = float(ctx.ledger.wall_clock_s)
+        for kc in range(plan.n_clusters):
+            self.clocks.init(kc, wall)
+            self._last_sync.setdefault(kc, wall)
+        self._source = _make_contact_source(ctx, state)
+
+    def begin_round(self, ctx, round_idx: int) -> None:
+        self._ctx, self._round = ctx, round_idx
+        self._t0 = float(ctx.ledger.wall_clock_s)
+        if self._wall_end is not None:
+            # time the engine spent in the global cross-cluster mix since
+            # the last commit horizon: every cluster participates in the
+            # exchange, so it elapses on every timeline
+            drift = self._t0 - self._wall_end
+            if drift > 0.0:
+                for name in self.clocks.names():
+                    if isinstance(name, int):
+                        self.clocks.advance_to(name, self.clocks[name]
+                                               + drift)
+        self._barriers = []
+
+    def account_cluster(self, ctx, sel, kc: int) -> float:
+        # energy + own-cluster barrier idle: identical rule to AsyncPacing
+        barrier = _charge_train(ctx, sel, kc)
+        self._barriers.append(barrier)
+        self.kernel.push(self.clocks[kc] + barrier, TRAIN_DONE, cluster=kc,
+                         barrier=barrier, round=self._round)
+        return barrier
+
+    def _merge_wait(self, ctx, kc: int, t: float) -> float:
+        """Sim-seconds until cluster kc's master has a live routed LISL
+        to another master (0.0 for toy envs without the geometry)."""
+        env = ctx.env
+        masters = getattr(self._state, "masters", None)
+        fn = getattr(env, "next_master_contact", None)
+        if fn is None or masters is None or len(masters) <= 1:
+            return 0.0
+        return float(fn(masters, kc, t,
+                        max_wait_s=self.max_merge_wait_s))
+
+    def _merge_weights(self, ctx) -> tuple[np.ndarray, np.ndarray]:
+        """Schedule this generation's transfer/commit events, drain the
+        kernel through the commit horizon, and return (alphas, ranks)."""
+        K = len(self._barriers)
+        if K == 0:
+            self._dt = 0.0
+            self._wall_end = self._t0
+            return np.zeros(0), np.zeros(0, int)
+        commits = np.empty(K)
+        staleness = np.empty(K)
+        for kc in range(K):
+            finish = self.clocks[kc] + self._barriers[kc]
+            wait = self._merge_wait(ctx, kc, finish)
+            if wait > 0.0:
+                # observer sees the SAME float the ledger adds
+                # (bit-exact mirror reconcile, DESIGN.md §10)
+                ctx.ledger.add_wait(wait)
+                if ctx.obs is not None:
+                    ctx.obs.wait(wait, "merge_window", kc)
+            commit = finish + wait
+            self.kernel.push(commit, TRANSFER_DONE, cluster=kc, wait=wait,
+                             round=self._round)
+            self.kernel.push(commit, MERGE_COMMIT, cluster=kc,
+                             staleness=commit - self._last_sync[kc],
+                             round=self._round)
+            commits[kc] = commit
+            staleness[kc] = commit - self._last_sync[kc]
+        horizon = float(commits.max())
+        if self._source is not None:
+            self._source.extend(self.kernel, horizon)
+        ranks = np.full(K, -1, int)
+        order = 0
+        obs = ctx.obs
+        for ev in self.kernel.pop_until(horizon):
+            if ev.kind == MERGE_COMMIT and ev.cluster is not None:
+                ranks[ev.cluster] = order
+                order += 1
+            elif ev.kind in (CONTACT_OPEN, CONTACT_CLOSE):
+                self.clocks.advance_to("gs", ev.t)
+            if obs is not None:
+                obs.sim_event(ev.kind, ev.t, cluster=ev.cluster,
+                              sat=ev.sat, seq=ev.seq, **ev.payload)
+        for kc in range(K):
+            self.clocks.advance_to(kc, float(commits[kc]))
+            self._last_sync[kc] = float(commits[kc])
+        tau = (self.tau_s if self.tau_s is not None
+               else max(float(staleness.mean()), 1e-9))
+        alphas = weights_from_staleness(self.alpha0, self.decay,
+                                        staleness, tau)
+        self._dt = max(0.0, horizon - self._t0)
+        self._wall_end = self._t0 + self._dt
+        return alphas, ranks
+
+    def _observe_merge(self, ctx, alphas, ranks) -> None:
+        if ctx.obs is None:
+            return
+        for kc in range(len(ranks)):
+            ctx.obs.async_merge(kc, int(ranks[kc]), float(alphas[kc]))
+
+    def merge(self, ctx, model, state, new_models, sels, round_idx):
+        K = len(new_models)
+        alphas, ranks = self._merge_weights(ctx)
+        self._observe_merge(ctx, alphas, ranks)
+        old = model.unstack(state.cluster_models, K)
+        merged = [_combine(model.stack([old[kc], new_models[kc]]),
+                           float(alphas[kc]))
+                  for kc in range(K)]
+        return model.stack(merged)
+
+    def merge_stacked(self, ctx, model, state, new_stacked, sels,
+                      round_idx):
+        alphas, ranks = self._merge_weights(ctx)
+        self._observe_merge(ctx, alphas, ranks)
+        al = alphas.astype(np.float32)
+        return jax.tree.map(
+            lambda old, new: ((1.0 - _bcast(al, old)) * old
+                              + _bcast(al, new) * new).astype(old.dtype),
+            state.cluster_models, new_stacked)
+
+    def advance(self, barriers: list) -> float:
+        return self._dt
+
+    # -- checkpointing --------------------------------------------------------
+    def state_dict(self):
+        return {"kernel": self.kernel.state_dict(),
+                "clocks": self.clocks.state_dict(),
+                "last_sync": {str(k): float(v)
+                              for k, v in self._last_sync.items()},
+                "wall_end": self._wall_end}
+
+    def load_state_dict(self, state) -> None:
+        state = state or {}
+        if not state:
+            # None snapshot: clear leftovers from a previous run on this
+            # (reused) policy instance; bind() re-seeds the clocks
+            self.kernel.reset()
+            self.clocks.reset()
+            self._last_sync = {}
+            self._wall_end = None
+            return
+        self.kernel.load_state_dict(state["kernel"])
+        self.clocks.load_state_dict(state["clocks"])
+        self._last_sync = {int(k): float(v)
+                           for k, v in state["last_sync"].items()}
+        self._wall_end = state.get("wall_end")

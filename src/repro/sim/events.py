@@ -1,0 +1,135 @@
+"""Deterministic discrete-event simulation kernel (DESIGN.md §11).
+
+A constellation session is a stream of *events* on the simulated clock:
+contact windows open and close, clusters finish local training, LISL
+transfers complete, stragglers hit their deadline, merges commit. The
+kernel is a heap-ordered queue of such events with a total, reproducible
+order:
+
+    (time, kind priority, seeded tie-break, sequence number)
+
+* **time** — absolute sim seconds (the same clock the ``EnergyLedger``
+  advances).
+* **kind priority** — simultaneous events resolve in physical order:
+  a contact that closes at t is gone before one that opens at t; training
+  that finishes at t precedes the transfer/merge it triggers.
+* **seeded tie-break** — events equal in (time, priority) order by a
+  float drawn from the kernel's own ``np.random.Generator`` at push time,
+  so simultaneous-arrival order (async merge ranks, co-timed contacts)
+  is a reproducible function of the seed rather than of heap internals.
+* **sequence number** — final fallback; also makes the heap entries
+  totally ordered so ``Event`` never needs comparison methods.
+
+The kernel touches neither the engine's host RNG nor its JAX key stream
+(its Generator is private), so attaching it to a session cannot perturb
+selection jitter, cross-agg sampling, or model weights — the basis of
+the sync-replay bit-parity argument in driver.py.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+# Event taxonomy (DESIGN.md §11). String values double as the ``etype``
+# field of the ``sim_event`` trace record (repro.obs.trace).
+CONTACT_CLOSE = "contact_close"
+CONTACT_OPEN = "contact_open"
+TRAIN_DONE = "train_done"
+STRAGGLER_TIMEOUT = "straggler_timeout"
+TRANSFER_DONE = "transfer_done"
+MERGE_COMMIT = "merge_commit"
+
+# Physical resolution order for co-timed events (smaller pops first).
+PRIORITY = {
+    CONTACT_CLOSE: 0,
+    CONTACT_OPEN: 1,
+    TRAIN_DONE: 2,
+    STRAGGLER_TIMEOUT: 3,
+    TRANSFER_DONE: 4,
+    MERGE_COMMIT: 5,
+}
+
+
+@dataclass(frozen=True)
+class Event:
+    """One scheduled occurrence on the sim clock.
+
+    ``cluster`` is a training-cluster index, ``sat`` a raw satellite id
+    (constellation numbering) — either may be None. ``payload`` carries
+    kind-specific floats (e.g. the raw cluster barrier a TRAIN_DONE was
+    scheduled from, so downstream consumers can recover the exact float
+    that entered the ledger instead of re-deriving it from absolute
+    times, which would not be bit-stable).
+    """
+    t: float
+    kind: str
+    cluster: Optional[int] = None
+    sat: Optional[int] = None
+    seq: int = 0
+    payload: dict = field(default_factory=dict)
+
+
+class EventQueue:
+    """Heap-ordered event queue with seeded, bit-reproducible ordering."""
+
+    def __init__(self, seed: int = 0):
+        self._seed = seed
+        self._heap: list = []
+        self._seq = 0
+        self.rng = np.random.default_rng(seed)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def reset(self, seed: Optional[int] = None) -> None:
+        """Drop all pending events and re-seed the tie-break stream —
+        a reused kernel starting a fresh session must replay the exact
+        same order as a brand-new one."""
+        self._heap.clear()
+        self._seq = 0
+        self.rng = np.random.default_rng(self._seed if seed is None
+                                         else seed)
+
+    def push(self, t: float, kind: str, cluster: Optional[int] = None,
+             sat: Optional[int] = None, **payload) -> Event:
+        ev = Event(t=float(t), kind=kind,
+                   cluster=None if cluster is None else int(cluster),
+                   sat=None if sat is None else int(sat),
+                   seq=self._seq, payload=payload)
+        tie = float(self.rng.random())
+        heapq.heappush(self._heap,
+                       (ev.t, PRIORITY.get(kind, 9), tie, ev.seq, ev))
+        self._seq += 1
+        return ev
+
+    def peek_t(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[-1]
+
+    def pop_until(self, t: float) -> list[Event]:
+        """Pop every event with time <= t (inclusive), in kernel order."""
+        out = []
+        while self._heap and self._heap[0][0] <= t:
+            out.append(self.pop())
+        return out
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Tie-break RNG state + sequence counter, JSON-serializable.
+        Pending events are NOT exported: the drivers drain the queue to
+        the round boundary before the engine snapshots pacing state, so
+        a non-empty heap at a checkpoint would be a driver bug."""
+        return {"seq": int(self._seq),
+                "rng": self.rng.bit_generator.state,
+                "pending": len(self._heap)}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._heap.clear()
+        self._seq = int(state["seq"])
+        self.rng = np.random.default_rng(self._seed)
+        self.rng.bit_generator.state = state["rng"]

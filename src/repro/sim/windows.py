@@ -1,0 +1,56 @@
+"""GS contact windows as an event source (DESIGN.md §11).
+
+``WindowEventSource`` turns the precomputed ``WindowTable`` visibility
+grid (constellation/gs.py) into CONTACT_OPEN / CONTACT_CLOSE events on
+the kernel queue. Windows are pulled lazily: each ``extend(queue, t)``
+call advances a per-satellite frontier and pushes only the windows that
+open before ``t``, so a session never scans visibility past its own
+horizon. A window that opens before the frontier but closes after it is
+pushed once with its TRUE close time (``WindowTable.windows`` never
+truncates closes), and the per-satellite ``last close`` watermark drops
+the re-reported ongoing window on the next extension — each physical
+pass becomes exactly one open/close event pair.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.sim.events import CONTACT_CLOSE, CONTACT_OPEN, EventQueue
+
+
+class WindowEventSource:
+    def __init__(self, table, sats, cluster_of: Optional[dict] = None):
+        self.table = table
+        self.sats = [int(s) for s in sats]
+        self.cluster_of = {int(k): int(v)
+                           for k, v in (cluster_of or {}).items()}
+        self._frontier: dict[int, float] = {}
+        self._last_close: dict[int, float] = {}
+
+    def start(self, t0: float) -> None:
+        self._frontier = {s: float(t0) for s in self.sats}
+        self._last_close = {}
+
+    def extend(self, queue: EventQueue, until_t: float) -> int:
+        """Push contact events for every tracked satellite whose window
+        opens before ``until_t``; returns the number of windows pushed."""
+        pushed = 0
+        for s in self.sats:
+            f = self._frontier.get(s, 0.0)
+            if f >= until_t:
+                continue
+            span = max(until_t - f, self.table.step_s)
+            for (t_open, t_close) in self.table.windows(s, f, span):
+                if t_open >= until_t:
+                    break
+                if t_close <= self._last_close.get(s, -1.0):
+                    continue        # ongoing window re-reported at f
+                kc = self.cluster_of.get(s)
+                queue.push(t_open, CONTACT_OPEN, cluster=kc, sat=s,
+                           close_t=t_close)
+                queue.push(t_close, CONTACT_CLOSE, cluster=kc, sat=s,
+                           open_t=t_open)
+                self._last_close[s] = t_close
+                pushed += 1
+            self._frontier[s] = until_t
+        return pushed

@@ -102,6 +102,34 @@ class TestMeasuredCost:
             EngineConfig(c_flop="measured:gemma3-1b/train_4k"))
         assert cfg2.c_flop == cfg.c_flop
 
+    def test_saved_dryrun_row_upgrades_cached_probe(self, tmp_path,
+                                                    monkeypatch):
+        """Regression (ROADMAP's 'gemma cell falls back to the
+        reduced-probe estimate'): once a dry-run row is persisted to
+        results/ (launch.dryrun --json writes there by default), it must
+        replace a previously cached probe ESTIMATE instead of the stale
+        estimate winning forever."""
+        results = tmp_path / "results"
+        results.mkdir()
+        cache_path = results / "measured_cflop.json"
+        monkeypatch.setattr(costs, "_CACHE", str(cache_path))
+        cache_path.write_text(json.dumps(
+            {"gemma3-1b/train_4k": {"c_flop": 1.0,
+                                    "source": "reduced-probe"}}))
+        # no row on disk yet: the cached estimate still answers
+        cfg = resolve_c_flop(
+            EngineConfig(c_flop="measured:gemma3-1b/train_4k"))
+        assert cfg.c_flop == 1.0
+        # a dry run lands; the next resolution upgrades value AND cache
+        row = {"arch": "gemma3-1b", "shape": "train_4k", "status": "ok",
+               "flops": 2.56e16}
+        (results / "dryrun.jsonl").write_text(json.dumps(row) + "\n")
+        cfg2 = resolve_c_flop(
+            EngineConfig(c_flop="measured:gemma3-1b/train_4k"))
+        assert cfg2.c_flop == 2.56e16 / 256
+        cache = json.loads(cache_path.read_text())
+        assert cache["gemma3-1b/train_4k"]["source"] == "dryrun-jsonl"
+
 
 class TestComposability:
     def test_new_variant_is_a_policy_quadruple(self):

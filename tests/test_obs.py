@@ -146,6 +146,35 @@ def test_validate_rejects_malformed():
                validate_event({k: v for k, v in ok.items() if k != "n"}))
 
 
+def test_sim_event_records_validate_and_count():
+    """Kernel events (repro.sim) stream through the same schema'd trace:
+    validated, counted per etype, and the driver-stamped round in the
+    payload wins over the observer's own round cursor."""
+    obs = TracingObserver()
+    obs.round_start(0, 0.0)
+    obs.sim_event("train_done", 12.5, cluster=1, seq=3, barrier=2.5)
+    obs.sim_event("merge_commit", 99.0, round=7, staleness=4.0)
+    evs = [e for e in obs.tracer.events if e["kind"] == "sim_event"]
+    assert [e for ev in evs for e in validate_event(ev)] == []
+    assert evs[0]["round"] == 0 and evs[0]["barrier"] == 2.5
+    assert evs[1]["round"] == 7                   # payload round wins
+    assert obs.metrics.get("sim_events", etype="train_done") == 1.0
+
+
+def test_latency_histogram_single_bin():
+    """Regression: a degenerate (all-identical) latency distribution —
+    every single-round trace — used to render 8 zero-width buckets with
+    the whole mass in the first; now it is one explicit bin."""
+    from repro.obs.report import latency_histogram
+    one = latency_histogram([120.0])
+    assert len(one) == 1 and "all 1 round identical" in one[0]
+    two = latency_histogram([5.0, 5.0])
+    assert len(two) == 1 and "all 2 rounds identical" in two[0]
+    assert latency_histogram([]) == ["  (no rounds)"]
+    spread = latency_histogram([1.0, 2.0, 9.0], bins=8)
+    assert len(spread) == 8                       # normal path unchanged
+
+
 # ---------------------------------------------------------------------------
 # SpanTracer units
 # ---------------------------------------------------------------------------

@@ -370,6 +370,98 @@ class TestScenarioPresets:
 
 
 # ---------------------------------------------------------------------------
+# WindowTable as an event source (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _ref_windows(col, step_s, t0, horizon_s):
+    """Independent reference: unroll the periodic visibility column far
+    enough to cover the query plus one full period, then collect
+    open/close transitions with a plain linear scan. No wrap arithmetic,
+    no frontier state — deliberately the dumbest correct implementation."""
+    import math
+    n = len(col)
+    i0 = math.ceil(t0 / step_s)
+    i_end = math.ceil((t0 + horizon_s) / step_s)
+    unrolled = np.tile(col, (i_end + n) // n + 2)
+    out, open_t = [], None
+    # ongoing pass at an off-grid t0 opens at t0 itself (next_window rule)
+    i_floor = math.floor(t0 / step_s)
+    for j in range(i0, i_end):
+        if unrolled[j] and open_t is None:
+            ongoing = j == i0 and i_floor != i0 and unrolled[i_floor]
+            open_t = float(t0) if ongoing else j * step_s
+        elif not unrolled[j] and open_t is not None:
+            out.append((open_t, j * step_s))
+            open_t = None
+    if open_t is not None:
+        for k in range(i_end, i_end + n):
+            if not unrolled[k]:
+                out.append((open_t, k * step_s))
+                break
+        else:
+            out.append((open_t, (i_end + n) * step_s))
+    return out
+
+
+class TestWindowEventSource:
+    @pytest.fixture(scope="class")
+    def table(self):
+        from repro.constellation.gs import GroundStation, WindowTable
+        from repro.constellation.walker import WalkerDelta
+        wd = WalkerDelta(n_planes=6, sats_per_plane=4)
+        # a short table period forces the wrap-around path quickly
+        return WindowTable(GroundStation(), wd, step_s=30.0,
+                           horizon_s=6000.0)
+
+    def _busy_sat(self, table):
+        counts = table.vis.sum(0)
+        sat = int(np.argmax(counts))
+        assert counts[sat] > 0, "fixture must see at least one pass"
+        assert counts[sat] < table.n_steps, "fixture must also lose it"
+        return sat
+
+    @pytest.mark.parametrize("t0", [0.0, 17.0, 5700.0, 5985.0, 12345.0])
+    def test_windows_match_exact_scan_across_wraparound(self, table, t0):
+        """The indexed walk (ongoing-pass rule, periodic wrap, true
+        closes past the horizon) agrees with a brute-force scan of the
+        unrolled visibility sequence — including t0 near and past the
+        table period, where every query wraps."""
+        sat = self._busy_sat(table)
+        horizon = 4000.0
+        got = table.windows(sat, t0, horizon)
+        want = _ref_windows(table.vis[:, sat], table.step_s, t0, horizon)
+        assert got == want
+        for t_open, t_close in got:
+            assert t0 <= t_open < t0 + horizon
+            assert t_close > t_open             # closes never truncated
+
+    def test_event_source_emits_each_pass_once(self, table):
+        """Streaming the same span in two extend() calls must not
+        re-report the window straddling the split (the ongoing-pass
+        watermark), and open/close events must pair up exactly with the
+        table's windows."""
+        from repro.sim import CONTACT_CLOSE, CONTACT_OPEN, EventQueue
+        from repro.sim.windows import WindowEventSource
+        sat = self._busy_sat(table)
+        want = table.windows(sat, 0.0, 6000.0)
+        # split the span INSIDE the first window so it is ongoing at the
+        # second extend's frontier
+        mid = (want[0][0] + want[0][1]) / 2.0
+        src = WindowEventSource(table, [sat], {sat: 0})
+        q = EventQueue()
+        n1 = src.extend(q, mid)
+        n2 = src.extend(q, 6000.0)
+        assert n1 + n2 == len(want)
+        evs = q.pop_until(float("inf"))
+        opens = [(ev.t, ev.payload["close_t"]) for ev in evs
+                 if ev.kind == CONTACT_OPEN]
+        closes = [ev.t for ev in evs if ev.kind == CONTACT_CLOSE]
+        assert opens == want
+        assert closes == [c for _, c in want]
+        assert all(ev.sat == sat and ev.cluster == 0 for ev in evs)
+
+
+# ---------------------------------------------------------------------------
 # Zero-participant rounds (regression: max() on empty waits / sels[0])
 # ---------------------------------------------------------------------------
 
