@@ -76,12 +76,40 @@ class BenchSetup:
 
 
 def run_crosatfl(setup: BenchSetup, eval_every: bool = True,
-                 observer=None):
+                 observer=None, executor=None):
+    """``executor`` overrides the round execution mode (repro.fl.exec:
+    "sequential" / "batched" / "sharded"); None keeps the default."""
+    import dataclasses
     env, model = setup.build()
-    sess = Session(setup.session_config(model), env, model,
-                   observer=observer)
+    cfg = setup.session_config(model)
+    if executor is not None:
+        cfg = dataclasses.replace(cfg, executor=executor)
+    sess = Session(cfg, env, model, observer=observer)
     eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
     return sess.run(eval_fn=eval_fn)
+
+
+def run_crosatfl_lm(setup: BenchSetup, eval_every: bool = True,
+                    observer=None, executor="batched"):
+    """CroSatFL over the reduced-transformer LM adapter
+    (repro.fl.models_lm.TinyLMFLModel) — the executor layer is
+    model-agnostic, so the same smoke that drives ImageFLModel drives a
+    repro.models transformer through the batched fleet path."""
+    from repro.fl.engine import EngineConfig, make_crosatfl
+    from repro.fl.models_lm import TinyLMFLModel
+
+    model = TinyLMFLModel(setup.n_clients, seed=setup.seed)
+    env = ConstellationEnv(n_clients=setup.n_clients,
+                           n_samples=model.sizes.astype(float),
+                           gpu_fraction=setup.gpu_fraction, seed=setup.seed)
+    cfg = EngineConfig(rounds=setup.rounds, local_epochs=setup.local_epochs,
+                       c_flop=setup.c_flop, model_bits=model.model_bits(),
+                       seed=setup.seed, executor=executor)
+    eng = make_crosatfl(cfg, env, model, k_nbr=setup.k_nbr,
+                        starmask=StarMaskParams(k_max=setup.k_max, m_min=2),
+                        name="CroSatFL-LM", observer=observer)
+    eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
+    return eng.run(eval_fn=eval_fn)
 
 
 def run_baseline(name: str, setup: BenchSetup, eval_every: bool = True,

@@ -1,5 +1,6 @@
-"""Round-engine performance harness: sequential vs device-resident
-batched execution vs batched + Pallas cross-agg mixing (DESIGN.md §9).
+"""Round-engine performance harness over the executor layer: sequential
+vs batched vs sharded execution, plus batched + Pallas cross-agg mixing
+(DESIGN.md §9, §12).
 
     PYTHONPATH=src python -m benchmarks.perf [--smoke] [--sizes a,b]
         [--out PATH] [--trace]
@@ -7,9 +8,13 @@ batched execution vs batched + Pallas cross-agg mixing (DESIGN.md §9).
 Per constellation size, builds ONE (env, model) setup and times a full
 ``RoundEngine.run`` per execution mode (after a 2-round warmup run that
 pays all jit compiles), reporting rounds/sec and local-SGD steps/sec —
-steps counted exactly via a model proxy that records every trained
-participant, so the two paths are compared on identical realized work
-(same seed -> same Skip-One draws).
+steps counted exactly via an ``EngineObserver`` that records every
+selected participant, so all paths are compared on identical realized
+work (same seed -> same Skip-One draws). The sharded mode uses whatever
+devices the process sees — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (CI's perf-smoke
+does) for a real multi-device pod mesh; on one device it degrades to the
+batched path plus placement overhead.
 
 XLA compile events (count + seconds per mode, via
 ``repro.obs.jaxprof.CompileWatcher``) are always captured and land in
@@ -54,31 +59,30 @@ SIZES = {
 }
 SMOKE_SIZES = {"fleet16": dict(n_clients=16, k_max=4, rounds=8)}
 
-MODES = ("sequential", "batched", "batched+pallas-mix")
+MODES = ("sequential", "batched", "sharded", "batched+pallas-mix")
+
+# which Executor each benchmark mode selects (pallas-mix swaps the
+# mixing backend, not the executor)
+MODE_EXECUTOR = {"sequential": "sequential", "batched": "batched",
+                 "sharded": "sharded", "batched+pallas-mix": "batched"}
 
 HW, CHANNELS, WIDTH, PER_CLIENT, EPOCHS = 8, 1, 4, 10, 1
 
 
-class _CountingModel:
-    """Model proxy that counts trained participants (exact steps/sec)."""
+def _make_counter():
+    """Observer that counts selected participants (exact steps/sec) —
+    executor-agnostic, unlike the model proxy it replaced, which only saw
+    the entry points it knew to intercept."""
+    from repro.obs.observer import EngineObserver
 
-    def __init__(self, model):
-        self._m = model
-        self.participants = 0
+    class _CountingObserver(EngineObserver):
+        def __init__(self):
+            self.participants = 0
 
-    def __getattr__(self, name):
-        return getattr(self._m, name)
+        def select(self, round_idx, kc, sel):
+            self.participants += len(sel.participants)
 
-    def cluster_round(self, w, participant_ids, n_samples, epochs, key):
-        self.participants += len(participant_ids)
-        return self._m.cluster_round(w, participant_ids, n_samples, epochs,
-                                     key)
-
-    def fleet_round(self, stacked_w, participant_lists, n_samples, epochs,
-                    cluster_keys, pad_to=None):
-        self.participants += sum(len(p) for p in participant_lists)
-        return self._m.fleet_round(stacked_w, participant_lists, n_samples,
-                                   epochs, cluster_keys, pad_to=pad_to)
+    return _CountingObserver()
 
 
 def build_setup(size_cfg: dict, seed: int = 0):
@@ -102,18 +106,18 @@ def build_setup(size_cfg: dict, seed: int = 0):
     return env, model
 
 
-def make_engine(mode: str, env, model, size_cfg: dict):
+def make_engine(mode: str, env, model, size_cfg: dict, observer=None):
     from repro.core.starmask import StarMaskParams
     from repro.fl.engine import EngineConfig, make_crosatfl
 
     cfg = EngineConfig(rounds=size_cfg["rounds"], local_epochs=EPOCHS,
                        model_bits=model.model_bits(), seed=0,
-                       batched_exec=(mode != "sequential"))
+                       executor=MODE_EXECUTOR[mode])
     return make_crosatfl(
         cfg, env, model,
         starmask=StarMaskParams(k_max=size_cfg["k_max"], m_min=2),
         mixing_backend="pallas" if mode.endswith("pallas-mix") else None,
-        name=f"CroSatFL[{mode}]")
+        name=f"CroSatFL[{mode}]", observer=observer)
 
 
 def time_mode(mode: str, env, model, size_cfg: dict,
@@ -130,8 +134,8 @@ def time_mode(mode: str, env, model, size_cfg: dict,
 
     import jax
 
-    counter = _CountingModel(model)
-    eng = make_engine(mode, env, counter, size_cfg)
+    counter = _make_counter()
+    eng = make_engine(mode, env, model, size_cfg, observer=counter)
     label = f"warmup:{mode}"
     with (watcher.track(label) if watcher is not None
           else contextlib.nullcontext()):

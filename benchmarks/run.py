@@ -38,9 +38,22 @@ def smoke(measured_cost: bool = False, trace: bool = False,
     import numpy as np
 
     from benchmarks.common import (RESULTS, BenchSetup, run_baseline,
-                                   run_crosatfl, run_scenario)
+                                   run_crosatfl, run_crosatfl_lm,
+                                   run_scenario)
     from repro.fl.baselines import BASELINES
     from repro.fl.engine import SCENARIO_NAMES
+
+    # executor-layer cells (repro.fl.exec): CroSatFL through the batched
+    # fleet path on both model families — image CNN and the reduced
+    # repro.models transformer
+    exec_cells = {
+        "CroSatFL-ExecBatched":
+            lambda obs: run_crosatfl(setup, eval_every=False, observer=obs,
+                                     executor="batched"),
+        "CroSatFL-ExecBatchedLM":
+            lambda obs: run_crosatfl_lm(setup, eval_every=False,
+                                        observer=obs, executor="batched"),
+    }
 
     setup = BenchSetup(dataset="eurosat-sim", n_clients=8, n_train=400,
                        n_test=100, rounds=1, local_epochs=1, k_max=4)
@@ -51,7 +64,8 @@ def smoke(measured_cost: bool = False, trace: bool = False,
     if trace:
         os.makedirs(obs_dir, exist_ok=True)
     failures = 0
-    methods = ["CroSatFL"] + list(BASELINES) + list(SCENARIO_NAMES)
+    methods = (["CroSatFL"] + list(BASELINES) + list(SCENARIO_NAMES)
+               + list(exec_cells))
     if only:
         unknown = sorted(set(only) - set(methods))
         if unknown:
@@ -74,6 +88,8 @@ def smoke(measured_cost: bool = False, trace: bool = False,
             elif method in BASELINES:
                 _, ledger, _ = run_baseline(method, setup,
                                             eval_every=False, observer=obs)
+            elif method in exec_cells:
+                _, ledger, _ = exec_cells[method](obs)
             else:
                 _, ledger, _ = run_scenario(method, setup,
                                             eval_every=False, observer=obs)

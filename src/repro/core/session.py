@@ -52,7 +52,8 @@ class SessionConfig:
     c_flop: Any = 5e7                # FLOPs/sample, or "measured:<arch>/<shape>"
     model_bits: float = 8 * 44.7e6   # payload d (ResNet-18 fp32 ~ 44.7 MB)
     seed: int = 0
-    batched_exec: bool = False       # device-resident fleet_round path (§9)
+    batched_exec: bool = False       # DEPRECATED: use executor="batched"
+    executor: Any = None             # round execution mode (repro.fl.exec)
     skip_one: skipone.SkipOneParams = field(default_factory=skipone.SkipOneParams)
     starmask: StarMaskParams = field(default_factory=StarMaskParams)
 
@@ -60,7 +61,8 @@ class SessionConfig:
         return EngineConfig(rounds=self.edge_rounds,
                             local_epochs=self.local_epochs,
                             c_flop=self.c_flop, model_bits=self.model_bits,
-                            seed=self.seed, batched_exec=self.batched_exec)
+                            seed=self.seed, batched_exec=self.batched_exec,
+                            executor=self.executor)
 
 
 class Session:

@@ -5,25 +5,28 @@ fl/baselines.py:
 
     init(key) -> params
     cluster_round(w, participant_ids, n_samples, epochs, key) -> w'
-    fleet_round(stacked_w, participant_lists, n_samples, epochs,
-                cluster_keys) -> stacked_w'   (batched, one compiled call)
     local_update(w, client_id, epochs, key) -> w_i  (single client)
     stack(list[params]) / unstack(stacked, K)
     evaluate(params) -> {"acc": ..., "loss": ...}
+
+plus the pure fleet surface consumed by the batched/sharded executors
+(repro.fl.exec, DESIGN.md §12):
+
+    init_fleet() -> {"x", "y", "m"} device pytree, leading n_clients dim
+    client_step(epochs) -> fn(params, data_slice, key) -> params
 
 Local training is one jitted call per (client, round): data is padded to a
 fixed ``n_pad`` so every client shares a single compilation; padded rows
 are masked out of the loss. SGD-momentum, batch size 10 (paper Table I).
 
-``fleet_round`` is the device-resident batched path (DESIGN.md §9): all
-client data lives on device once, stacked ``(n_clients, n_pad, H, W, C)``
-with row masks, and one jitted call — ``vmap`` over clusters x (padded)
-participants — trains every participant of every cluster and folds the
-per-cluster sample-weighted FedAvg, so per-round host->device traffic is
-just the participant index/weight/key arrays. Per-participant PRNG keys
-are split exactly as the sequential ``cluster_round`` splits them, so the
-two paths differ only by XLA scheduling (tolerance-pinned parity in
-tests/test_batched_exec.py; the sequential path stays the bit-parity
+The device-resident batched path (DESIGN.md §9) stacks all client data on
+device once — ``(n_clients, n_pad, H, W, C)`` with row masks — and
+``repro.fl.exec.batched`` trains every participant of every cluster in
+one nested-vmap call over ``client_step``; ``fleet_round`` remains as a
+thin delegate for callers of the pre-executor entry point. Per-participant
+PRNG keys are split exactly as the sequential ``cluster_round`` splits
+them, so the paths differ only by XLA scheduling (tolerance-pinned parity
+in tests/test_batched_exec.py; the sequential path stays the bit-parity
 reference).
 """
 from __future__ import annotations
@@ -99,43 +102,14 @@ _local_train = jax.jit(_local_train_body,
 _UNROLL_LIMIT = 32
 
 
-@partial(jax.jit, static_argnames=("apply_fn", "epochs", "batch", "lr",
-                                   "momentum", "unroll"))
-def _fleet_round(stacked, X, Y, M, idx, wt, keys, *, apply_fn, epochs: int,
-                 batch: int, lr: float, momentum: float,
-                 unroll: bool = False):
-    """Train every participant of every cluster and FedAvg per cluster in
-    ONE compiled call.
-
-    stacked: (K, ...) pytree of cluster models; X/Y/M: device-resident
-    client data stacked (n_clients, n_pad, ...); idx: (K, P) participant
-    client ids, dummy-padded; wt: (K, P) sample weights (0.0 on dummies,
-    which therefore train but never enter the average); keys: (K, P, 2)
-    per-participant PRNG keys (the sequential path's exact splits).
-    """
-
-    def one(p, i, k):
-        return _local_train_body(p, X[i], Y[i], M[i], k, apply_fn=apply_fn,
-                                 epochs=epochs, batch=batch, lr=lr,
-                                 momentum=momentum, unroll=unroll)
-
-    # inner vmap: participants share their cluster's model (broadcast);
-    # outer vmap: one lane per cluster
-    trained = jax.vmap(jax.vmap(one, in_axes=(None, 0, 0)),
-                       in_axes=(0, 0, 0))(stacked, idx, keys)
-
-    wsum = wt.sum(1)                                    # (K,)
-    keep = wsum > 0.0                                   # zero-participant
-                                                        # clusters keep w_k
-    # guard ONLY the zero-participant rows: clamping with max(wsum, 1)
-    # would silently down-scale clusters whose weight sum is in (0, 1)
-    wn = wt / jnp.where(keep, wsum, 1.0)[:, None]       # (K, P) normalized
-    def avg(old, t):
-        out = jnp.einsum("kp,kp...->k...", wn, t.astype(F32))
-        m = keep.reshape((-1,) + (1,) * (old.ndim - 1))
-        return jnp.where(m, out, old.astype(F32)).astype(old.dtype)
-
-    return jax.tree.map(avg, stacked, trained)
+def _image_client_step(params, data, key, *, apply_fn, epochs: int,
+                       batch: int, lr: float, momentum: float,
+                       unroll: bool = False):
+    """One client's slice of the fleet pytree through local training —
+    the pure ``client_step`` body the batched/sharded executors vmap."""
+    return _local_train_body(params, data["x"], data["y"], data["m"], key,
+                             apply_fn=apply_fn, epochs=epochs, batch=batch,
+                             lr=lr, momentum=momentum, unroll=unroll)
 
 
 @partial(jax.jit, static_argnames=("apply_fn",))
@@ -174,6 +148,7 @@ class ImageFLModel:
         self._yt = jnp.asarray(test.y.astype(np.int32))
         self._pad_cache: dict[int, tuple] = {}   # cid -> device (x, y, m)
         self._fleet_data: Optional[tuple] = None
+        self._step_cache: dict[int, Any] = {}    # epochs -> client_step fn
         self._model_bits: Optional[int] = None
 
     # ---- duck-type ---------------------------------------------------------
@@ -230,42 +205,36 @@ class ImageFLModel:
             updated.append(self.local_update(w, int(cid), epochs, sub))
         return fedavg(updated, np.asarray(n_samples, np.float64))
 
+    # ---- fleet surface (repro.fl.exec, DESIGN.md §12) ----------------------
+    def init_fleet(self):
+        """The executor-facing view of the one-time fleet tensor."""
+        X, Y, M = self._device_data()
+        return {"x": X, "y": Y, "m": M}
+
+    def client_step(self, epochs: int):
+        """Pure per-client train fn; memoized per ``epochs`` so the
+        executor's jit cache keys on a stable identity."""
+        fn = self._step_cache.get(epochs)
+        if fn is None:
+            # fully unrolling is only worth the compile cost while the
+            # total loop count is small (benchmark-scale rounds); the
+            # sequential path keeps rolled loops either way
+            unroll = epochs * (self.n_pad // self.batch) <= _UNROLL_LIMIT
+            fn = partial(_image_client_step, apply_fn=self.apply_fn,
+                         epochs=epochs, batch=self.batch, lr=self.lr,
+                         momentum=self.momentum, unroll=unroll)
+            self._step_cache[epochs] = fn
+        return fn
+
     def fleet_round(self, stacked_w, participant_lists: Sequence[np.ndarray],
                     n_samples: np.ndarray, epochs: int, cluster_keys,
                     pad_to: Optional[int] = None):
-        """Batched cluster_round over ALL clusters: one compiled call.
-
-        ``participant_lists[kc]`` holds cluster kc's participant client ids
-        this round; ``cluster_keys[kc]`` is the same per-cluster key the
-        sequential path would hand to ``cluster_round`` (participant keys
-        are split from it identically). Clusters are padded to ``pad_to``
-        participants (pass the max cluster size for a round-stable compile
-        shape); dummies carry weight 0 and drop out of the average.
-        """
-        K = len(participant_lists)
-        if K == 0:
-            return stacked_w
-        P = max([len(p) for p in participant_lists] + [pad_to or 1, 1])
-        idx = np.zeros((K, P), np.int32)
-        wt = np.zeros((K, P), np.float32)
-        keys = np.zeros((K, P, 2), np.uint32)
-        ns = np.asarray(n_samples)
-        for kc, part in enumerate(participant_lists):
-            n = len(part)
-            if n == 0:
-                continue
-            ids = np.asarray(part, np.int64)
-            idx[kc, :n] = ids
-            wt[kc, :n] = ns[ids]
-            keys[kc, :n] = np.asarray(jax.random.split(cluster_keys[kc], n))
-        X, Y, M = self._device_data()
-        unroll = epochs * (self.n_pad // self.batch) <= _UNROLL_LIMIT
-        with annotate("fleet_round"):
-            return _fleet_round(stacked_w, X, Y, M, jnp.asarray(idx),
-                                jnp.asarray(wt), jnp.asarray(keys),
-                                apply_fn=self.apply_fn, epochs=epochs,
-                                batch=self.batch, lr=self.lr,
-                                momentum=self.momentum, unroll=unroll)
+        """Pre-executor entry point, kept as a thin delegate: the packing
+        and the nested-vmap call now live model-agnostically in
+        ``repro.fl.exec.batched.fleet_round``."""
+        from repro.fl.exec.batched import fleet_round
+        return fleet_round(self, stacked_w, participant_lists, n_samples,
+                           epochs, cluster_keys, pad_to=pad_to)
 
     def stack(self, params_list: list[Any]):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)

@@ -49,11 +49,20 @@ class EngineConfig:
     resolved against compiled-HLO dry-run estimates (launch/measured.py),
     e.g. ``"measured:gemma3-1b/train_4k"``.
 
-    ``batched_exec`` opts into the device-resident batched round path
-    (DESIGN.md §9): cluster models stay stacked end-to-end and one
-    ``model.fleet_round`` call trains every participant of every cluster
-    under ``vmap``. Off by default — the sequential path is the golden
-    bit-parity reference; the batched path is tolerance-pinned against it.
+    ``executor`` selects HOW a round's local training runs
+    (repro.fl.exec, DESIGN.md §12): "sequential" (default; the golden
+    bit-parity reference), "batched" (cluster models stay stacked
+    end-to-end and ONE nested-vmap fleet call trains every participant of
+    every cluster), "sharded" (the batched call with the fleet tensor
+    cluster-pod-sharded across devices via repro.dist), or an
+    ``Executor`` instance. The batched/sharded paths are
+    tolerance-pinned against sequential; the ledger is bit-equal across
+    all three by construction.
+
+    ``batched_exec`` is the DEPRECATED bool predecessor of ``executor``;
+    it still maps to the batched path (with its old silent sequential
+    fallback for models without a fleet surface) via a shim in
+    ``repro.fl.exec.resolve_executor``, which warns.
     """
     rounds: int = 40
     local_epochs: int = 10
@@ -61,6 +70,7 @@ class EngineConfig:
     model_bits: float = 8 * 44.7e6
     seed: int = 0
     batched_exec: bool = False
+    executor: Any = None
 
 
 @dataclass

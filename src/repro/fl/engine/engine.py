@@ -8,17 +8,20 @@ Owns the canonical edge-round skeleton —
             select participants        (SelectionPolicy)
             account train/idle         (PacingPolicy.account_cluster)
             intra-upload               (MixingPolicy.upload)
-        local-train all clusters       (model adapter: sequential
-                                        cluster_round loop, or ONE batched
-                                        fleet_round when cfg.batched_exec)
-        fold fresh cluster models      (PacingPolicy.merge / merge_stacked)
+        local-train all clusters       (Executor.train_clusters: the
+                                        sequential cluster_round loop, ONE
+                                        batched fleet call, or the fleet
+                                        call pod-sharded across devices —
+                                        cfg.executor, repro.fl.exec)
+        fold fresh cluster models      (Executor.fold routes into
+                                        PacingPolicy.merge / merge_stacked)
         mix cluster models             (MixingPolicy.mix)
         advance wall clock             (PacingPolicy.advance), evaluate
 
 — plus session endpoints (bootstrap / finalize) and checkpoint-resume.
 Local training touches neither the ledger nor either RNG stream, so the
-sequential path stays bit-for-bit against the pre-refactor golden pins
-while training itself is free to batch (DESIGN.md §9).
+sequential executor stays bit-for-bit against the pre-refactor golden
+pins while training itself is free to batch or shard (DESIGN.md §9, §12).
 
 Uniform accounting rule (paper §III-B/C), under the default SyncPacing,
 per cluster per round:
@@ -56,6 +59,8 @@ from repro.fl.engine.base import (ClusterPlan, EngineConfig, EngineContext,
 from repro.fl.engine.costs import resolve_c_flop
 from repro.fl.engine.pacing import SyncPacing
 from repro.fl.engine.transport import IdentityCodec, Transport
+from repro.fl.exec import resolve_executor
+from repro.obs.jaxprof import annotate
 
 
 def _hw_penalty(hw: np.ndarray) -> np.ndarray:
@@ -89,6 +94,7 @@ class RoundEngine:
         self.pacing = pacing if pacing is not None else SyncPacing()
         self.observer = observer     # EngineObserver | None (repro.obs)
         self.name = name
+        self.executor = resolve_executor(cfg, model)   # repro.fl.exec
         self.rng = np.random.default_rng(cfg.seed)
         self._plan_cache = None      # (policy_params, plan, post-build key)
 
@@ -113,38 +119,18 @@ class RoundEngine:
     def _train_round(self, state: SessionState, sels, subs, r: int):
         """Train every cluster's participants and fold the pacing merge.
 
-        Sequential path (the golden bit-parity reference): unstack, one
-        jitted ``cluster_round`` per cluster (one ``_local_train`` dispatch
-        per participant), restack via ``PacingPolicy.merge``.
-
-        Batched path (``cfg.batched_exec``): cluster models stay stacked —
-        ONE ``model.fleet_round`` call trains every participant of every
-        cluster under ``vmap`` (per-participant keys split exactly as the
-        sequential path splits them) and ``merge_stacked`` folds the result
-        without ever unstacking. Per-round host->device traffic is the
-        participant index/weight/key arrays.
+        HOW the training runs is the executor's business (repro.fl.exec,
+        DESIGN.md §12): sequential per-cluster ``cluster_round`` calls
+        (the golden bit-parity reference), ONE nested-vmap fleet call, or
+        the fleet call pod-sharded across devices. ``Executor.fold`` owns
+        the ``merge`` / ``merge_stacked`` routing so pacing policies never
+        branch on execution mode.
         """
-        cfg, env, model = self.cfg, self.env, self.model
-        K = len(sels)
-        if self._use_fleet:
-            new_stacked = model.fleet_round(
-                state.cluster_models, [sel.participants for sel in sels],
-                env.n_samples, cfg.local_epochs, subs,
-                pad_to=self._fleet_pad)
-            if hasattr(self.pacing, "merge_stacked"):
-                return self.pacing.merge_stacked(
-                    self._ctx, model, state, new_stacked, sels, r)
-            return self.pacing.merge(
-                self._ctx, model, state, model.unstack(new_stacked, K),
-                sels, r)
-        models_list = model.unstack(state.cluster_models, K)
-        new_models = [
-            model.cluster_round(w_k, sel.participants,
-                                env.n_samples[sel.participants],
-                                cfg.local_epochs, sub)
-            for w_k, sel, sub in zip(models_list, sels, subs)]
-        return self.pacing.merge(self._ctx, model, state, new_models,
-                                 sels, r)
+        ex = self.executor
+        with annotate(f"exec:{ex.name}"):
+            result = ex.train_clusters(self._ctx, self.last_plan, state,
+                                       sels, subs, r)
+        return ex.fold(self._ctx, self.pacing, state, result, sels, r)
 
     # -- session -------------------------------------------------------------
     def run(self, rounds: Optional[int] = None,
@@ -182,14 +168,12 @@ class RoundEngine:
         K = plan.n_clusters
         N_k = np.array([env.n_samples[c].sum() for c in plan.clusters],
                        np.float64)
-        self._use_fleet = cfg.batched_exec and hasattr(model, "fleet_round")
-        # pad every round to the max cluster size: one fleet compilation
-        # serves the whole session regardless of per-round participation
-        self._fleet_pad = max((len(c) for c in plan.clusters), default=1)
+        self.executor.prepare(cfg, env, model, plan)
 
         obs = self.observer
         if obs is not None:
             obs.session_start(self.name, plan, cfg, ledger.wall_clock_s)
+            obs.note("executor", impl=self.executor.name)
 
         if state is None:
             key, sub = jax.random.split(key)

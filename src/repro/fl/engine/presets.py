@@ -119,6 +119,10 @@ def make_scenario(name: str, cfg: EngineConfig, env, model, *,
       CroSatFL-EventAsync  = CroSatFL x event-driven async: true
                              per-cluster clocks, merges fire on LISL
                              availability, sim-time staleness weights
+      CroSatFL-EventAsyncGeo = EventAsync with commits additionally
+                             staggered by the slant-range transfer
+                             duration over the master-to-master LISL
+                             (``geom_transfer=True``)
 
     ``**kw`` feeds the swapped policy's constructor (e.g. ``quantile``,
     ``alpha0``, ``consensus_eps``, ``cpu_threshold``).
@@ -137,18 +141,22 @@ def make_scenario(name: str, cfg: EngineConfig, env, model, *,
     if name == "CroSatFL-HeteroCodec":
         return make_crosatfl(cfg, env, model,
                              codec=HardwareAwareCodecMap(**kw), **base)
-    if name in ("CroSatFL-EventSync", "CroSatFL-EventAsync"):
+    if name in ("CroSatFL-EventSync", "CroSatFL-EventAsync",
+                "CroSatFL-EventAsyncGeo"):
         # lazy import: repro.sim.driver imports this package's pacing
         # module, so a top-level import here would be circular
         from repro.sim.driver import EventAsyncPacing, EventDrivenPacing
         kw.setdefault("seed", cfg.seed)
-        pacing = (EventDrivenPacing(**kw)
-                  if name == "CroSatFL-EventSync"
-                  else EventAsyncPacing(**kw))
+        if name == "CroSatFL-EventSync":
+            pacing = EventDrivenPacing(**kw)
+        elif name == "CroSatFL-EventAsyncGeo":
+            pacing = EventAsyncPacing(geom_transfer=True, **kw)
+        else:
+            pacing = EventAsyncPacing(**kw)
         return make_crosatfl(cfg, env, model, pacing=pacing, **base)
     raise KeyError(f"unknown scenario {name!r}")
 
 
 SCENARIO_NAMES = ("CroSatFL-SemiSync", "CroSatFL-Async", "CroSatFL-Gossip",
                   "CroSatFL-HeteroCodec", "CroSatFL-EventSync",
-                  "CroSatFL-EventAsync")
+                  "CroSatFL-EventAsync", "CroSatFL-EventAsyncGeo")

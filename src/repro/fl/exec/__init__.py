@@ -1,0 +1,13 @@
+"""Pluggable round-execution layer (DESIGN.md §12): HOW local training
+runs — sequential (golden bit-parity reference), batched (one
+nested-vmap fleet call over any adapter with the pure ``init_fleet`` /
+``client_step`` surface), or sharded (the fleet tensor cluster-pod-wise
+across devices via ``repro.dist``). Selected by ``EngineConfig.executor``.
+"""
+from repro.fl.exec.base import (Executor, has_fleet_surface,  # noqa: F401
+                                resolve_executor)
+from repro.fl.exec.batched import BatchedExecutor, fleet_round  # noqa: F401
+from repro.fl.exec.sequential import SequentialExecutor  # noqa: F401
+from repro.fl.exec.sharded import ShardedExecutor  # noqa: F401
+
+EXECUTOR_NAMES = ("sequential", "batched", "sharded")

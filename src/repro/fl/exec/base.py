@@ -1,0 +1,112 @@
+"""Executor protocol: HOW a round's local training executes (DESIGN.md §12).
+
+The RoundEngine decides WHAT trains each round (selection, pacing,
+mixing); an ``Executor`` decides HOW — one jitted call per participant
+(sequential), one nested-vmap call for the whole fleet (batched), or the
+batched call with the stacked fleet tensor sharded cluster-pod-wise
+across devices (sharded). The contract:
+
+    prepare(cfg, env, model, plan)
+        Once per run(), after the cluster plan is built: validate the
+        model surface and derive session-stable shapes (the participant
+        pad width).
+
+    train_clusters(ctx, plan, state, sels, subs, round_idx)
+        Train every cluster's participants. Returns EITHER a list of
+        per-cluster models (sequential) OR a stacked (K, ...) pytree
+        (batched/sharded). Must not touch the ledger or either RNG
+        stream — that is what keeps the ledger bit-identical across
+        executors (pinned in tests/test_batched_exec.py).
+
+    fold(ctx, pacing, state, result, sels, round_idx)
+        Route the result into the pacing merge. This is the ONE place
+        that knows whether the result is stacked or listed, so pacing
+        policies never branch on execution mode: a stacked result goes
+        to ``pacing.merge_stacked`` (falling back to unstack +
+        ``merge``), a listed result to ``pacing.merge``.
+
+Adapters opt into the batched/sharded executors by exposing the pure
+fleet surface (DESIGN.md §12; ImageFLModel and TinyLMFLModel implement
+it):
+
+    init_fleet() -> pytree of device arrays, leading dim n_clients
+        (all client training data, padded per client, built once)
+    client_step(epochs) -> fn(params, data_slice, key) -> params
+        (pure jit-stable callable; MUST return the same object for the
+        same ``epochs`` so the executor's jit cache keys on identity)
+
+``EngineConfig.executor`` selects by name ("sequential" / "batched" /
+"sharded") or passes an instance; the legacy ``batched_exec`` bool maps
+through ``resolve_executor`` with a DeprecationWarning.
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def has_fleet_surface(model) -> bool:
+    """True when ``model`` exposes the pure fleet surface consumed by the
+    batched/sharded executors."""
+    return hasattr(model, "init_fleet") and hasattr(model, "client_step")
+
+
+class Executor:
+    """Shared fold routing + no-op prepare; subclasses implement
+    ``train_clusters``."""
+
+    name = "executor"
+
+    def prepare(self, cfg, env, model, plan) -> None:
+        """Per-run() setup after the cluster plan exists."""
+
+    def train_clusters(self, ctx, plan, state, sels, subs, round_idx):
+        raise NotImplementedError
+
+    def fold(self, ctx, pacing, state, result, sels, round_idx):
+        """Route stacked-vs-listed results into the pacing merge (the
+        routing that used to live inline in RoundEngine._train_round)."""
+        model = ctx.model
+        if isinstance(result, list):
+            return pacing.merge(ctx, model, state, result, sels, round_idx)
+        if hasattr(pacing, "merge_stacked"):
+            return pacing.merge_stacked(ctx, model, state, result, sels,
+                                        round_idx)
+        return pacing.merge(ctx, model, state,
+                            model.unstack(result, len(sels)), sels,
+                            round_idx)
+
+
+def resolve_executor(cfg, model) -> Executor:
+    """``EngineConfig.executor`` -> Executor instance.
+
+    Accepts an executor name, an instance, or None. The legacy
+    ``cfg.batched_exec`` bool is honored as a deprecation shim with its
+    exact old semantics: batched when the model has a fleet path, silent
+    sequential fallback otherwise (an EXPLICIT executor="batched" with no
+    fleet surface raises instead, in BatchedExecutor.prepare).
+    """
+    # local import: the implementations import jax-heavy helpers
+    from repro.fl.exec.batched import BatchedExecutor
+    from repro.fl.exec.sequential import SequentialExecutor
+    from repro.fl.exec.sharded import ShardedExecutor
+
+    registry = {"sequential": SequentialExecutor,
+                "batched": BatchedExecutor,
+                "sharded": ShardedExecutor}
+    spec = getattr(cfg, "executor", None)
+    if spec is None and getattr(cfg, "batched_exec", False):
+        warnings.warn(
+            "EngineConfig.batched_exec is deprecated; use "
+            "executor='batched' (or 'sharded') instead",
+            DeprecationWarning, stacklevel=3)
+        fleet_ok = has_fleet_surface(model) or hasattr(model, "fleet_round")
+        spec = "batched" if fleet_ok else "sequential"
+    if spec is None:
+        spec = "sequential"
+    if isinstance(spec, str):
+        try:
+            return registry[spec]()
+        except KeyError:
+            raise KeyError(f"unknown executor {spec!r}; "
+                           f"choose from {sorted(registry)}") from None
+    return spec

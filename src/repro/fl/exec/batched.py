@@ -1,0 +1,151 @@
+"""BatchedExecutor: model-agnostic device-resident fleet execution
+(DESIGN.md §9, §12).
+
+The nested-vmap round — formerly ``ImageFLModel.fleet_round`` /
+``fl.client._fleet_round`` — lifted into an executor that works for ANY
+adapter exposing the pure fleet surface (``init_fleet`` +
+``client_step``): ONE jitted call trains every participant of every
+cluster (outer vmap over clusters, inner over padded participants) and
+folds the per-cluster sample-weighted FedAvg. Per-participant PRNG keys
+are split exactly as the sequential path splits them, so the two
+executors differ only by XLA scheduling (ledger bit-equal, weights
+tolerance-pinned in tests/test_batched_exec.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.exec.base import Executor, has_fleet_surface
+from repro.obs.jaxprof import annotate
+
+F32 = jnp.float32
+
+
+@partial(jax.jit, static_argnames=("step_fn", "spmd_axis"))
+def _fleet_train(stacked, data, idx, wt, keys, *, step_fn, spmd_axis=None):
+    """Train every participant of every cluster and FedAvg per cluster in
+    ONE compiled call.
+
+    stacked: (K, ...) pytree of cluster models; data: fleet pytree with
+    leading n_clients dim (``model.init_fleet()``); idx: (K, P)
+    participant client ids, dummy-padded; wt: (K, P) sample weights (0.0
+    on dummies, which therefore train but never enter the average);
+    keys: (K, P, 2) per-participant PRNG keys (the sequential path's
+    exact splits); step_fn: the adapter's pure
+    ``(params, data_slice, key) -> params`` (static: jit caches on its
+    identity, which is why ``client_step`` must memoize); spmd_axis: mesh
+    axis name carrying the cluster dim (ShardedExecutor passes "pod" so
+    in-step sharding constraints compose with the pod layout).
+    """
+
+    def one(p, i, k):
+        return step_fn(p, jax.tree.map(lambda a: a[i], data), k)
+
+    # inner vmap: participants share their cluster's model (broadcast);
+    # outer vmap: one lane per cluster
+    trained = jax.vmap(jax.vmap(one, in_axes=(None, 0, 0)),
+                       in_axes=(0, 0, 0),
+                       spmd_axis_name=spmd_axis)(stacked, idx, keys)
+
+    wsum = wt.sum(1)                                    # (K,)
+    keep = wsum > 0.0                                   # zero-participant
+                                                        # clusters keep w_k
+    # guard ONLY the zero-participant rows: clamping with max(wsum, 1)
+    # would silently down-scale clusters whose weight sum is in (0, 1)
+    wn = wt / jnp.where(keep, wsum, 1.0)[:, None]       # (K, P) normalized
+
+    def avg(old, t):
+        out = jnp.einsum("kp,kp...->k...", wn, t.astype(F32))
+        m = keep.reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(m, out, old.astype(F32)).astype(old.dtype)
+
+    return jax.tree.map(avg, stacked, trained)
+
+
+def fleet_round(model, stacked_w, participant_lists: Sequence[np.ndarray],
+                n_samples: np.ndarray, epochs: int, cluster_keys,
+                pad_to: Optional[int] = None, place=None, spmd_axis=None):
+    """Batched cluster_round over ALL clusters of any fleet-surface model.
+
+    ``participant_lists[kc]`` holds cluster kc's participant client ids
+    this round; ``cluster_keys[kc]`` is the same per-cluster key the
+    sequential path hands to ``cluster_round`` (participant keys are
+    split from it identically). Clusters are padded to ``pad_to``
+    participants (pass the max cluster size for a round-stable compile
+    shape); dummies carry weight 0 and drop out of the average.
+    ``place`` (ShardedExecutor) may re-place every operand on a mesh
+    before the call.
+    """
+    K = len(participant_lists)
+    if K == 0:
+        return stacked_w
+    P = max([len(p) for p in participant_lists] + [pad_to or 1, 1])
+    idx = np.zeros((K, P), np.int32)
+    wt = np.zeros((K, P), np.float32)
+    keys = np.zeros((K, P, 2), np.uint32)
+    ns = np.asarray(n_samples)
+    for kc, part in enumerate(participant_lists):
+        n = len(part)
+        if n == 0:
+            continue
+        ids = np.asarray(part, np.int64)
+        idx[kc, :n] = ids
+        wt[kc, :n] = ns[ids]
+        keys[kc, :n] = np.asarray(jax.random.split(cluster_keys[kc], n))
+    data = model.init_fleet()
+    step_fn = model.client_step(epochs)
+    operands = (stacked_w, data, jnp.asarray(idx), jnp.asarray(wt),
+                jnp.asarray(keys))
+    if place is not None:
+        operands = place(*operands)
+    with annotate("fleet_round"):
+        return _fleet_train(*operands, step_fn=step_fn,
+                            spmd_axis=spmd_axis)
+
+
+class BatchedExecutor(Executor):
+    name = "batched"
+
+    def __init__(self):
+        self._pad = 1
+        self._legacy = False
+
+    def prepare(self, cfg, env, model, plan) -> None:
+        # pad every round to the max cluster size: one fleet compilation
+        # serves the whole session regardless of per-round participation
+        self._pad = max((len(c) for c in plan.clusters), default=1)
+        # models predating the fleet surface (or wrapping proxies) may
+        # only expose the bespoke fleet_round entry point
+        self._legacy = (not has_fleet_surface(model)
+                        and hasattr(model, "fleet_round"))
+        if not self._legacy and not has_fleet_surface(model):
+            raise TypeError(
+                f"executor {self.name!r} needs a model with the fleet "
+                "surface (init_fleet + client_step) or a legacy "
+                f"fleet_round; {type(model).__name__} has neither — use "
+                "executor='sequential'")
+
+    def train_clusters(self, ctx, plan, state, sels, subs, round_idx):
+        cfg, env, model = ctx.cfg, ctx.env, ctx.model
+        parts = [sel.participants for sel in sels]
+        if self._legacy:
+            return model.fleet_round(state.cluster_models, parts,
+                                     env.n_samples, cfg.local_epochs, subs,
+                                     pad_to=self._pad)
+        return fleet_round(model, state.cluster_models, parts,
+                           env.n_samples, cfg.local_epochs, subs,
+                           pad_to=self._pad, place=self._place(),
+                           spmd_axis=self._spmd_axis())
+
+    def _place(self):
+        """Operand placement hook; None = leave on the default device."""
+        return None
+
+    def _spmd_axis(self):
+        """Mesh axis carrying the cluster dim; None = unsharded vmap."""
+        return None

@@ -1,0 +1,25 @@
+"""SequentialExecutor: the golden bit-parity reference (DESIGN.md §12).
+
+The exact per-cluster loop extracted from the pre-executor
+``RoundEngine._train_round``: unstack, one jitted ``cluster_round`` per
+cluster (one ``_local_train`` dispatch per participant), return the list
+for ``PacingPolicy.merge``. Any model implementing the engine duck-type
+(``cluster_round``/``stack``/``unstack``) runs here; the golden ledgers
+and weights in tests/golden_engine.json are pinned against this path.
+"""
+from __future__ import annotations
+
+from repro.fl.exec.base import Executor
+
+
+class SequentialExecutor(Executor):
+    name = "sequential"
+
+    def train_clusters(self, ctx, plan, state, sels, subs, round_idx):
+        cfg, env, model = ctx.cfg, ctx.env, ctx.model
+        models_list = model.unstack(state.cluster_models, len(sels))
+        return [
+            model.cluster_round(w_k, sel.participants,
+                                env.n_samples[sel.participants],
+                                cfg.local_epochs, sub)
+            for w_k, sel, sub in zip(models_list, sels, subs)]

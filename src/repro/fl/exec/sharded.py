@@ -1,0 +1,100 @@
+"""ShardedExecutor: the batched fleet call, cluster-pod-sharded across
+devices (DESIGN.md §12).
+
+CroSatFL's cluster = pod mapping (paper §IV, repro.dist): the stacked
+(K, ...) cluster models and the (K, P) participant index/weight/key
+arrays shard their leading K dim over a 1-axis ("pod",) mesh via
+``repro.dist.sharding.param_specs(cluster_dim=True)``; the fleet data
+tensor is replicated (every pod holds every client's shard — the
+dense-constellation regime has tiny per-satellite data and hundreds of
+lanes). The outer cluster vmap carries ``spmd_axis_name="pod"`` and the
+call runs under the ``repro.dist.ctx`` rule context, so adapters with
+model-side ``shard()`` call sites (the LM adapter) trace their
+activation constraints against the same mesh.
+
+Pod width = the largest divisor of K that fits the device count, so the
+executor degrades to BatchedExecutor semantics on one device and uses
+the whole host mesh under ``XLA_FLAGS=--xla_force_host_platform_device_
+count=8`` (CI's perf-smoke cell; subprocess-validated in
+tests/sharded_check.py). The ledger is host-side accounting and stays
+bit-equal to the batched executor's by construction; weights are
+tolerance-pinned.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.ctx import use_rules
+from repro.dist.sharding import activation_rules, param_specs
+from repro.fl.exec.batched import BatchedExecutor
+
+
+def _pod_size(n_clusters: int, n_devices: int) -> int:
+    """Largest divisor of K that the device count can host (the pod axis
+    must divide the leading cluster dim or param_specs drops it)."""
+    for pod in range(min(max(n_clusters, 1), n_devices), 0, -1):
+        if n_clusters % pod == 0:
+            return pod
+    return 1
+
+
+class ShardedExecutor(BatchedExecutor):
+    name = "sharded"
+
+    def __init__(self):
+        super().__init__()
+        self.mesh = None
+        self._specs = None
+        self._data_key = None            # id() of the placed fleet pytree
+        self._data_placed = None
+        self.last_placement = None       # leaf sharding, for introspection
+
+    def prepare(self, cfg, env, model, plan) -> None:
+        super().prepare(cfg, env, model, plan)
+        if self._legacy:
+            raise TypeError(
+                "executor 'sharded' requires the fleet surface (init_fleet "
+                f"+ client_step); {type(model).__name__} only has the "
+                "legacy fleet_round")
+        devs = jax.devices()
+        pod = _pod_size(plan.n_clusters, len(devs))
+        if self.mesh is None or self.mesh.shape["pod"] != pod:
+            self.mesh = Mesh(np.array(devs[:pod]), ("pod",))
+            self._specs = None
+            self._data_key = self._data_placed = None
+
+    def train_clusters(self, ctx, plan, state, sels, subs, round_idx):
+        # activation rules trace against this mesh inside the fleet call;
+        # cluster_vmapped: the outer vmap inserts "pod" itself
+        rules = activation_rules(self.mesh, cluster_vmapped=True, tp=False)
+        with use_rules(self.mesh, rules):
+            return super().train_clusters(ctx, plan, state, sels, subs,
+                                          round_idx)
+
+    def _spmd_axis(self):
+        return "pod"
+
+    def _place(self):
+        return self._place_operands
+
+    def _place_operands(self, stacked, data, idx, wt, keys):
+        mesh = self.mesh
+        if self._specs is None:
+            self._specs = param_specs(stacked, mesh, cluster_dim=True,
+                                      fsdp=False, tp=False)
+        stacked = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            stacked, self._specs)
+        leaves = jax.tree.leaves(data)
+        if leaves and self._data_key != id(leaves[0]):
+            # fleet data is session-constant: replicate it once per mesh
+            rep = NamedSharding(mesh, P())
+            self._data_placed = jax.tree.map(
+                lambda x: jax.device_put(x, rep), data)
+            self._data_key = id(leaves[0])
+        pod = NamedSharding(mesh, P("pod"))
+        idx, wt, keys = (jax.device_put(a, pod) for a in (idx, wt, keys))
+        self.last_placement = jax.tree.leaves(stacked)[0].sharding
+        return stacked, self._data_placed, idx, wt, keys

@@ -1,0 +1,158 @@
+"""TinyLMFLModel: a repro.models transformer behind the FL model
+duck-type AND the pure fleet surface (DESIGN.md §12).
+
+Proves the executor layer is model-agnostic: the same engine/session
+code that drives ``ImageFLModel`` drives a (reduced) ``stablelm-3b``
+language model through the sequential, batched, and sharded executors —
+``benchmarks.run --smoke`` exercises the batched cell.
+
+Task: synthetic cyclic-arithmetic next-token prediction. Client ``c``'s
+sequences step through the vocab with stride ``1 + (c % 7)`` —
+``tokens[t] = (s0 + t * stride) % V`` — so the data is non-IID across
+clients (each shard teaches a different stride) while being learnable by
+a tiny model and wrapping cleanly at any position. Labels are the
+shifted-by-one tokens; held-out evaluation predicts the last position
+via ``lm_prefill``.
+
+Local training is full-batch SGD-momentum over the client's padded
+shard: ``lm_loss``'s ``batch["weights"]`` zero-weights pad rows and the
+loss mean renormalizes, so padded and unpadded shards optimize the same
+objective. The per-client step is one epochs-long ``lax.scan`` — pure
+``(params, data_slice, key) -> params`` (the key is accepted for surface
+parity and unused: full-batch GD draws nothing), memoized per ``epochs``
+so the executors' jit caches key on a stable identity.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.fl.client import fedavg
+from repro.models.transformer import lm_loss, lm_params, lm_prefill
+from repro.optim.optimizers import sgd_init, sgd_update
+
+
+def _lm_client_step(params, data, key, *, cfg, epochs: int, lr: float,
+                    momentum: float):
+    """One client's padded shard through ``epochs`` full-batch SGD steps."""
+    del key  # surface parity: full-batch GD is deterministic
+    batch = {"tokens": data["tokens"], "labels": data["labels"],
+             "weights": data["w"]}
+
+    def step(carry, _):
+        p, m = carry
+        g = jax.grad(lambda q: lm_loss(q, batch, cfg, remat=False))(p)
+        p, m = sgd_update(p, g, m, lr=lr, momentum=momentum)
+        return (p, m), ()
+
+    (params, _), _ = jax.lax.scan(step, (params, sgd_init(params)), None,
+                                  length=epochs)
+    return params
+
+
+class TinyLMFLModel:
+    """Reduced-transformer FL adapter over synthetic stride sequences.
+
+    Implements the engine model duck-type (init / cluster_round /
+    local_update / stack / unstack / evaluate / model_bits) plus the
+    fleet surface (init_fleet / client_step) so every executor accepts
+    it. Float32 end-to-end: CPU FL parity runs drown in bf16 noise.
+    """
+
+    def __init__(self, n_clients: int, n_per_client: int = 8, seq: int = 16,
+                 arch: str = "stablelm-3b", lr: float = 0.05,
+                 momentum: float = 0.9, seed: int = 0,
+                 sizes: Optional[Sequence[int]] = None, n_test: int = 32):
+        self.cfg = get_config(arch).reduced(dtype=jnp.float32,
+                                            max_positions=max(seq, 8))
+        self.n_clients, self.n_pad, self.seq = n_clients, n_per_client, seq
+        self.lr, self.momentum = lr, momentum
+        rng = np.random.default_rng(seed)
+        V = self.cfg.vocab_size
+        sizes = list(sizes) if sizes is not None \
+            else [n_per_client] * n_clients
+        if len(sizes) != n_clients or max(sizes) > n_per_client:
+            raise ValueError("sizes must give <= n_per_client per client")
+        self.sizes = np.asarray(sizes, np.int64)
+
+        def gen(n, stride):
+            s0 = rng.integers(0, V, size=(n, 1))
+            t = np.arange(seq + 1)[None, :]
+            path = (s0 + t * stride) % V
+            return path[:, :-1].astype(np.int32), path[:, 1:].astype(np.int32)
+
+        toks = np.zeros((n_clients, n_per_client, seq), np.int32)
+        labs = np.zeros((n_clients, n_per_client, seq), np.int32)
+        wts = np.zeros((n_clients, n_per_client), np.float32)
+        for c in range(n_clients):
+            n = int(self.sizes[c])
+            toks[c, :n], labs[c, :n] = gen(n, 1 + c % 7)
+            wts[c, :n] = 1.0
+        self._fleet = {"tokens": jnp.asarray(toks),
+                       "labels": jnp.asarray(labs),
+                       "w": jnp.asarray(wts)}
+        # held-out: every stride clients train on, fresh start tokens
+        tt, tl = zip(*(gen(max(n_test // max(n_clients, 1), 1), 1 + c % 7)
+                       for c in range(n_clients)))
+        self._test = {"tokens": jnp.asarray(np.concatenate(tt)),
+                      "labels": jnp.asarray(np.concatenate(tl))}
+        self._step_cache: dict[int, Any] = {}   # epochs -> client_step fn
+        self._jit_cache: dict[int, Any] = {}    # epochs -> jitted step fn
+        self._model_bits: Optional[int] = None
+
+    # ---- duck-type ---------------------------------------------------------
+    def init(self, key):
+        return lm_params(self.cfg, key)
+
+    def local_update(self, w, cid: int, epochs: int, key):
+        fn = self._jit_cache.get(epochs)
+        if fn is None:
+            fn = jax.jit(self.client_step(epochs))
+            self._jit_cache[epochs] = fn
+        data = jax.tree.map(lambda a: a[cid], self._fleet)
+        return fn(w, data, key)
+
+    def cluster_round(self, w, participant_ids, n_samples, epochs: int, key):
+        if len(participant_ids) == 0:
+            return w
+        updated = []
+        for cid, sub in zip(participant_ids,
+                            jax.random.split(key, len(participant_ids))):
+            updated.append(self.local_update(w, int(cid), epochs, sub))
+        return fedavg(updated, np.asarray(n_samples, np.float64))
+
+    # ---- fleet surface (repro.fl.exec, DESIGN.md §12) ----------------------
+    def init_fleet(self):
+        return self._fleet
+
+    def client_step(self, epochs: int):
+        fn = self._step_cache.get(epochs)
+        if fn is None:
+            fn = partial(_lm_client_step, cfg=self.cfg, epochs=epochs,
+                         lr=self.lr, momentum=self.momentum)
+            self._step_cache[epochs] = fn
+        return fn
+
+    def stack(self, params_list: list[Any]):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+    def unstack(self, stacked, k: int):
+        return [jax.tree.map(lambda x: x[i], stacked) for i in range(k)]
+
+    def evaluate(self, params) -> dict:
+        logits = lm_prefill(params, self._test, self.cfg)
+        acc = (logits.argmax(-1) == self._test["labels"][:, -1]).mean()
+        loss = lm_loss(params, self._test, self.cfg, remat=False)
+        return {"acc": float(acc), "loss": float(loss)}
+
+    def model_bits(self, key=None) -> int:
+        if self._model_bits is None:
+            p = self.init(key if key is not None else jax.random.PRNGKey(0))
+            self._model_bits = int(sum(l.size * 4
+                                       for l in jax.tree.leaves(p)) * 8)
+        return self._model_bits

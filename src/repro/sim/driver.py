@@ -39,6 +39,16 @@ Two pacing policies built on ``repro.sim.events``:
     pays. Cross-cluster mixing time (charged globally by the engine)
     re-enters every timeline at the next ``begin_round`` since all
     clusters take part in the exchange.
+
+    ``geom_transfer=True`` (the "CroSatFL-EventAsyncGeo" preset)
+    additionally staggers each TRANSFER_DONE by the model's actual
+    transfer duration over the shortest master-to-master LISL at the
+    availability epoch — ``model_bits / lisl_rate`` serialization plus
+    detoured ``WalkerDelta.pair_distance`` propagation — so commits (and
+    staleness, ranks, the wall horizon) spread by link geometry instead
+    of landing at the instant the link opens. The duration shifts the
+    commit time only; the ledger's comm accounting stays with the
+    engine's mixing policy (no double charge).
 """
 from __future__ import annotations
 
@@ -189,11 +199,13 @@ class EventAsyncPacing:
 
     def __init__(self, alpha0: float = 0.6, decay: float = 0.5,
                  tau_s: Optional[float] = None,
-                 max_merge_wait_s: float = 1800.0, seed: int = 0):
+                 max_merge_wait_s: float = 1800.0, seed: int = 0,
+                 geom_transfer: bool = False):
         if not 0.0 < alpha0 <= 1.0:
             raise ValueError(f"alpha0 must be in (0, 1], got {alpha0}")
         self.alpha0, self.decay, self.tau_s = alpha0, decay, tau_s
         self.max_merge_wait_s = max_merge_wait_s
+        self.geom_transfer = geom_transfer
         self.kernel = EventQueue(seed)
         self.clocks = ClockSet()
         self._last_sync: dict[int, float] = {}
@@ -254,6 +266,26 @@ class EventAsyncPacing:
         return float(fn(masters, kc, t,
                         max_wait_s=self.max_merge_wait_s))
 
+    def _transfer_duration(self, ctx, kc: int, t: float) -> float:
+        """Sim-seconds to push one model over the shortest master-to-master
+        LISL at epoch ``t``: serialization (model_bits / lisl_rate) plus
+        detoured slant-range propagation from ``WalkerDelta.pair_distance``
+        (0.0 for toy envs without the geometry)."""
+        env = ctx.env
+        masters = getattr(self._state, "masters", None)
+        const = getattr(env, "constellation", None)
+        sat_ids = getattr(env, "sat_ids", None)
+        if const is None or sat_ids is None or masters is None \
+                or len(masters) <= 1:
+            return 0.0
+        si = int(sat_ids[masters[kc]])
+        d = min(float(const.pair_distance(si, int(sat_ids[mj]), t))
+                for j, mj in enumerate(masters) if j != kc)
+        d *= getattr(env, "detour", 1.0)
+        lp = env.link_params
+        from repro.core.energy import t_lisl
+        return float(t_lisl(ctx.cfg.model_bits, lp.lisl_rate, d, lp))
+
     def _merge_weights(self, ctx) -> tuple[np.ndarray, np.ndarray]:
         """Schedule this generation's transfer/commit events, drain the
         kernel through the commit horizon, and return (alphas, ranks)."""
@@ -273,9 +305,18 @@ class EventAsyncPacing:
                 ctx.ledger.add_wait(wait)
                 if ctx.obs is not None:
                     ctx.obs.wait(wait, "merge_window", kc)
-            commit = finish + wait
-            self.kernel.push(commit, TRANSFER_DONE, cluster=kc, wait=wait,
-                             round=self._round)
+            avail = finish + wait
+            # transfer payload: extra keys only on the geom path so
+            # pre-existing EventAsync traces stay byte-identical
+            tp = {"wait": wait}
+            if self.geom_transfer:
+                dur = self._transfer_duration(ctx, kc, avail)
+                tp["transfer_s"] = dur
+            else:
+                dur = 0.0
+            commit = avail + dur
+            self.kernel.push(commit, TRANSFER_DONE, cluster=kc, round=self._round,
+                             **tp)
             self.kernel.push(commit, MERGE_COMMIT, cluster=kc,
                              staleness=commit - self._last_sync[kc],
                              round=self._round)

@@ -1,0 +1,72 @@
+"""Subprocess body for TestShardedMultiDevice (test_batched_exec.py).
+
+Run under a forced 8-device host platform:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+        PYTHONPATH=src:tests python tests/sharded_check.py
+
+Validates, on the golden fixture, that the sharded executor (a) builds a
+real multi-device pod mesh, (b) actually places the stacked cluster
+models with a leading "pod" sharding, and (c) reproduces the batched
+executor's ledger bit-for-bit and its weights within tolerance. Lives
+outside the pytest process because tests/conftest.py deliberately sets
+no XLA_FLAGS (single-device parity runs).
+"""
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+
+from golden_capture import build_setup, session_config  # noqa: E402
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_engine.json")
+TOL = dict(atol=2e-4, rtol=2e-4)
+
+
+def run(executor: str):
+    from repro.fl.engine import make_crosatfl
+    env, model = build_setup()
+    scfg = session_config(model)
+    cfg = dataclasses.replace(scfg.engine_config(), executor=executor)
+    eng = make_crosatfl(cfg, env, model, k_nbr=scfg.k_nbr,
+                        starmask=scfg.starmask)
+    w, ledger, _ = eng.run()
+    return eng, w, dataclasses.asdict(ledger)
+
+
+def main() -> int:
+    n_dev = len(jax.devices())
+    assert n_dev == 8, f"expected 8 forced host devices, got {n_dev}"
+
+    _, w_b, led_b = run("batched")
+    eng, w_s, led_s = run("sharded")
+
+    ex = eng.executor
+    assert ex.mesh is not None and ex.mesh.shape["pod"] > 1, \
+        f"pod mesh did not span devices: {ex.mesh}"
+    pl = ex.last_placement
+    assert isinstance(pl, NamedSharding), f"no recorded placement: {pl!r}"
+    assert pl.spec and pl.spec[0] == "pod", \
+        f"stacked models not pod-sharded: {pl.spec}"
+
+    assert led_s == led_b, "sharded ledger drifted from batched"
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert led_s == golden["CroSatFL"]["ledger"], \
+        "sharded ledger drifted from golden"
+    for a, b in zip(jax.tree.leaves(w_s), jax.tree.leaves(w_b)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **TOL)
+    print(f"PASS pod={ex.mesh.shape['pod']} devices={n_dev}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

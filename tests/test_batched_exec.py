@@ -1,14 +1,23 @@
-"""Device-resident batched round execution (DESIGN.md §9).
+"""Executor layer: sequential / batched / sharded round execution
+(DESIGN.md §9, §12).
 
-Parity contract: the sequential path is the golden bit-parity reference
-(pinned in test_engine_parity.py); the batched path must match it within
-float tolerance on weights while its LEDGER — which is pure host-side
-accounting, untouched by how training executes — stays bit-for-bit, still
-equal to tests/golden_engine.json.
+Parity contract: the sequential executor is the golden bit-parity
+reference (pinned in test_engine_parity.py and against
+tests/golden_engine.json); the batched and sharded executors must match
+it within float tolerance on weights while their LEDGER — pure host-side
+accounting, untouched by how training executes — stays bit-for-bit equal
+across every (executor, pacing) cell.
+
+Multi-device sharding is validated in a subprocess (sharded_check.py)
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — this
+process deliberately runs single-device (conftest.py), where the sharded
+executor degrades to a 1-pod mesh.
 """
 import dataclasses
 import json
 import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -17,11 +26,18 @@ import pytest
 from repro.fl.engine import (AsyncPacing, EngineConfig, RoundEngine,
                              SemiSyncPacing, SingleCluster, GSStarMixing,
                              TopMEnergyUtility, make_crosatfl)
+from repro.fl.exec import (EXECUTOR_NAMES, BatchedExecutor,
+                           SequentialExecutor, ShardedExecutor)
 
 from golden_capture import build_setup, session_config
 
-GOLDEN = os.path.join(os.path.dirname(__file__), "golden_engine.json")
+HERE = os.path.dirname(__file__)
+GOLDEN = os.path.join(HERE, "golden_engine.json")
 TOL = dict(atol=2e-4, rtol=2e-4)
+
+PACINGS = {"sync": lambda: None,
+           "semi-sync": lambda: SemiSyncPacing(quantile=0.5),
+           "async": lambda: AsyncPacing()}
 
 
 @pytest.fixture(scope="module")
@@ -29,22 +45,38 @@ def setup():
     return build_setup()
 
 
-def engine(env, model, *, batched, rounds=None, mixing_backend=None,
-           pacing=None):
+def engine(env, model, *, executor=None, rounds=None, mixing_backend=None,
+           pacing=None, batched_exec=False):
     scfg = session_config(model)
     cfg = scfg.engine_config()
     if rounds is not None:
         cfg = dataclasses.replace(cfg, rounds=rounds)
-    cfg = dataclasses.replace(cfg, batched_exec=batched)
+    cfg = dataclasses.replace(cfg, executor=executor,
+                              batched_exec=batched_exec)
     return make_crosatfl(cfg, env, model, k_nbr=scfg.k_nbr,
                          starmask=scfg.starmask,
-                         mixing_backend=mixing_backend)
+                         mixing_backend=mixing_backend, pacing=pacing)
 
 
 def assert_weights_close(w_a, w_b, **tol):
     for a, b in zip(jax.tree.leaves(w_a), jax.tree.leaves(w_b)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), **tol)
+
+
+class _NoFleetModel:
+    """ImageFLModel minus every fleet entry point (the pre-fleet-surface
+    model shape)."""
+
+    _HIDE = ("init_fleet", "client_step", "fleet_round")
+
+    def __init__(self, m):
+        self._m = m
+
+    def __getattr__(self, name):
+        if name in self._HIDE:
+            raise AttributeError(name)
+        return getattr(self._m, name)
 
 
 class TestFleetRound:
@@ -77,6 +109,12 @@ class TestFleetRound:
         X2 = model._device_data()
         assert X1[0] is X2[0]          # one-time device-resident tensor
 
+    def test_client_step_memoized(self, setup):
+        """The executors' jit caches key on the step fn's identity."""
+        env, model = setup
+        assert model.client_step(1) is model.client_step(1)
+        assert model.client_step(1) is not model.client_step(2)
+
     def test_padded_memoized(self, setup):
         env, model = setup
         a = model._padded(0)
@@ -89,47 +127,45 @@ class TestFleetRound:
         assert model._model_bits is not None
 
 
-class TestBatchedEngineParity:
-    def test_matches_sequential_and_golden_ledger(self, setup):
-        """The golden-engine scenario: batched ledger bit-equals both the
-        sequential run and tests/golden_engine.json; weights and history
-        match within tolerance."""
+class TestExecutorPacingMatrix:
+    """Every executor x every pacing family: ledgers bit-equal across
+    executors within a pacing, weights within tolerance; the Sync row
+    additionally bit-equals the golden reference ledger."""
+
+    @pytest.mark.parametrize("pacing_name", list(PACINGS),
+                             ids=list(PACINGS))
+    def test_matrix_cell(self, setup, pacing_name):
+        env, model = setup
+        make_pacing = PACINGS[pacing_name]
+        results = {}
+        for ex in EXECUTOR_NAMES:
+            w, led, _ = engine(env, model, executor=ex,
+                               pacing=make_pacing()).run()
+            results[ex] = (dataclasses.asdict(led), w)
+        led_seq, w_seq = results["sequential"]
+        for ex in ("batched", "sharded"):
+            led, w = results[ex]
+            assert led == led_seq, f"{ex} ledger drifted under {pacing_name}"
+            assert_weights_close(w, w_seq, **TOL)
+        if pacing_name == "sync":
+            with open(GOLDEN) as f:
+                golden = json.load(f)
+            assert led_seq == golden["CroSatFL"]["ledger"]
+
+    def test_history_matches_sequential(self, setup):
         env, model = setup
         ev = lambda p, r: model.evaluate(p)   # noqa: E731
-        w_s, led_s, hist_s = engine(env, model, batched=False).run(eval_fn=ev)
-        w_b, led_b, hist_b = engine(env, model, batched=True).run(eval_fn=ev)
-
-        assert dataclasses.asdict(led_b) == dataclasses.asdict(led_s)
-        with open(GOLDEN) as f:
-            golden = json.load(f)
-        assert dataclasses.asdict(led_b) == golden["CroSatFL"]["ledger"]
-        assert_weights_close(w_b, w_s, **TOL)
+        _, _, hist_s = engine(env, model, executor="sequential").run(
+            eval_fn=ev)
+        _, _, hist_b = engine(env, model, executor="batched").run(eval_fn=ev)
         for a, b in zip(hist_b, hist_s):
             assert a["round"] == b["round"]
             assert abs(a["acc"] - b["acc"]) <= 0.03
 
-    @pytest.mark.parametrize("make_pacing", [
-        lambda: SemiSyncPacing(quantile=0.5),
-        lambda: AsyncPacing(),
-    ], ids=["semi-sync", "async"])
-    def test_merge_stacked_matches_merge(self, setup, make_pacing):
-        """Pacing policies' stacked merge path == the list merge path."""
-        env, model = setup
-        scfg = session_config(model)
-        kw = dict(k_nbr=scfg.k_nbr, starmask=scfg.starmask)
-        cfg = scfg.engine_config()
-        w_s, led_s, _ = make_crosatfl(cfg, env, model,
-                                      pacing=make_pacing(), **kw).run()
-        cfg_b = dataclasses.replace(cfg, batched_exec=True)
-        w_b, led_b, _ = make_crosatfl(cfg_b, env, model,
-                                      pacing=make_pacing(), **kw).run()
-        assert dataclasses.asdict(led_b) == dataclasses.asdict(led_s)
-        assert_weights_close(w_b, w_s, **TOL)
-
     def test_pallas_mixing_matches_einsum(self, setup):
         env, model = setup
-        w_e, led_e, _ = engine(env, model, batched=True).run()
-        w_p, led_p, _ = engine(env, model, batched=True,
+        w_e, led_e, _ = engine(env, model, executor="batched").run()
+        w_p, led_p, _ = engine(env, model, executor="batched",
                                mixing_backend="pallas").run()
         assert dataclasses.asdict(led_p) == dataclasses.asdict(led_e)
         assert_weights_close(w_p, w_e, atol=1e-5, rtol=1e-5)
@@ -138,7 +174,7 @@ class TestBatchedEngineParity:
         env, model = setup
         eng = RoundEngine(
             EngineConfig(rounds=1, local_epochs=1,
-                         model_bits=model.model_bits(), batched_exec=True),
+                         model_bits=model.model_bits(), executor="batched"),
             env, model,
             clustering=SingleCluster(),
             selection=TopMEnergyUtility(select_m=0),
@@ -148,11 +184,82 @@ class TestBatchedEngineParity:
         assert np.isfinite(led.wall_clock_s)
 
 
+class TestExecutorResolution:
+    def test_deprecated_bool_warns_and_matches_batched(self, setup):
+        """batched_exec=True still works, warns, and runs the batched
+        executor — ledger and weights identical to executor='batched'."""
+        env, model = setup
+        with pytest.warns(DeprecationWarning, match="batched_exec"):
+            eng = engine(env, model, batched_exec=True)
+        assert eng.executor.name == "batched"
+        w_d, led_d, _ = eng.run()
+        w_b, led_b, _ = engine(env, model, executor="batched").run()
+        assert dataclasses.asdict(led_d) == dataclasses.asdict(led_b)
+        for a, b in zip(jax.tree.leaves(w_d), jax.tree.leaves(w_b)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_deprecated_bool_silent_fallback_without_fleet(self, setup):
+        """The shim preserves the old bool's semantics exactly: a model
+        with no fleet path silently runs sequentially."""
+        env, model = setup
+        with pytest.warns(DeprecationWarning):
+            eng = engine(env, _NoFleetModel(model), batched_exec=True)
+        assert eng.executor.name == "sequential"
+
+    def test_explicit_batched_requires_fleet_surface(self, setup):
+        env, model = setup
+        eng = engine(env, _NoFleetModel(model), executor="batched")
+        with pytest.raises(TypeError, match="fleet"):
+            eng.run()
+
+    def test_unknown_executor_name(self, setup):
+        env, model = setup
+        with pytest.raises(KeyError, match="unknown executor"):
+            engine(env, model, executor="warp-drive")
+
+    def test_executor_instance_passes_through(self, setup):
+        env, model = setup
+        inst = BatchedExecutor()
+        eng = engine(env, model, executor=inst)
+        assert eng.executor is inst
+
+    def test_default_is_sequential(self, setup):
+        env, model = setup
+        assert isinstance(engine(env, model).executor, SequentialExecutor)
+
+    def test_sharded_single_device_degrades_to_one_pod(self, setup):
+        env, model = setup
+        eng = engine(env, model, executor="sharded")
+        eng.run(rounds=1)
+        assert isinstance(eng.executor, ShardedExecutor)
+        assert eng.executor.mesh.shape["pod"] == 1
+
+
+class TestShardedMultiDevice:
+    def test_sharded_check_subprocess(self):
+        """Real pod sharding needs >1 device; conftest.py keeps this
+        process single-device on purpose, so the 8-device validation runs
+        in a subprocess (same script CI's perf-smoke environment uses)."""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["JAX_PLATFORMS"] = "cpu"
+        root = os.path.join(HERE, "..")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(root, "src"), HERE,
+             env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+        proc = subprocess.run(
+            [sys.executable, os.path.join(HERE, "sharded_check.py")],
+            capture_output=True, text=True, env=env, cwd=root, timeout=600)
+        assert proc.returncode == 0, \
+            f"sharded_check failed:\n{proc.stdout}\n{proc.stderr}"
+        assert "PASS" in proc.stdout
+
+
 class TestEvalEvery:
     def test_history_keeps_true_round_index(self, setup):
         env, model = setup
         ev = lambda p, r: model.evaluate(p)   # noqa: E731
-        eng = engine(env, model, batched=False, rounds=5)
+        eng = engine(env, model, rounds=5)
         _, _, hist = eng.run(eval_fn=ev, eval_every=2)
         # rounds 1 and 3 hit the cadence; the final round always evals
         assert [h["round"] for h in hist] == [1, 3, 4]
@@ -160,15 +267,14 @@ class TestEvalEvery:
     def test_default_evals_every_round(self, setup):
         env, model = setup
         ev = lambda p, r: model.evaluate(p)   # noqa: E731
-        _, _, hist = engine(env, model, batched=False, rounds=3).run(
-            eval_fn=ev)
+        _, _, hist = engine(env, model, rounds=3).run(eval_fn=ev)
         assert [h["round"] for h in hist] == [0, 1, 2]
 
 
 class TestPlanCache:
     def test_repeat_runs_reuse_plan(self, setup):
         env, model = setup
-        eng = engine(env, model, batched=True, rounds=1)
+        eng = engine(env, model, executor="batched", rounds=1)
         calls = []
         orig = eng.clustering.build
         eng.clustering.build = lambda ctx, key: (calls.append(1),
@@ -181,7 +287,7 @@ class TestPlanCache:
         """state.masters must be a copy: master migration writes through it
         and the cached plan serves later runs."""
         env, model = setup
-        eng = engine(env, model, batched=False, rounds=2)
+        eng = engine(env, model, rounds=2)
         eng.run()
         masters_after_first = eng._plan_cache[1].masters.copy()
         eng.run()

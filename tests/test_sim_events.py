@@ -339,6 +339,94 @@ class TestEventAsyncPacing:
         assert pac.clocks[0] == 62.0 and pac.clocks[1] == 1.0
         assert pac.advance(b) == 62.0
 
+    def test_geom_transfer_staggers_commits(self):
+        """geom_transfer=True: each commit shifts by the slant-range
+        transfer duration (serialization + detoured propagation over the
+        nearest other master), with NO extra ledger charge; the
+        TRANSFER_DONE payload carries the duration."""
+        from repro.core.energy import t_lisl
+
+        one_ls = 299_792_458.0           # 1 light-second slant range
+
+        class _Const:
+            def pair_distance(self, i, j, t):
+                return one_ls
+
+        class _GeomEnv:
+            link_params = LinkParams()
+            detour = 1.2
+            sat_ids = np.array([0, 1])
+            constellation = _Const()
+
+            def next_master_contact(self, masters, kc, t0,
+                                    max_wait_s=1800.0):
+                return 0.0
+
+        from repro.obs.observer import EngineObserver
+
+        class _Recorder(EngineObserver):
+            def __init__(self):
+                self.events = []
+
+            def sim_event(self, kind, t, **kw):
+                self.events.append((kind, t, kw))
+
+        pac = EventAsyncPacing(alpha0=0.5, decay=1.0, tau_s=1.0,
+                               geom_transfer=True)
+        model, ctx, state = _toy_async(pac, env=_GeomEnv())
+        state.masters = np.array([0, 1])
+        pac._state = state
+        rec = ctx.obs = _Recorder()
+        pac.begin_round(ctx, 0)
+        sels = [_sel([2.0], ids=[0]), _sel([1.0], ids=[1])]
+        b = [pac.account_cluster(ctx, sels[kc], kc) for kc in range(2)]
+        pac.merge(ctx, model, state, [jnp.ones(3), jnp.ones(3)], sels, 0)
+
+        # the exact duration the driver computes: model_bits serialization
+        # + detoured 1-light-second propagation
+        lp = LinkParams()
+        dur = float(t_lisl(ctx.cfg.model_bits, lp.lisl_rate,
+                           one_ls * 1.2, lp))
+        assert dur > 20.0                # ~22.35s serial + ~1.2s propagation
+        assert pac.clocks[0] == 2.0 + dur
+        assert pac.clocks[1] == 1.0 + dur
+        assert pac.advance(b) == 2.0 + dur
+        # commit shift only — the ledger books no transfer wait (comm
+        # accounting stays with the engine's mixing policy)
+        assert ctx.ledger.waiting_time_s == 0.0
+        transfers = [(t, kw) for kind, t, kw in rec.events
+                     if kind == TRANSFER_DONE]
+        assert sorted(t for t, _ in transfers) == \
+            sorted([1.0 + dur, 2.0 + dur])
+        assert all(kw["transfer_s"] == dur for _, kw in transfers)
+
+    def test_geom_transfer_off_keeps_legacy_payload(self):
+        """Default geom_transfer=False: commits at the availability epoch
+        and TRANSFER_DONE payloads carry no transfer_s key, so existing
+        EventAsync traces stay byte-identical."""
+        from repro.obs.observer import EngineObserver
+
+        class _Recorder(EngineObserver):
+            def __init__(self):
+                self.events = []
+
+            def sim_event(self, kind, t, **kw):
+                self.events.append((kind, t, kw))
+
+        pac = EventAsyncPacing(alpha0=0.5, decay=1.0, tau_s=1.0)
+        model, ctx, state = _toy_async(pac)
+        rec = ctx.obs = _Recorder()
+        pac.begin_round(ctx, 0)
+        sels = [_sel([2.0], ids=[0]), _sel([1.0], ids=[1])]
+        for kc in range(2):
+            pac.account_cluster(ctx, sels[kc], kc)
+        pac.merge(ctx, model, state, [jnp.ones(3), jnp.ones(3)], sels, 0)
+        assert pac.clocks[0] == 2.0 and pac.clocks[1] == 1.0
+        transfers = [kw for kind, _, kw in rec.events
+                     if kind == TRANSFER_DONE]
+        assert transfers and all("transfer_s" not in kw
+                                 for kw in transfers)
+
     def test_mixing_time_reenters_every_timeline(self):
         pac = EventAsyncPacing(alpha0=0.5, decay=1.0, tau_s=1.0)
         model, ctx, state = _toy_async(pac)
