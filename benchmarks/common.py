@@ -76,15 +76,17 @@ class BenchSetup:
 
 
 def run_crosatfl(setup: BenchSetup, eval_every: bool = True,
-                 observer=None, executor=None):
+                 observer=None, executor=None, faults=None):
     """``executor`` overrides the round execution mode (repro.fl.exec:
-    "sequential" / "batched" / "sharded"); None keeps the default."""
+    "sequential" / "batched" / "sharded"); None keeps the default.
+    ``faults`` attaches a repro.faults schedule/injector (None = the
+    fault-free golden path)."""
     import dataclasses
     env, model = setup.build()
     cfg = setup.session_config(model)
     if executor is not None:
         cfg = dataclasses.replace(cfg, executor=executor)
-    sess = Session(cfg, env, model, observer=observer)
+    sess = Session(cfg, env, model, observer=observer, faults=faults)
     eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
     return sess.run(eval_fn=eval_fn)
 

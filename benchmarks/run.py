@@ -43,9 +43,13 @@ def smoke(measured_cost: bool = False, trace: bool = False,
     from repro.fl.baselines import BASELINES
     from repro.fl.engine import SCENARIO_NAMES
 
+    from repro.faults import smoke_schedule
+
     # executor-layer cells (repro.fl.exec): CroSatFL through the batched
     # fleet path on both model families — image CNN and the reduced
-    # repro.models transformer
+    # repro.models transformer; plus the fault-injection cell (CroSatFL
+    # under the repro.faults smoke campaign — recovery paths in the
+    # benchmark entry point, not just the chaos harness)
     exec_cells = {
         "CroSatFL-ExecBatched":
             lambda obs: run_crosatfl(setup, eval_every=False, observer=obs,
@@ -53,6 +57,12 @@ def smoke(measured_cost: bool = False, trace: bool = False,
         "CroSatFL-ExecBatchedLM":
             lambda obs: run_crosatfl_lm(setup, eval_every=False,
                                         observer=obs, executor="batched"),
+        "CroSatFL-Faulted":
+            lambda obs: run_crosatfl(setup, eval_every=False, observer=obs,
+                                     faults=smoke_schedule(
+                                         seed=setup.seed,
+                                         n_clusters=setup.k_max,
+                                         n_clients=setup.n_clients)),
     }
 
     setup = BenchSetup(dataset="eurosat-sim", n_clients=8, n_train=400,

@@ -1,2 +1,4 @@
-from repro.ckpt.store import (load_pytree, load_session, save_pytree,
+from repro.ckpt.store import (CheckpointCorrupt, latest_checkpoint,
+                              load_latest_session, load_pytree,
+                              load_session, save_pytree,
                               save_session)  # noqa: F401

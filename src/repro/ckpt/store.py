@@ -14,7 +14,11 @@ Fault-tolerance contract (DESIGN.md §6):
   master-migration property — and replays the uninterrupted session
   bit-for-bit (tests/test_session.py pins this).
 * Writes are atomic (tmp + rename) so a crash mid-write never corrupts
-  the latest checkpoint; ``load_*`` falls back to the newest valid step.
+  the latest checkpoint; the manifest carries a crc32 over the leaf
+  contents, so a torn or bit-rotted shard is DETECTED on load
+  (``CheckpointCorrupt``) instead of silently resuming from garbage.
+  ``load_latest_session`` walks step dirs newest-first and falls back to
+  the last good round boundary when the newest checkpoint is corrupt.
 """
 from __future__ import annotations
 
@@ -22,6 +26,8 @@ import dataclasses
 import json
 import os
 import tempfile
+import zipfile
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -29,6 +35,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import EnergyLedger
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed its integrity check: the manifest's content
+    checksum does not match the stored leaves (torn write / bit rot), or
+    the archive itself is unreadable. Callers that can fall back should
+    resume from the previous step dir (``load_latest_session``)."""
+
+
+def _content_crc(keys, arrays) -> int:
+    """crc32 over (key, leaf bytes) pairs in manifest order."""
+    crc = 0
+    for k, a in zip(keys, arrays):
+        crc = zlib.crc32(k.encode(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+    return crc
 
 
 def _flatten_with_paths(tree):
@@ -42,7 +64,9 @@ def _flatten_with_paths(tree):
 def save_pytree(tree: Any, path: str) -> None:
     keys, leaves, _ = _flatten_with_paths(tree)
     arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
-    manifest = {"keys": keys, "n": len(leaves)}
+    manifest = {"keys": keys, "n": len(leaves),
+                "crc32": _content_crc(keys, [arrays[f"leaf_{i}"]
+                                             for i in range(len(leaves))])}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                suffix=".npz")
@@ -53,17 +77,32 @@ def save_pytree(tree: Any, path: str) -> None:
 
 
 def load_pytree(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (keys must match)."""
-    with np.load(path, allow_pickle=False) as z:
-        manifest = json.loads(str(z["manifest"]))
-        keys_like, leaves_like, treedef = _flatten_with_paths(like)
-        if manifest["keys"] != keys_like:
-            # elastic restore: match by key name
-            by_key = {k: z[f"leaf_{i}"] for i, k in enumerate(manifest["keys"])}
-            leaves = [jnp.asarray(by_key[k]) for k in keys_like]
-        else:
-            leaves = [jnp.asarray(z[f"leaf_{i}"])
-                      for i in range(manifest["n"])]
+    """Restore into the structure of ``like`` (keys must match).
+
+    Raises ``CheckpointCorrupt`` when the archive is unreadable or the
+    stored leaves fail the manifest's crc32 (checkpoints written before
+    the checksum existed load unverified — the field is optional)."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            manifest = json.loads(str(z["manifest"]))
+            stored = [z[f"leaf_{i}"] for i in range(manifest["n"])]
+    except (zipfile.BadZipFile, ValueError, KeyError) as e:
+        raise CheckpointCorrupt(f"{path}: unreadable archive ({e})") from e
+    want = manifest.get("crc32")
+    if want is not None:
+        got = _content_crc(manifest["keys"], stored)
+        if got != want:
+            raise CheckpointCorrupt(
+                f"{path}: content checksum mismatch "
+                f"(manifest crc32={want}, stored leaves crc32={got}); "
+                "torn or corrupted checkpoint")
+    keys_like, _, treedef = _flatten_with_paths(like)
+    if manifest["keys"] != keys_like:
+        # elastic restore: match by key name
+        by_key = dict(zip(manifest["keys"], stored))
+        leaves = [jnp.asarray(by_key[k]) for k in keys_like]
+    else:
+        leaves = [jnp.asarray(a) for a in stored]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -100,6 +139,12 @@ def save_session(state, path: str) -> None:
         "host_rng": state.rng_state,
         "pacing_pending": sorted(int(kc) for kc in pending) if pending else [],
         **({"pacing_extras": extras} if extras else {}),
+        # attached-fault-campaign snapshot (FaultInjector.state_dict():
+        # pending fault kernel + live outage/crash view) — key absent on
+        # fault-free sessions so their meta schema is byte-identical to
+        # pre-faults checkpoints
+        **({"faults": state.faults_state}
+           if getattr(state, "faults_state", None) is not None else {}),
         "ledger": dataclasses.asdict(state.ledger),
         "skip": [{"kappa": s.kappa.tolist(), "tau": s.tau.tolist(),
                   "phi": s.phi.tolist()} for s in state.skip_states],
@@ -136,13 +181,14 @@ def load_session(path: str, models_like) -> "SessionState":
         rng_key=jnp.asarray(np.array(meta["rng_key"], np.uint32)),
         ledger=ledger,
         rng_state=meta.get("host_rng"),   # None on pre-field checkpoints
-        pacing_state=pacing_state)
+        pacing_state=pacing_state,
+        faults_state=meta.get("faults"))  # None on fault-free sessions
 
 
-def latest_checkpoint(directory: str) -> Optional[str]:
-    """Newest valid step dir (named ``step_<n>``) under ``directory``."""
+def _step_dirs(directory: str) -> list[str]:
+    """step_<n> dirs with a meta.json, newest first."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and \
@@ -151,6 +197,28 @@ def latest_checkpoint(directory: str) -> Optional[str]:
                 steps.append((int(name.split("_")[1]), name))
             except ValueError:
                 continue
-    if not steps:
-        return None
-    return os.path.join(directory, max(steps)[1])
+    return [os.path.join(directory, name)
+            for _, name in sorted(steps, reverse=True)]
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    """Newest valid step dir (named ``step_<n>``) under ``directory``."""
+    steps = _step_dirs(directory)
+    return steps[0] if steps else None
+
+
+def load_latest_session(directory: str, models_like):
+    """Resume from the newest LOADABLE step dir under ``directory``.
+
+    Walks step dirs newest-first; a step whose shards fail the crc32
+    check (torn write, bit rot) or whose meta.json is unreadable is
+    skipped, falling back to the previous round boundary — the crash
+    recovery contract of DESIGN.md §13. Returns ``(state, path)``, or
+    ``(None, None)`` when no step loads. Raises nothing on corruption;
+    structural mismatches against ``models_like`` still propagate."""
+    for step in _step_dirs(directory):
+        try:
+            return load_session(step, models_like), step
+        except (CheckpointCorrupt, json.JSONDecodeError, OSError):
+            continue
+    return None, None

@@ -118,6 +118,17 @@ def e_gs(d_bits: float, rate, distance_m, lp: LinkParams):
 # Ledger: running account of a session (feeds Table II / Fig. 4)
 # ---------------------------------------------------------------------------
 
+def _reject_bad(method: str, **vals) -> None:
+    """A NaN or negative contribution (corrupted payload, bad codec
+    scale) would silently poison every downstream total — fail at the
+    entry point instead. ``not (v >= 0)`` is one comparison that catches
+    both NaN and negative; zero is a legal contribution."""
+    bad = {k: v for k, v in vals.items() if not (v >= 0)}
+    if bad:
+        raise ValueError(f"EnergyLedger.{method}: NaN/negative "
+                         + ", ".join(f"{k}={v!r}" for k, v in bad.items()))
+
+
 @dataclass
 class EnergyLedger:
     intra_lisl_count: int = 0
@@ -132,25 +143,35 @@ class EnergyLedger:
     wall_clock_s: float = 0.0
 
     def add_intra(self, n: int, e_j: float, t_s: float):
+        if not (n >= 0 and e_j >= 0 and t_s >= 0):
+            _reject_bad("add_intra", n=n, e_j=e_j, t_s=t_s)
         self.intra_lisl_count += n
         self.lisl_energy_j += e_j
         self.transmission_time_s += t_s
 
     def add_inter(self, n: int, e_j: float, t_s: float):
+        if not (n >= 0 and e_j >= 0 and t_s >= 0):
+            _reject_bad("add_inter", n=n, e_j=e_j, t_s=t_s)
         self.inter_lisl_count += n
         self.lisl_energy_j += e_j
         self.transmission_time_s += t_s
 
     def add_gs(self, n: int, e_j: float, t_s: float):
+        if not (n >= 0 and e_j >= 0 and t_s >= 0):
+            _reject_bad("add_gs", n=n, e_j=e_j, t_s=t_s)
         self.gs_count += n
         self.gs_energy_j += e_j
         self.transmission_time_s += t_s
 
     def add_train(self, e_j: float, barrier_s: float):
+        if not (e_j >= 0 and barrier_s >= 0):
+            _reject_bad("add_train", e_j=e_j, barrier_s=barrier_s)
         self.train_energy_j += e_j
         self.compute_time_s += barrier_s
 
     def add_wait(self, t_s: float):
+        if not (t_s >= 0):
+            _reject_bad("add_wait", t_s=t_s)
         self.waiting_time_s += t_s
 
     @property

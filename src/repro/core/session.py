@@ -73,11 +73,12 @@ class Session:
 
     RELAY_FALLBACK_M = 3e6   # nominal relayed path when instantaneously cut
 
-    def __init__(self, cfg: SessionConfig, env, model, observer=None):
+    def __init__(self, cfg: SessionConfig, env, model, observer=None,
+                 faults=None):
         self.engine = make_crosatfl(cfg.engine_config(), env, model,
                                     k_nbr=cfg.k_nbr, skip_one=cfg.skip_one,
                                     starmask=cfg.starmask,
-                                    observer=observer)
+                                    observer=observer, faults=faults)
         self.cfg, self.env, self.model = cfg, env, model
         self.rng = self.engine.rng
 

@@ -138,6 +138,22 @@ def select_jax(t_train: jax.Array, e_train: jax.Array, hw_penalty: jax.Array,
     return mask.astype(jnp.float32), (kappa2, tau2, phi2)
 
 
+def force_skip(state: SkipOneState, idx: int) -> None:
+    """Externally-forced non-participation (a satellite crash,
+    repro.faults) — the skip-MANY generalization's fairness carryover.
+
+    Unlike a utility-chosen skip, a crash is not the policy's decision:
+    staleness ``tau`` advances (another round without participation, so
+    Eq. 31 keeps the member admissible-pressure when it reboots and
+    Skip-One will not immediately utility-skip it again), but ``phi``
+    (the skip-history EMA the utility penalizes) and ``kappa`` (the
+    cooldown earned by being chosen) are left untouched. Mutates
+    ``state`` in place; call after ``select`` has already applied its
+    own update for the round.
+    """
+    state.tau[idx] = state.tau[idx] + 1
+
+
 def barrier_reduction(t_train: np.ndarray, mask: np.ndarray) -> float:
     """Realized dT of this round's decision (for the ledger)."""
     M = t_train.max()

@@ -1,0 +1,27 @@
+"""repro.faults — deterministic fault injection + chaos harness
+(DESIGN.md §13).
+
+* ``model``  — typed faults (link outages, crashes/reboots, master
+  failure, payload corruption/loss, clock drift), the seeded
+  ``FaultSchedule`` (explicit / Poisson / Gilbert-Elliott), the
+  ``FaultState`` live view, and the ``FaultInjector`` the engine polls.
+* ``chaos``  — ``python -m repro.faults.chaos``: seeded fault campaigns
+  across scenario presets asserting no-deadlock, bit-exact mirror
+  reconcile, and recovery invariants.
+
+Recovery policies live with the behavior they guard: transport retries
+in ``fl/engine/transport.py``, master failover + skip-many in
+``fl/engine/engine.py``, checkpoint fallback in ``ckpt/store.py``.
+"""
+from repro.faults.model import (GS, LISL, ClockDrift, FaultInjector,
+                                FaultSchedule, FaultState, LinkOutage,
+                                MasterFailure, PayloadCorruption,
+                                PayloadLoss, SatCrash, SatReboot,
+                                as_injector, smoke_schedule)
+
+__all__ = [
+    "GS", "LISL", "ClockDrift", "FaultInjector", "FaultSchedule",
+    "FaultState", "LinkOutage", "MasterFailure", "PayloadCorruption",
+    "PayloadLoss", "SatCrash", "SatReboot", "as_injector",
+    "smoke_schedule",
+]

@@ -1,0 +1,213 @@
+"""Chaos-smoke harness: seeded fault campaigns against live engines.
+
+    PYTHONPATH=src python -m repro.faults.chaos --smoke
+
+Runs the ``smoke_schedule`` campaign against a tiny constellation for
+each preset (CroSatFL plus scenario-zoo variants, including an
+event-kernel one) and asserts the recovery contracts of DESIGN.md §13:
+
+* **no deadlock** — every faulted session runs to completion;
+* **accounting stays exact** — the TracingObserver's mirror ledger
+  reconciles bit-for-bit against the engine ledger UNDER faults (every
+  retry joule and backoff second hit the trace exactly once);
+* **recovery demonstrably happened** — the trace contains a master
+  failover and charged retries (the smoke campaign lands a
+  MasterFailure + LISL outage + crash + payload corruption at t=0);
+* **the null campaign is free** — an attached EMPTY schedule leaves the
+  ledger bit-identical to an unattached run (golden-path guarantee);
+* **kill/resume is exact** — a faulted session checkpointed mid-campaign
+  and resumed replays the uninterrupted faulted ledger bit-for-bit
+  (pending fault events ride the checkpoint);
+* **degradation is graceful** — the faulted model still evaluates to a
+  finite, above-chance accuracy.
+
+Artifacts (per-preset JSONL + Chrome traces with the fault timeline
+track, and ``chaos_report.json``) land under ``results/chaos/`` — CI's
+``chaos-smoke`` job uploads them. Exit code 0 iff every check passed.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+
+from repro.faults.model import FaultSchedule, smoke_schedule
+from repro.obs import get_logger
+
+log = get_logger("faults.chaos")
+
+# the smoke presets: plain sync, deadline pacing, and the
+# discrete-event kernel replay — three different wall-clock regimes for
+# the same fault campaign
+PRESETS = ("CroSatFL", "CroSatFL-SemiSync", "CroSatFL-EventSync")
+
+CHANCE_ACC = 0.10   # eurosat-sim is 10-class; graceful > chance floor
+
+
+def tiny_setup(seed: int = 0, n_clients: int = 8, n_train: int = 400,
+               n_test: int = 100):
+    """CPU-container-sized constellation + image model (mirrors the
+    benchmark smoke cell without importing benchmarks, which is not on
+    the installed path)."""
+    from repro.constellation import ConstellationEnv
+    from repro.data.synth import iid_partition, make_dataset
+    from repro.fl.client import ImageFLModel
+
+    ds = make_dataset("eurosat-sim", n=n_train, seed=seed)
+    test = make_dataset("eurosat-sim", n=n_test, seed=seed + 99)
+    parts = iid_partition(len(ds.y), n_clients, seed)
+    env = ConstellationEnv(
+        n_clients=n_clients,
+        n_samples=np.array([len(p) for p in parts], float),
+        gpu_fraction=0.5, seed=seed)
+    model = ImageFLModel(ds, parts, test)
+    return env, model
+
+
+def build_engine(preset: str, env, model, *, rounds: int = 3,
+                 seed: int = 0, observer=None, faults=None):
+    from repro.core.starmask import StarMaskParams
+    from repro.fl.engine import (EngineConfig, make_crosatfl,
+                                 make_scenario)
+
+    cfg = EngineConfig(rounds=rounds, local_epochs=1, c_flop=5e7,
+                       model_bits=model.model_bits(), seed=seed)
+    sm = StarMaskParams(k_max=4, m_min=2)
+    if preset == "CroSatFL":
+        return make_crosatfl(cfg, env, model, starmask=sm,
+                             observer=observer, faults=faults)
+    return make_scenario(preset, cfg, env, model, starmask=sm,
+                         observer=observer, faults=faults)
+
+
+def _final_acc(history) -> float:
+    return float(history[-1]["acc"]) if history else float("nan")
+
+
+def run_preset(preset: str, seed: int = 0, rounds: int = 3,
+               out_dir: str | None = None) -> dict:
+    """One preset's full chaos campaign; returns the check dict."""
+    from repro.obs import TracingObserver
+
+    env, model = tiny_setup(seed=seed)
+    ev = lambda p, r: model.evaluate(p)   # noqa: E731
+    checks: dict = {}
+
+    # 1. clean reference (unattached — the golden path)
+    _, led_clean, hist_clean = build_engine(
+        preset, env, model, rounds=rounds, seed=seed).run(
+        eval_fn=ev, eval_every=rounds)
+
+    # 2. attached-but-empty schedule must be bit-free
+    _, led_null, _ = build_engine(
+        preset, env, model, rounds=rounds, seed=seed,
+        faults=FaultSchedule()).run(eval_fn=ev, eval_every=rounds)
+    checks["null_schedule_bitfree"] = (dataclasses.asdict(led_null)
+                                       == dataclasses.asdict(led_clean))
+
+    # 3. the faulted run: traced, checkpointed every round
+    schedule = smoke_schedule(seed=seed, n_clusters=4, n_clients=8)
+    jsonl = (os.path.join(out_dir, f"{preset}.faulted.jsonl")
+             if out_dir else None)
+    obs = TracingObserver(jsonl)
+    ck = os.path.join(out_dir, f"ck_{preset}") if out_dir else None
+    eng = build_engine(preset, env, model, rounds=rounds, seed=seed,
+                       observer=obs, faults=schedule)
+    _, led_faulted, hist_faulted = eng.run(eval_fn=ev, eval_every=rounds,
+                                           ckpt_dir=ck)
+    checks["completed"] = True           # reaching here == no deadlock
+    checks["mirror_exact_under_faults"] = obs.reconcile(led_faulted)["exact"]
+    recov = [e for e in obs.tracer.events if e["kind"] == "recovery"]
+    checks["failover_in_trace"] = any(e["action"] == "failover"
+                                      for e in recov)
+    checks["retries_charged"] = (
+        obs.metrics.total("recoveries", action="retry") >= 1
+        and obs.metrics.total("wait_s", cause="retry") > 0)
+    checks["faults_applied"] = obs.metrics.total("faults") >= 4
+    acc_c, acc_f = _final_acc(hist_clean), _final_acc(hist_faulted)
+    checks["graceful_degradation"] = (np.isfinite(acc_f)
+                                      and acc_f >= CHANCE_ACC / 2)
+    if out_dir:
+        obs.tracer.to_chrome_trace(
+            os.path.join(out_dir, f"{preset}.faulted.trace.json"))
+
+    # 4. kill mid-campaign, resume from the round-1 boundary: the
+    # resumed faulted ledger must equal the uninterrupted one
+    if ck is not None and rounds > 1:
+        from repro.ckpt import load_session
+        step = os.path.join(ck, "step_1")
+        with open(os.path.join(step, "meta.json")) as f:
+            meta = json.load(f)
+        assert meta.get("faults") is not None, "faults_state missing in ckpt"
+        like = model.stack([model.init(jax.random.PRNGKey(0))]
+                           * len(meta["masters"]))
+        st = load_session(step, like)
+        eng2 = build_engine(preset, env, model, rounds=rounds, seed=seed,
+                            faults=smoke_schedule(seed=seed, n_clusters=4,
+                                                  n_clients=8))
+        _, led_res, _ = eng2.run(eval_fn=ev, eval_every=rounds, state=st)
+        checks["resume_bitexact_under_faults"] = (
+            dataclasses.asdict(led_res) == dataclasses.asdict(led_faulted))
+
+    ok = all(checks.values())
+    return {"preset": preset, "ok": ok, "checks": checks,
+            "acc_clean": acc_c, "acc_faulted": acc_f,
+            "faults_applied": int(obs.metrics.total("faults")),
+            "recovery_actions": {lbl.get("action", "?"): int(v)
+                                 for lbl, v in
+                                 obs.metrics.series("recoveries")},
+            "dropped_transfers": int(eng.faults.state.dropped)}
+
+
+def run_campaign(presets=PRESETS, seed: int = 0, rounds: int = 3,
+                 out_dir: str = "results/chaos") -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for preset in presets:
+        log.info(f"chaos: {preset} (seed={seed}, rounds={rounds})")
+        res = run_preset(preset, seed=seed, rounds=rounds, out_dir=out_dir)
+        for name, passed in res["checks"].items():
+            log.info(f"  {'ok ' if passed else 'BAD'} {name}")
+        log.info(f"  acc clean={res['acc_clean']:.3f} "
+                 f"faulted={res['acc_faulted']:.3f} "
+                 f"faults={res['faults_applied']} "
+                 f"recoveries={res['recovery_actions']}")
+        results.append(res)
+    report = {"seed": seed, "rounds": rounds,
+              "ok": all(r["ok"] for r in results), "presets": results}
+    path = os.path.join(out_dir, "chaos_report.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    log.info(f"wrote {path}")
+    n_ok = sum(r["ok"] for r in results)
+    log.info(f"chaos: {n_ok}/{len(results)} presets ok")
+    return 0 if report["ok"] else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="seeded fault-injection campaign (DESIGN.md §13)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI profile: all presets, tiny setup")
+    ap.add_argument("--presets", nargs="*", default=None,
+                    help=f"subset of {PRESETS}")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--out", default="results/chaos")
+    args = ap.parse_args(argv)
+    presets = args.presets if args.presets else PRESETS
+    unknown = sorted(set(presets) - set(PRESETS))
+    if unknown:
+        log.warn(f"unknown presets {unknown} (choose from {PRESETS})")
+        return 2
+    return run_campaign(presets, seed=args.seed, rounds=args.rounds,
+                        out_dir=args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

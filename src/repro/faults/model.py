@@ -1,0 +1,520 @@
+"""Deterministic fault model for the constellation (DESIGN.md §13).
+
+Three layers, all seeded and bit-reproducible:
+
+* **Typed faults** — frozen dataclasses describing one adverse
+  occurrence on the sim clock: a ``LinkOutage`` (LISL or GS class, with
+  a duration), a ``SatCrash``/``SatReboot`` pair, a ``MasterFailure``
+  (the master *role* dies; the satellite survives as a member), a
+  ``PayloadCorruption``/``PayloadLoss`` (the next message is garbage /
+  never arrives and must be retransmitted), and a ``ClockDrift`` (a
+  cluster's clock slews and the skew is burned as wait time).
+* **FaultSchedule** — an explicit fault list, or one materialized from a
+  seeded Poisson process (independent arrival streams per fault family)
+  or a Gilbert-Elliott two-state burst chain over a link class. All
+  randomness comes from a private ``np.random.default_rng(seed)``
+  consumed eagerly at construction, so a schedule is a pure value:
+  equal seeds give equal schedules, replays are trivially deterministic.
+* **FaultInjector** — owns a private ``repro.sim.events.EventQueue``
+  loaded with the schedule (faults enter the kernel's extended
+  kind-priority total order; the kernel's RNG is its own, so attaching
+  an injector cannot perturb the engine's host RNG or JAX key stream —
+  the same discipline as the event drivers) and a ``FaultState`` live
+  view the recovery policies read: which links are out until when, which
+  satellites are down, which payload faults are pending. The engine
+  polls the injector at round boundaries; ``Transport`` consults the
+  live view mid-accounting.
+
+Recovery policies live where the behavior they guard lives: retries in
+``fl/engine/transport.py``, failover + skip-many in
+``fl/engine/engine.py``, checkpoint fallback in ``ckpt/store.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.sim.events import (CLOCK_DRIFT, LINK_DOWN, LINK_UP, MASTER_FAIL,
+                              PAYLOAD_CORRUPT, PAYLOAD_LOSS, SAT_CRASH,
+                              SAT_REBOOT, EventQueue)
+
+LISL, GS = "lisl", "gs"   # link classes (Transport: intra/inter -> lisl)
+
+
+# ---------------------------------------------------------------------------
+# Typed faults
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LinkOutage:
+    """Link class ``link`` is unusable for ``duration_s`` from ``t``.
+    ``cluster=None`` hits every cluster's links of that class."""
+    t: float
+    duration_s: float
+    link: str = LISL
+    cluster: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class SatCrash:
+    """Client ``sat`` goes dark at ``t`` and reboots after
+    ``duration_s`` (the injector schedules the paired SAT_REBOOT)."""
+    t: float
+    sat: int
+    duration_s: float = 600.0
+
+
+@dataclass(frozen=True)
+class SatReboot:
+    """Explicit early revive of a crashed client."""
+    t: float
+    sat: int
+
+
+@dataclass(frozen=True)
+class MasterFailure:
+    """Cluster ``cluster``'s master ROLE fails at ``t`` (aggregation
+    process dies); the satellite itself stays up as a member and the
+    engine re-elects."""
+    t: float
+    cluster: int
+
+
+@dataclass(frozen=True)
+class PayloadCorruption:
+    """The next message batch (from ``cluster``, or anywhere when None)
+    arrives corrupted: the receiver discards it and the full batch is
+    retransmitted at real energy cost."""
+    t: float
+    cluster: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class PayloadLoss:
+    """Like PayloadCorruption but the batch never arrives (same recovery
+    cost, distinct trace/metrics label)."""
+    t: float
+    cluster: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ClockDrift:
+    """Cluster ``cluster``'s local clock slews by ``skew_s``; the
+    re-synchronization is charged as latency-only wait time."""
+    t: float
+    cluster: int
+    skew_s: float = 5.0
+
+
+_KIND = {LinkOutage: LINK_DOWN, SatCrash: SAT_CRASH, SatReboot: SAT_REBOOT,
+         MasterFailure: MASTER_FAIL, PayloadCorruption: PAYLOAD_CORRUPT,
+         PayloadLoss: PAYLOAD_LOSS, ClockDrift: CLOCK_DRIFT}
+
+
+# ---------------------------------------------------------------------------
+# Schedule
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """An immutable, time-sorted campaign of typed faults plus the
+    recovery knobs the policies read (retry cap, backoff base).
+
+    Construct explicitly (``FaultSchedule([...])``) or from the seeded
+    generators below. An EMPTY schedule attached to an engine is
+    contractually a no-op: the ledger stays bit-identical to an
+    unattached run (pinned in tests/test_faults.py).
+    """
+    faults: tuple = ()
+    seed: int = 0
+    max_retries: int = 4
+    backoff0_s: float = 30.0
+
+    def __post_init__(self):
+        order = sorted(self.faults,
+                       key=lambda f: (f.t, _KIND[type(f)], repr(f)))
+        object.__setattr__(self, "faults", tuple(order))
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    # -- seeded generators ---------------------------------------------------
+    @classmethod
+    def poisson(cls, horizon_s: float, seed: int = 0, *,
+                n_clusters: int = 0, n_clients: int = 0,
+                outage_rate_per_h: float = 0.0, mean_outage_s: float = 120.0,
+                gs_outage_frac: float = 0.25,
+                crash_rate_per_h: float = 0.0, mean_down_s: float = 600.0,
+                master_fail_rate_per_h: float = 0.0,
+                payload_rate_per_h: float = 0.0,
+                drift_rate_per_h: float = 0.0, mean_skew_s: float = 5.0,
+                max_retries: int = 4,
+                backoff0_s: float = 30.0) -> "FaultSchedule":
+        """Independent Poisson arrival streams per fault family over
+        ``[0, horizon_s)``; exponential durations; uniform targets. One
+        private generator, consumed in a fixed family order — the whole
+        campaign is a pure function of the arguments."""
+        rng = np.random.default_rng(seed)
+        faults: list = []
+
+        def arrivals(rate_per_h: float) -> list:
+            out, t = [], 0.0
+            if rate_per_h <= 0:
+                return out
+            while True:
+                t += float(rng.exponential(3600.0 / rate_per_h))
+                if t >= horizon_s:
+                    return out
+                out.append(t)
+
+        for t in arrivals(outage_rate_per_h):
+            link = GS if rng.random() < gs_outage_frac else LISL
+            kc = (None if n_clusters == 0 or rng.random() < 0.5
+                  else int(rng.integers(n_clusters)))
+            faults.append(LinkOutage(t, float(rng.exponential(mean_outage_s)),
+                                     link, kc))
+        for t in arrivals(crash_rate_per_h):
+            faults.append(SatCrash(t, int(rng.integers(max(n_clients, 1))),
+                                   float(rng.exponential(mean_down_s))))
+        for t in arrivals(master_fail_rate_per_h):
+            faults.append(MasterFailure(
+                t, int(rng.integers(max(n_clusters, 1)))))
+        for t in arrivals(payload_rate_per_h):
+            kc = (None if n_clusters == 0 or rng.random() < 0.5
+                  else int(rng.integers(n_clusters)))
+            cls_ = PayloadLoss if rng.random() < 0.5 else PayloadCorruption
+            faults.append(cls_(t, kc))
+        for t in arrivals(drift_rate_per_h):
+            faults.append(ClockDrift(
+                t, int(rng.integers(max(n_clusters, 1))),
+                float(rng.exponential(mean_skew_s))))
+        return cls(tuple(faults), seed=seed, max_retries=max_retries,
+                   backoff0_s=backoff0_s)
+
+    @classmethod
+    def gilbert_elliott(cls, horizon_s: float, seed: int = 0, *,
+                        link: str = LISL, cluster: Optional[int] = None,
+                        p_g2b: float = 0.02, p_b2g: float = 0.5,
+                        step_s: float = 60.0, max_retries: int = 4,
+                        backoff0_s: float = 30.0) -> "FaultSchedule":
+        """Two-state (Good/Bad) Markov burst chain sampled on a
+        ``step_s`` grid; each maximal Bad run becomes one LinkOutage —
+        the classic bursty-loss channel, here at link granularity."""
+        rng = np.random.default_rng(seed)
+        faults: list = []
+        bad, run_start = False, 0.0
+        t = 0.0
+        while t < horizon_s:
+            if bad:
+                if rng.random() < p_b2g:
+                    faults.append(LinkOutage(run_start, t - run_start,
+                                             link, cluster))
+                    bad = False
+            else:
+                if rng.random() < p_g2b:
+                    bad, run_start = True, t
+            t += step_s
+        if bad:
+            faults.append(LinkOutage(run_start, horizon_s - run_start,
+                                     link, cluster))
+        return cls(tuple(faults), seed=seed, max_retries=max_retries,
+                   backoff0_s=backoff0_s)
+
+
+def smoke_schedule(seed: int = 0, *, n_clusters: int = 4,
+                   n_clients: int = 8, crash_sat: int = 1,
+                   horizon_s: float = 4000.0) -> FaultSchedule:
+    """The chaos-smoke campaign (faults/chaos.py, benchmarks, CI): a
+    deterministic MasterFailure + LISL outage + long SatCrash + payload
+    corruption landing at t=0 — so the very first round demonstrably
+    exercises failover, charged retries, skip-many, and retransmission —
+    plus a seeded Poisson tail over the session horizon."""
+    explicit = (
+        MasterFailure(0.0, 0),
+        LinkOutage(0.0, 200.0, LISL, None),
+        SatCrash(0.0, crash_sat, 1e9),       # down for the whole session
+        PayloadCorruption(0.0, None),
+    )
+    tail = FaultSchedule.poisson(
+        horizon_s, seed=seed, n_clusters=n_clusters, n_clients=n_clients,
+        outage_rate_per_h=2.0, mean_outage_s=90.0,
+        crash_rate_per_h=0.5, mean_down_s=300.0,
+        master_fail_rate_per_h=0.5, payload_rate_per_h=1.0,
+        drift_rate_per_h=1.0)
+    return FaultSchedule(explicit + tail.faults, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Live view
+# ---------------------------------------------------------------------------
+
+class FaultState:
+    """What is broken RIGHT NOW — the view ``Transport`` and the engine
+    read. Mutated only by ``FaultInjector._apply``; JSON round-trips for
+    checkpointing (str-keyed, list-valued). The injector keeps ONE
+    instance for its lifetime (reset/load mutate in place) so Transport
+    views built before ``bind`` never go stale."""
+
+    def __init__(self, max_retries: int = 4, backoff0_s: float = 30.0):
+        self.max_retries = int(max_retries)
+        self.backoff0_s = float(backoff0_s)
+        # (link class, cluster|None) -> outage end time
+        self.outage_until: dict = {}
+        # client id -> reboot time (down while reboot_t > now)
+        self.crashed: dict = {}
+        # pending one-shot payload faults: (kind, cluster|None) -> count
+        self.payload_pending: dict = {}
+        self.dropped = 0              # degraded-mode drops (capped retries)
+
+    def reset(self) -> None:
+        self.outage_until.clear()
+        self.crashed.clear()
+        self.payload_pending.clear()
+        self.dropped = 0
+
+    # -- queries (Transport / engine) ----------------------------------------
+    def outage_end(self, link: str, kc: Optional[int], t: float) -> float:
+        """Latest applicable outage end > t for this link class as seen
+        from cluster ``kc`` (cluster-scoped and global outages both
+        apply); 0.0 when the link is up."""
+        end = 0.0
+        for key in ((link, None if kc is None else int(kc)), (link, None)):
+            e = self.outage_until.get(key, 0.0)
+            if e > t and e > end:
+                end = e
+        return end
+
+    def down(self, sat: int, t: float) -> bool:
+        return self.crashed.get(int(sat), 0.0) > t
+
+    def down_sats(self, t: float) -> list:
+        return sorted(s for s, e in self.crashed.items() if e > t)
+
+    def take_payload_fault(self, kc: Optional[int]) -> Optional[str]:
+        """Consume one pending payload fault applicable to a message
+        from cluster ``kc`` (cluster-scoped first, then global).
+        Returns the fault kind consumed, or None."""
+        for kind in (PAYLOAD_CORRUPT, PAYLOAD_LOSS):
+            for key in ((kind, None if kc is None else int(kc)),
+                        (kind, None)):
+                n = self.payload_pending.get(key, 0)
+                if n > 0:
+                    self.payload_pending[key] = n - 1
+                    return kind
+        return None
+
+    # -- checkpointing -------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "max_retries": self.max_retries,
+            "backoff0_s": self.backoff0_s,
+            "outage": [[link, kc, end] for (link, kc), end
+                       in sorted(self.outage_until.items(),
+                                 key=lambda kv: (kv[0][0],
+                                                 -1 if kv[0][1] is None
+                                                 else kv[0][1]))],
+            "crashed": sorted([int(s), float(e)]
+                              for s, e in self.crashed.items()),
+            "payload": [[kind, kc, n] for (kind, kc), n
+                        in sorted(self.payload_pending.items(),
+                                  key=lambda kv: (kv[0][0],
+                                                  -1 if kv[0][1] is None
+                                                  else kv[0][1])) if n > 0],
+            "dropped": int(self.dropped),
+        }
+
+    def load(self, d: dict) -> None:
+        """Restore ``to_dict()`` in place (JSON-round-tripped dicts ok)."""
+        self.reset()
+        self.max_retries = int(d.get("max_retries", self.max_retries))
+        self.backoff0_s = float(d.get("backoff0_s", self.backoff0_s))
+        self.outage_until.update(
+            {(link, None if kc is None else int(kc)): float(e)
+             for link, kc, e in d.get("outage", [])})
+        self.crashed.update({int(s): float(e)
+                             for s, e in d.get("crashed", [])})
+        self.payload_pending.update(
+            {(kind, None if kc is None else int(kc)): int(n)
+             for kind, kc, n in d.get("payload", [])})
+        self.dropped = int(d.get("dropped", 0))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultState":
+        fs = cls()
+        fs.load(d)
+        return fs
+
+
+# ---------------------------------------------------------------------------
+# Injector
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Feeds a ``FaultSchedule`` through a private event kernel into the
+    running engine.
+
+    The engine calls ``bind`` once per ``run()`` (fresh sessions load
+    the schedule into the kernel; resumed sessions arrive with the
+    kernel already restored from ``SessionState.faults_state``, pending
+    future events included), ``poll`` at every round boundary (applies
+    every due fault to the live ``FaultState``, emits ``obs.fault``, and
+    performs master failover), and ``apply_selection`` after each
+    cluster's selection (skip-many: crashed members are forced out of
+    the participant mask with Skip-One fairness carryover).
+    """
+
+    def __init__(self, schedule: FaultSchedule, seed: Optional[int] = None):
+        self.schedule = schedule
+        self.kernel = EventQueue(schedule.seed if seed is None else seed)
+        self.state = FaultState(schedule.max_retries, schedule.backoff0_s)
+
+    # -- engine lifecycle ----------------------------------------------------
+    def bind(self, ctx, plan, state) -> None:
+        if state.round_idx == 0:
+            self.kernel.reset()
+            self.state.reset()
+            for f in self.schedule.faults:
+                self._push(f)
+
+    def _push(self, f) -> None:
+        kind = _KIND[type(f)]
+        if isinstance(f, LinkOutage):
+            self.kernel.push(f.t, kind, cluster=f.cluster, link=f.link,
+                             duration_s=float(f.duration_s))
+            self.kernel.push(f.t + f.duration_s, LINK_UP,
+                             cluster=f.cluster, link=f.link)
+        elif isinstance(f, SatCrash):
+            self.kernel.push(f.t, kind, sat=f.sat,
+                             duration_s=float(f.duration_s))
+            self.kernel.push(f.t + f.duration_s, SAT_REBOOT, sat=f.sat)
+        elif isinstance(f, SatReboot):
+            self.kernel.push(f.t, kind, sat=f.sat)
+        elif isinstance(f, MasterFailure):
+            self.kernel.push(f.t, kind, cluster=f.cluster)
+        elif isinstance(f, (PayloadCorruption, PayloadLoss)):
+            self.kernel.push(f.t, kind, cluster=f.cluster)
+        elif isinstance(f, ClockDrift):
+            self.kernel.push(f.t, kind, cluster=f.cluster,
+                             skew_s=float(f.skew_s))
+        else:
+            raise TypeError(f"unknown fault type {type(f).__name__}")
+
+    def poll(self, ctx, plan, state, t: float) -> None:
+        """Apply every fault event due at sim time <= t, in kernel
+        order. Called by the engine at round boundaries — mid-round
+        faults land at the next boundary (round granularity is the
+        engine's accounting granularity; Transport reads the live view
+        within the round)."""
+        for ev in self.kernel.pop_until(t):
+            self._apply(ev, ctx, plan, state)
+
+    def _apply(self, ev, ctx, plan, state) -> None:
+        obs, fs = ctx.obs, self.state
+        if obs is not None:
+            obs.fault(ev.kind, ev.t, cluster=ev.cluster, sat=ev.sat,
+                      **ev.payload)
+        if ev.kind == LINK_DOWN:
+            key = (ev.payload["link"], ev.cluster)
+            end = ev.t + float(ev.payload["duration_s"])
+            fs.outage_until[key] = max(fs.outage_until.get(key, 0.0), end)
+        elif ev.kind == LINK_UP:
+            key = (ev.payload["link"], ev.cluster)
+            if fs.outage_until.get(key, 0.0) <= ev.t:
+                fs.outage_until.pop(key, None)
+        elif ev.kind == SAT_CRASH:
+            end = ev.t + float(ev.payload["duration_s"])
+            fs.crashed[ev.sat] = max(fs.crashed.get(ev.sat, 0.0), end)
+            # a crashed master cannot aggregate: re-elect immediately
+            for kc in np.flatnonzero(state.masters == ev.sat):
+                self._failover(ctx, plan, state, int(kc), ev.t,
+                               reason=SAT_CRASH)
+        elif ev.kind == SAT_REBOOT:
+            if fs.crashed.get(ev.sat, 0.0) <= ev.t:
+                fs.crashed.pop(ev.sat, None)
+        elif ev.kind == MASTER_FAIL:
+            self._failover(ctx, plan, state, int(ev.cluster), ev.t,
+                           reason=MASTER_FAIL)
+        elif ev.kind in (PAYLOAD_CORRUPT, PAYLOAD_LOSS):
+            key = (ev.kind, ev.cluster)
+            fs.payload_pending[key] = fs.payload_pending.get(key, 0) + 1
+        elif ev.kind == CLOCK_DRIFT:
+            # re-sync cost: latency-only, through the one accounting
+            # entry point so the observer mirror stays bit-exact
+            ctx.transport.for_cluster(ev.cluster).wait(
+                float(ev.payload["skew_s"]), cause="clock_drift")
+
+    def _failover(self, ctx, plan, state, kc: int, t: float,
+                  reason: str) -> None:
+        """Re-elect cluster ``kc``'s master: the next StarMask-ranked
+        member — highest LISL fan-out among members alive at ``t``,
+        excluding the failed master (the same rule StarMask used for the
+        original election). Intra-cluster uploads re-route automatically
+        because mixing reads ``state.masters``. With no live alternative
+        the old master is kept (fully-degraded cluster; uploads to it
+        still account — the sim keeps moving rather than wedging)."""
+        if kc >= len(state.masters):
+            return
+        old = int(state.masters[kc])
+        members = plan.clusters[kc]
+        alive = [int(i) for i in members
+                 if int(i) != old and not self.state.down(int(i), t)]
+        if not alive:
+            if ctx.obs is not None:
+                ctx.obs.recovery("failover_exhausted", t, cluster=kc,
+                                 sat=old, reason=reason)
+            return
+        fanout = np.asarray(ctx.env.fanout, float)
+        new = int(alive[int(np.argmax(fanout[alive]))])
+        state.masters[kc] = new
+        if ctx.obs is not None:
+            ctx.obs.recovery("failover", t, cluster=kc, sat=new,
+                             old_master=old, new_master=new, reason=reason)
+
+    def apply_selection(self, ctx, sel, skip_state, kc: int,
+                        t: float) -> int:
+        """Skip-many under crashes: force every crashed engaged member
+        out of the participant mask (they idle the full barrier, exactly
+        like a Skip-One'd member) with fairness carryover on the
+        Skip-One counters. Returns the number of members forced out."""
+        down = [li for li, cid in enumerate(sel.ids)
+                if self.state.down(int(cid), t)]
+        forced = [li for li in down if sel.mask[li]]
+        for li in forced:
+            sel.mask[li] = False
+            if skip_state is not None and hasattr(skip_state, "tau"):
+                from repro.core.skipone import force_skip
+                force_skip(skip_state, li)
+        if forced and ctx.obs is not None:
+            ctx.obs.recovery("skip_crashed", t, cluster=kc,
+                             skipped=len(forced),
+                             sats=[int(sel.ids[li]) for li in forced])
+        return len(forced)
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"kernel": self.kernel.state_dict(),
+                "state": self.state.to_dict()}
+
+    def load_state_dict(self, sd: Optional[dict]) -> None:
+        """Restore a snapshot (or clear, when None — a reused injector
+        starting a fresh session must not leak the previous campaign).
+        Mutates the existing ``FaultState`` in place: Transport views
+        built from it stay live."""
+        if sd is None:
+            self.kernel.reset()
+            self.state.reset()
+            return
+        self.kernel.load_state_dict(sd["kernel"])
+        self.state.load(sd["state"])
+
+
+def as_injector(faults) -> Optional[FaultInjector]:
+    """Engine-facing coercion: None | FaultSchedule | FaultInjector."""
+    if faults is None or isinstance(faults, FaultInjector):
+        return faults
+    if isinstance(faults, FaultSchedule):
+        return FaultInjector(faults)
+    raise TypeError("faults must be a FaultSchedule or FaultInjector, "
+                    f"got {type(faults).__name__}")

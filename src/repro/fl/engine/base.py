@@ -130,6 +130,11 @@ class SessionState:
     ``SemiSyncPacing``'s straggler stash, so a semi-sync disk resume is
     exact even with a deferred update pending (DESIGN.md §8); ``None`` for
     stateless policies and on older checkpoints.
+    ``faults_state`` is the attached ``FaultInjector``'s snapshot (its
+    kernel — pending future fault events included — plus the live
+    outage/crash view; DESIGN.md §13): a mid-campaign resume replays the
+    uninterrupted fault timeline bit-for-bit. ``None`` when no schedule
+    is attached and on older checkpoints.
     """
     round_idx: int
     cluster_models: Any              # stacked (K, ...) pytree
@@ -139,6 +144,7 @@ class SessionState:
     ledger: EnergyLedger
     rng_state: Any = None            # np Generator.bit_generator.state dict
     pacing_state: Any = None         # PacingPolicy.state_dict() snapshot
+    faults_state: Any = None         # FaultInjector.state_dict() snapshot
 
 
 @dataclass

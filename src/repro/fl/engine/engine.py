@@ -85,7 +85,7 @@ class RoundEngine:
 
     def __init__(self, cfg: EngineConfig, env, model, *, clustering,
                  selection, mixing, codec=None, pacing=None,
-                 name: str = "engine", observer=None):
+                 name: str = "engine", observer=None, faults=None):
         cfg = resolve_c_flop(cfg)
         self.cfg, self.env, self.model = cfg, env, model
         self.clustering, self.selection, self.mixing = \
@@ -93,6 +93,14 @@ class RoundEngine:
         self.codec = codec if codec is not None else IdentityCodec()
         self.pacing = pacing if pacing is not None else SyncPacing()
         self.observer = observer     # EngineObserver | None (repro.obs)
+        # fault injection (repro.faults, DESIGN.md §13): None, a
+        # FaultSchedule, or a prebuilt FaultInjector. With None attached
+        # every fault code path below is a pointer comparison — the
+        # golden ledgers stay bit-for-bit
+        if faults is not None:
+            from repro.faults import as_injector
+            faults = as_injector(faults)
+        self.faults = faults
         self.name = name
         self.executor = resolve_executor(cfg, model)   # repro.fl.exec
         self.rng = np.random.default_rng(cfg.seed)
@@ -107,7 +115,9 @@ class RoundEngine:
         return EngineContext(
             cfg=cfg, env=env, model=self.model,
             transport=Transport(ledger, env.link_params, cfg.model_bits,
-                                self.codec, obs=self.observer),
+                                self.codec, obs=self.observer,
+                                faults=None if self.faults is None
+                                else self.faults.state),
             rng=self.rng, obs=self.observer,
             tt_full=t_train(env.n_samples, cfg.c_flop, self._alpha,
                             cfg.local_epochs),
@@ -204,6 +214,13 @@ class RoundEngine:
                 # previous run() left on this (reused) policy instance
                 self.pacing.load_state_dict(getattr(state, "pacing_state",
                                                     None))
+            if self.faults is not None:
+                # same discipline: restore the fault kernel (pending
+                # future events included) + live view, or clear a reused
+                # injector — a mid-campaign resume replays the
+                # uninterrupted fault timeline bit-for-bit
+                self.faults.load_state_dict(getattr(state, "faults_state",
+                                                    None))
         key = state.rng_key
 
         if hasattr(self.pacing, "bind"):
@@ -211,6 +228,8 @@ class RoundEngine:
             # plan, masters, and current wall clock before the first
             # round — after resume, so restored clocks are not clobbered
             self.pacing.bind(ctx, plan, state)
+        if self.faults is not None:
+            self.faults.bind(ctx, plan, state)
 
         history: list[dict] = []
         wall = ledger.wall_clock_s
@@ -219,6 +238,11 @@ class RoundEngine:
             if obs is not None:
                 obs.round_start(r, wall)
                 obs.phase_start("select+upload")
+            if self.faults is not None:
+                # apply every fault due by this round boundary (outages
+                # arm the transport gate, crashes mark members down,
+                # master failures re-elect BEFORE uploads route)
+                self.faults.poll(ctx, plan, state, wall)
             self.pacing.begin_round(ctx, r)
             barriers: list[float] = []
             sels: list[RoundSelection] = []
@@ -226,6 +250,13 @@ class RoundEngine:
             for kc, c in enumerate(plan.clusters):
                 sel, state.skip_states[kc] = self.selection.select(
                     ctx, c, state.skip_states[kc], r)
+                if self.faults is not None:
+                    # skip-many: crashed members forced out of the mask
+                    # (they idle the barrier like Skip-One'd members)
+                    # with fairness carryover on the Skip-One counters
+                    self.faults.apply_selection(ctx, sel,
+                                                state.skip_states[kc],
+                                                kc, wall)
                 sels.append(sel)
                 if obs is not None:
                     obs.select(r, kc, sel)
@@ -257,6 +288,8 @@ class RoundEngine:
             state.pacing_state = (self.pacing.state_dict()
                                   if hasattr(self.pacing, "state_dict")
                                   else None)
+            state.faults_state = (self.faults.state_dict()
+                                  if self.faults is not None else None)
             wall += round_barrier
             wall += dt_comm
             ledger.wall_clock_s = wall
@@ -279,6 +312,11 @@ class RoundEngine:
                 if obs is not None:
                     obs.phase_end("eval")
 
+        if self.faults is not None:
+            # flush the fault timeline to the final wall clock (pending
+            # recoveries land in the trace; faults beyond stay queued in
+            # the kernel and ride any checkpoint)
+            self.faults.poll(ctx, plan, state, wall)
         if obs is not None:
             obs.phase_start("finalize")
         w_final = self.mixing.finalize(ctx, plan, state, N_k, wall)

@@ -32,7 +32,8 @@ def make_crosatfl(cfg: EngineConfig, env, model, *,
                   policy_params: Optional[dict] = None,
                   mixing=None, pacing=None, codec=None,
                   mixing_backend: Optional[str] = None,
-                  name: str = "CroSatFL", observer=None) -> RoundEngine:
+                  name: str = "CroSatFL", observer=None,
+                  faults=None) -> RoundEngine:
     """CroSatFL = StarMask clustering x Skip-One x random-k cross-agg.
 
     ``mixing``/``pacing``/``codec`` override single policies for scenario
@@ -41,6 +42,8 @@ def make_crosatfl(cfg: EngineConfig, env, model, *,
     CrossAggMixing policy but routes its contraction through the fused
     Pallas cross_agg kernel (ignored when ``mixing`` is given).
     ``observer`` attaches an ``EngineObserver`` (repro.obs) to the session.
+    ``faults`` attaches a ``repro.faults`` ``FaultSchedule`` /
+    ``FaultInjector`` (None = the fault-free golden path).
     """
     return RoundEngine(
         cfg, env, model,
@@ -50,13 +53,14 @@ def make_crosatfl(cfg: EngineConfig, env, model, *,
         mixing=mixing if mixing is not None else CrossAggMixing(
             k_nbr=k_nbr, backend=mixing_backend or "einsum"),
         pacing=pacing, codec=codec,
-        name=name, observer=observer)
+        name=name, observer=observer, faults=faults)
 
 
 def make_baseline(name: str, cfg: EngineConfig, env, model, *,
                   select_m: int = 16, minifloat_bits: int = 12,
                   arith_scale: float = 0.5,
-                  n_clusters: int = 9, observer=None) -> RoundEngine:
+                  n_clusters: int = 9, observer=None,
+                  faults=None) -> RoundEngine:
     """The five comparison baselines (paper §V-A) as policy quadruples.
 
       FedSyn   = single cluster x all x GS star
@@ -90,7 +94,7 @@ def make_baseline(name: str, cfg: EngineConfig, env, model, *,
     else:
         raise KeyError(f"unknown baseline {name!r}")
     return RoundEngine(cfg, env, model, name=name, observer=observer,
-                       **policies)
+                       faults=faults, **policies)
 
 
 BASELINE_NAMES = ("FedSyn", "FedLEO", "FELLO", "FedSCS", "FedOrbit")
@@ -100,7 +104,7 @@ def make_scenario(name: str, cfg: EngineConfig, env, model, *,
                   k_nbr: int = 2,
                   skip_one: Optional[SkipOneParams] = None,
                   starmask: Optional[StarMaskParams] = None,
-                  observer=None, **kw) -> RoundEngine:
+                  observer=None, faults=None, **kw) -> RoundEngine:
     """Scenario-zoo presets (DESIGN.md §8): CroSatFL's policy quadruple
     with ONE surface swapped — each scenario is a policy, not a loop.
 
@@ -128,7 +132,7 @@ def make_scenario(name: str, cfg: EngineConfig, env, model, *,
     ``alpha0``, ``consensus_eps``, ``cpu_threshold``).
     """
     base = dict(k_nbr=k_nbr, skip_one=skip_one, starmask=starmask,
-                name=name, observer=observer)
+                name=name, observer=observer, faults=faults)
     if name == "CroSatFL-SemiSync":
         return make_crosatfl(cfg, env, model,
                              pacing=SemiSyncPacing(**kw), **base)

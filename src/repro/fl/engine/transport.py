@@ -117,18 +117,31 @@ class Transport:
     GS-bootstrap traffic). With ``obs`` set, ``for_cluster`` returns
     cluster-labelled views even for the default codec — with it unset the
     pre-obs view caching (and thus the accounting path) is untouched.
+
+    ``faults`` (a ``repro.faults.FaultState``, DESIGN.md §13) makes the
+    three message methods fault-aware: a message hitting an active link
+    outage is retried with exponential backoff — every failed attempt
+    charges the FULL message energy/time (the transmitter really burned
+    it) plus a ``wait(cause="retry")`` backoff — until the outage ends
+    or ``max_retries`` attempts are exhausted (degraded-mode drop); a
+    pending payload corruption/loss costs one charged retransmission.
+    All retry charges flow through the same ``add_*``/``obs`` pairs as
+    normal traffic, so the observer's mirror ledger stays bit-exact
+    under faults by construction. With ``faults`` None (or no applicable
+    fault) the accounting path is byte-identical to the pre-fault code.
     """
 
     RELAY_FALLBACK_M = 3e6   # nominal relayed path when instantaneously cut
 
     def __init__(self, ledger: EnergyLedger, link_params: LinkParams,
                  model_bits: float, codec=None, obs=None,
-                 cluster: Optional[int] = None):
+                 cluster: Optional[int] = None, faults=None):
         self.ledger = ledger
         self.lp = link_params
         self.model_bits = model_bits
         self.obs = obs
         self.cluster = cluster
+        self.faults = faults         # repro.faults.FaultState | None
         if codec is None:
             codec = IdentityCodec()
         self.codec_map = (codec if isinstance(codec, CodecMap)
@@ -147,7 +160,7 @@ class Transport:
         the view additionally carries ``cluster=kc`` so comm events are
         attributed (same ledger, same floats — labels only)."""
         c = self.codec_map.codec_for(kc)
-        if self.obs is None:
+        if self.obs is None and self.faults is None:
             if c is self.codec:
                 return self
             view = self._views.get(id(c))
@@ -155,12 +168,15 @@ class Transport:
                 view = Transport(self.ledger, self.lp, self.model_bits, c)
                 self._views[id(c)] = view
             return view
+        # with an observer or fault state attached, views carry the
+        # cluster label so comm attribution / outage scoping both work
         k = (id(c), None if kc is None else int(kc))
         view = self._views.get(k)
         if view is None:
             view = Transport(self.ledger, self.lp, self.model_bits, c,
                              obs=self.obs,
-                             cluster=None if kc is None else int(kc))
+                             cluster=None if kc is None else int(kc),
+                             faults=self.faults)
             self._views[k] = view
         return view
 
@@ -175,12 +191,55 @@ class Transport:
     def arith_scale(self) -> float:
         return self.codec.arith_scale
 
+    # -- fault gate (repro.faults, DESIGN.md §13) ----------------------------
+    def _deliver(self, link: str, add, n: int, d: float, e: float,
+                 t: float) -> bool:
+        """Charge any fault-recovery cost for one message batch; return
+        True when the batch ultimately goes through (the caller then
+        accounts the final successful copy exactly as it always did) and
+        False on a degraded-mode drop after capped retries."""
+        fs, obs, kc = self.faults, self.obs, self.cluster
+        now = float(self.ledger.wall_clock_s)
+        reason = fs.take_payload_fault(kc)
+        if reason is not None:
+            # the corrupted/lost first copy still burned the link
+            add(n, e, t)
+            if obs is not None:
+                self.obs.comm(link, kc, n, d, e, t)
+                obs.recovery("retransmit", now, cluster=kc, reason=reason,
+                             link=link)
+        end = fs.outage_end("gs" if link == "gs" else "lisl", kc, now)
+        if end <= now:
+            return True
+        for attempt in range(fs.max_retries):
+            # failed attempt: the transmitter burned the full message
+            # cost into the outage, then backs off exponentially
+            add(n, e, t)
+            backoff = fs.backoff0_s * (2.0 ** attempt)
+            self.ledger.add_wait(backoff)
+            if obs is not None:
+                self.obs.comm(link, kc, n, d, e, t)
+                obs.wait(backoff, "retry", kc)
+                obs.recovery("retry", now, cluster=kc, link=link,
+                             attempt=attempt)
+            now += backoff
+            if now >= end:
+                return True
+        fs.dropped += 1
+        if obs is not None:
+            obs.recovery("drop", now, cluster=kc, link=link,
+                         attempts=fs.max_retries)
+        return False
+
     # -- message accounting --------------------------------------------------
     # e/t go through locals so observer and ledger see the SAME floats
     def gs(self, n: int, distance_m: float) -> None:
         d, lp = self.payload_bits, self.lp
         e = n * e_gs(d, lp.gs_rate, distance_m, lp)
         t = n * t_gs(d, lp.gs_rate, distance_m, lp)
+        if self.faults is not None and \
+                not self._deliver("gs", self.ledger.add_gs, n, d, e, t):
+            return
         self.ledger.add_gs(n, e, t)
         if self.obs is not None:
             self.obs.comm("gs", self.cluster, n, d, e, t)
@@ -189,6 +248,9 @@ class Transport:
         d, lp = self.payload_bits, self.lp
         e = n * e_lisl(d, lp.lisl_rate, distance_m, lp)
         t = n * t_lisl(d, lp.lisl_rate, distance_m, lp)
+        if self.faults is not None and \
+                not self._deliver("intra", self.ledger.add_intra, n, d, e, t):
+            return
         self.ledger.add_intra(n, e, t)
         if self.obs is not None:
             self.obs.comm("intra", self.cluster, n, d, e, t)
@@ -197,6 +259,9 @@ class Transport:
         d, lp = self.payload_bits, self.lp
         e = n * e_lisl(d, lp.lisl_rate, distance_m, lp)
         t = n * t_lisl(d, lp.lisl_rate, distance_m, lp)
+        if self.faults is not None and \
+                not self._deliver("inter", self.ledger.add_inter, n, d, e, t):
+            return
         self.ledger.add_inter(n, e, t)
         if self.obs is not None:
             self.obs.comm("inter", self.cluster, n, d, e, t)

@@ -72,6 +72,26 @@ class EngineObserver:
         implementations must never route them into the mirror ledger
         (the accounting hooks above already carry every joule/second)."""
 
+    def fault(self, fkind: str, sim_t: float,
+              cluster: Optional[int] = None,
+              sat: Optional[int] = None, **info) -> None:
+        """One injected fault (or its paired recovery event) applied by a
+        ``repro.faults.FaultInjector``: ``fkind`` is the kernel fault
+        taxonomy (link_down/link_up/sat_crash/sat_reboot/master_fail/
+        payload_corrupt/payload_loss/clock_drift), ``sim_t`` the sim time
+        it landed. Timeline observability only — any energy/time cost of
+        a fault flows through the accounting hooks above; implementations
+        must never route fault events into a mirror ledger."""
+
+    def recovery(self, action: str, sim_t: float,
+                 cluster: Optional[int] = None,
+                 sat: Optional[int] = None, **info) -> None:
+        """One recovery action the engine stack took under faults:
+        ``action`` in {retry, retransmit, drop, failover,
+        failover_exhausted, skip_crashed}. Same contract as ``fault``:
+        the charged cost (retry energy, backoff waits) already went
+        through ``comm``/``wait`` — never mirror these."""
+
     def note(self, name: str, **fields) -> None:
         """Free-form instant (master migration, gossip consensus, ...)."""
 
@@ -183,6 +203,20 @@ class TracingObserver(EngineObserver):
         self.tracer.emit("sim_event", etype=etype, sim_t=float(sim_t),
                          seq=int(seq), cluster=cluster, sat=sat, round=rnd,
                          **{k: float(v) for k, v in payload.items()})
+
+    def fault(self, fkind, sim_t, cluster=None, sat=None, **info):
+        # timeline + counters only — the mirror ledger must NOT see
+        # fault events (their cost arrives via comm/wait, exactly once)
+        self.metrics.count("faults", 1, fkind=fkind)
+        self.tracer.emit("fault", fkind=fkind, sim_t=float(sim_t),
+                         cluster=cluster, sat=sat, round=self._round,
+                         **info)
+
+    def recovery(self, action, sim_t, cluster=None, sat=None, **info):
+        self.metrics.count("recoveries", 1, action=action)
+        self.tracer.emit("recovery", action=action, sim_t=float(sim_t),
+                         cluster=cluster, sat=sat, round=self._round,
+                         **info)
 
     def note(self, name, **fields):
         self.tracer.emit("note", name=name, **fields)

@@ -31,7 +31,8 @@ def summarize(events: list[dict]) -> dict:
          "gs_comm": 0, "intra_comm": 0, "inter_comm": 0,
          "gs_bits": 0.0, "lisl_bits": 0.0,
          "wait_s": 0.0, "sim_time_s": 0.0,
-         "round_latencies": [], "wait_by_cause": {}, "sim_events": {}}
+         "round_latencies": [], "wait_by_cause": {}, "sim_events": {},
+         "faults": {}, "recoveries": {}}
     for ev in events:
         kind = ev["kind"]
         if kind == "session_start":
@@ -55,6 +56,12 @@ def summarize(events: list[dict]) -> dict:
         elif kind == "sim_event":
             et = ev.get("etype", "?")
             s["sim_events"][et] = s["sim_events"].get(et, 0) + 1
+        elif kind == "fault":
+            fk = ev.get("fkind", "?")
+            s["faults"][fk] = s["faults"].get(fk, 0) + 1
+        elif kind == "recovery":
+            ac = ev.get("action", "?")
+            s["recoveries"][ac] = s["recoveries"].get(ac, 0) + 1
         elif kind == "round_end":
             s["rounds"] += 1
             s["round_latencies"].append(ev["sim_dur"])
@@ -130,6 +137,14 @@ def render(paths: list[str]) -> str:
             evs = ", ".join(f"{k}={v}" for k, v in
                             sorted(s["sim_events"].items()))
             out.append(f"  kernel events: {evs}")
+        if s["faults"]:
+            fs = ", ".join(f"{k}={v}" for k, v in
+                           sorted(s["faults"].items()))
+            out.append(f"  faults injected: {fs}")
+        if s["recoveries"]:
+            rs = ", ".join(f"{k}={v}" for k, v in
+                           sorted(s["recoveries"].items()))
+            out.append(f"  recovery actions: {rs}")
     return "\n".join(out)
 
 

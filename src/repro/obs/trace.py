@@ -51,6 +51,10 @@ SCHEMA: dict[str, dict[str, tuple]] = {
     "note": {"name": (str,)},
     "sim_event": {"etype": (str,), "sim_t": _NUM, "seq": (int,),
                   "round": (int,), "cluster": (int,), "sat": (int,)},
+    "fault": {"fkind": (str,), "sim_t": _NUM, "round": (int,),
+              "cluster": (int,), "sat": (int,)},
+    "recovery": {"action": (str,), "sim_t": _NUM, "round": (int,),
+                 "cluster": (int,), "sat": (int,)},
     "round_end": {"round": (int,), "sim_t": _NUM, "sim_dur": _NUM,
                   "host_dur": _NUM},
     "session_end": {"sim_t": _NUM, "ledger": (dict,)},
@@ -200,6 +204,16 @@ class SpanTracer:
                         "name": et, "s": "t", "ts": ev["sim_t"] * 1e6,
                         "args": {"seq": ev.get("seq"),
                                  "round": ev.get("round")}})
+            elif kind in ("fault", "recovery"):
+                # fault timeline: one sim-side track for the whole
+                # campaign — faults and the recovery actions they
+                # triggered interleave at their true sim times
+                out.append({
+                    "ph": "i", "pid": 1, "tid": tid(1, "faults"),
+                    "name": ev.get("fkind") or ev.get("action"),
+                    "s": "t", "ts": ev["sim_t"] * 1e6,
+                    "args": {k: v for k, v in ev.items()
+                             if k not in ("v", "kind", "t_host")}})
             elif kind == "phase":
                 out.append({
                     "ph": "X", "pid": 2, "tid": tid(2, "engine"),

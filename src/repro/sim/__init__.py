@@ -4,7 +4,8 @@
 * ``events``  — the kernel: heap-ordered ``EventQueue`` with a seeded,
   bit-reproducible total order and the event taxonomy (contact
   open/close, train done, transfer done, straggler timeout, merge
-  commit).
+  commit, plus the fault kinds repro.faults injects: link down/up,
+  sat crash/reboot, master fail, payload corrupt/loss, clock drift).
 * ``clocks``  — per-cluster / per-GS monotone virtual clocks.
 * ``windows`` — ``WindowTable`` contact windows streamed as events.
 * ``driver``  — pacing policies that run the ``RoundEngine`` on the
@@ -15,13 +16,17 @@
 """
 from repro.sim.clocks import ClockSet
 from repro.sim.driver import EventAsyncPacing, EventDrivenPacing
-from repro.sim.events import (CONTACT_CLOSE, CONTACT_OPEN, MERGE_COMMIT,
-                              STRAGGLER_TIMEOUT, TRAIN_DONE, TRANSFER_DONE,
-                              Event, EventQueue)
+from repro.sim.events import (CLOCK_DRIFT, CONTACT_CLOSE, CONTACT_OPEN,
+                              LINK_DOWN, LINK_UP, MASTER_FAIL, MERGE_COMMIT,
+                              PAYLOAD_CORRUPT, PAYLOAD_LOSS, SAT_CRASH,
+                              SAT_REBOOT, STRAGGLER_TIMEOUT, TRAIN_DONE,
+                              TRANSFER_DONE, Event, EventQueue)
 from repro.sim.windows import WindowEventSource
 
 __all__ = [
-    "CONTACT_CLOSE", "CONTACT_OPEN", "MERGE_COMMIT", "STRAGGLER_TIMEOUT",
-    "TRAIN_DONE", "TRANSFER_DONE", "ClockSet", "Event", "EventAsyncPacing",
+    "CLOCK_DRIFT", "CONTACT_CLOSE", "CONTACT_OPEN", "LINK_DOWN", "LINK_UP",
+    "MASTER_FAIL", "MERGE_COMMIT", "PAYLOAD_CORRUPT", "PAYLOAD_LOSS",
+    "SAT_CRASH", "SAT_REBOOT", "STRAGGLER_TIMEOUT", "TRAIN_DONE",
+    "TRANSFER_DONE", "ClockSet", "Event", "EventAsyncPacing",
     "EventDrivenPacing", "EventQueue", "WindowEventSource",
 ]

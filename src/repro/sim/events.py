@@ -42,8 +42,33 @@ STRAGGLER_TIMEOUT = "straggler_timeout"
 TRANSFER_DONE = "transfer_done"
 MERGE_COMMIT = "merge_commit"
 
+# Fault taxonomy (DESIGN.md §13, repro.faults): injected by a
+# ``FaultInjector``'s private kernel, never by the physical drivers.
+LINK_UP = "link_up"
+SAT_REBOOT = "sat_reboot"
+LINK_DOWN = "link_down"
+SAT_CRASH = "sat_crash"
+MASTER_FAIL = "master_fail"
+PAYLOAD_CORRUPT = "payload_corrupt"
+PAYLOAD_LOSS = "payload_loss"
+CLOCK_DRIFT = "clock_drift"
+
 # Physical resolution order for co-timed events (smaller pops first).
+# Fault kinds extend the total order at negative priorities so the
+# environment's state is settled before any physical event at the same
+# instant resolves against it — and recoveries resolve before faults, so
+# a reboot+crash (or up+down) glitch co-timed at t leaves the element
+# DOWN, never a lost fault. Existing kinds keep their exact values: the
+# golden event order of the physical drivers is untouched.
 PRIORITY = {
+    LINK_UP: -8,
+    SAT_REBOOT: -7,
+    LINK_DOWN: -6,
+    SAT_CRASH: -5,
+    MASTER_FAIL: -4,
+    PAYLOAD_CORRUPT: -3,
+    PAYLOAD_LOSS: -2,
+    CLOCK_DRIFT: -1,
     CONTACT_CLOSE: 0,
     CONTACT_OPEN: 1,
     TRAIN_DONE: 2,
@@ -121,15 +146,59 @@ class EventQueue:
     # -- checkpointing -------------------------------------------------------
     def state_dict(self) -> dict:
         """Tie-break RNG state + sequence counter, JSON-serializable.
-        Pending events are NOT exported: the drivers drain the queue to
-        the round boundary before the engine snapshots pacing state, so
-        a non-empty heap at a checkpoint would be a driver bug."""
-        return {"seq": int(self._seq),
-                "rng": self.rng.bit_generator.state,
-                "pending": len(self._heap)}
+
+        The physical drivers drain the queue to the round boundary before
+        the engine snapshots pacing state, so their kernels checkpoint
+        with an empty heap and keep the exact pre-existing schema. Fault
+        kernels (repro.faults) legitimately carry FUTURE events (an
+        outage end, a scheduled crash) across round boundaries — a
+        non-empty heap is exported in full under ``"events"`` (sorted in
+        kernel pop order, tie-breaks included) so a resumed campaign
+        replays the uninterrupted one bit-for-bit."""
+        sd = {"seq": int(self._seq),
+              "rng": self.rng.bit_generator.state,
+              "pending": len(self._heap)}
+        if self._heap:
+            sd["events"] = [
+                [t, prio, tie, seq,
+                 {"kind": ev.kind, "cluster": ev.cluster, "sat": ev.sat,
+                  "payload": ev.payload}]
+                for t, prio, tie, seq, ev in
+                sorted(self._heap, key=lambda e: e[:4])]
+        return sd
 
     def load_state_dict(self, state: dict) -> None:
+        """Restore a ``state_dict()`` snapshot. Validates the schema and
+        every pending event's kind up front — an unknown kind fails HERE
+        with a clear error, not rounds later as a pop-time surprise."""
+        if not isinstance(state, dict):
+            raise ValueError("EventQueue.load_state_dict: state must be a "
+                             f"dict, got {type(state).__name__}")
+        missing = [k for k in ("seq", "rng") if k not in state]
+        if missing:
+            raise ValueError("EventQueue.load_state_dict: state missing "
+                             f"required keys {missing}")
+        entries = []
+        for i, entry in enumerate(state.get("events") or []):
+            if not (isinstance(entry, (list, tuple)) and len(entry) == 5
+                    and isinstance(entry[4], dict)):
+                raise ValueError("EventQueue.load_state_dict: malformed "
+                                 f"pending-event entry #{i}: {entry!r}")
+            t, prio, tie, seq, ev = entry
+            kind = ev.get("kind")
+            if kind not in PRIORITY:
+                raise ValueError(
+                    f"EventQueue.load_state_dict: unknown event kind "
+                    f"{kind!r} in pending event #{i}; known kinds: "
+                    f"{sorted(PRIORITY)}")
+            entries.append((float(t), int(prio), float(tie), int(seq),
+                            Event(t=float(t), kind=kind,
+                                  cluster=ev.get("cluster"),
+                                  sat=ev.get("sat"), seq=int(seq),
+                                  payload=dict(ev.get("payload") or {}))))
         self._heap.clear()
+        self._heap.extend(entries)
+        heapq.heapify(self._heap)
         self._seq = int(state["seq"])
         self.rng = np.random.default_rng(self._seed)
         self.rng.bit_generator.state = state["rng"]

@@ -1,0 +1,504 @@
+"""Fault injection + recovery (repro.faults, DESIGN.md §13).
+
+Layers under test:
+
+* the fault model: seeded ``FaultSchedule`` generators are pure values,
+  the ``FaultState`` live view scopes outages/crashes/payload faults
+  correctly and JSON-round-trips;
+* the recovery policies: ``Transport``'s retry-with-backoff gate charges
+  real energy per failed attempt (mirror-exact), ``force_skip`` carries
+  Skip-One fairness, master failover lands in the trace;
+* the kernel extension: fault kinds slot into ``EventQueue``'s total
+  order (recoveries resolve before faults at equal time) and pending
+  future events survive a checkpoint;
+* the golden-path guarantee: a session with NO schedule (or an EMPTY
+  one) stays bit-identical to tests/golden_engine.json;
+* checkpoint hardening: torn/corrupted checkpoints are detected
+  (``CheckpointCorrupt``) and resume falls back to the last good round
+  boundary.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # pragma: no cover - env dep
+    from mini_hypothesis import given, settings, strategies as st
+
+from repro.core.energy import EnergyLedger, LinkParams
+from repro.core.skipone import SkipOneState, force_skip
+from repro.faults import (FaultInjector, FaultSchedule, FaultState,
+                          LinkOutage, MasterFailure, PayloadCorruption,
+                          PayloadLoss, SatCrash, smoke_schedule)
+from repro.fl.engine.transport import Transport
+from repro.sim.events import (CONTACT_OPEN, LINK_DOWN, LINK_UP,
+                              PAYLOAD_CORRUPT, PAYLOAD_LOSS, SAT_CRASH,
+                              EventQueue)
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Fault model
+# ---------------------------------------------------------------------------
+
+class TestFaultSchedule:
+    def test_sorted_and_immutable(self):
+        sch = FaultSchedule((MasterFailure(50.0, 1),
+                             LinkOutage(10.0, 5.0),
+                             SatCrash(10.0, 3, 20.0)))
+        assert [f.t for f in sch.faults] == [10.0, 10.0, 50.0]
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            sch.seed = 9
+
+    def test_poisson_seed_determines_campaign(self):
+        kw = dict(n_clusters=4, n_clients=16, outage_rate_per_h=3.0,
+                  crash_rate_per_h=1.0, master_fail_rate_per_h=1.0,
+                  payload_rate_per_h=2.0, drift_rate_per_h=1.0)
+        a = FaultSchedule.poisson(7200.0, seed=3, **kw)
+        b = FaultSchedule.poisson(7200.0, seed=3, **kw)
+        c = FaultSchedule.poisson(7200.0, seed=4, **kw)
+        assert a.faults == b.faults and len(a) > 0
+        assert a.faults != c.faults
+        assert all(0.0 <= f.t < 7200.0 for f in a.faults)
+
+    def test_gilbert_elliott_bursts(self):
+        ge = FaultSchedule.gilbert_elliott(3600.0, seed=2, link="gs",
+                                           cluster=1, p_g2b=0.5, p_b2g=0.5)
+        assert len(ge) > 0
+        assert all(isinstance(f, LinkOutage) and f.link == "gs"
+                   and f.cluster == 1 and f.duration_s > 0
+                   for f in ge.faults)
+
+    def test_smoke_schedule_has_the_demo_faults(self):
+        sch = smoke_schedule(seed=0)
+        kinds = [type(f) for f in sch.faults if f.t == 0.0]
+        for k in (MasterFailure, LinkOutage, SatCrash, PayloadCorruption):
+            assert k in kinds
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 500), horizon=st.integers(600, 14400))
+    def test_property_schedule_replay_deterministic(self, seed, horizon):
+        kw = dict(n_clusters=3, n_clients=9, outage_rate_per_h=4.0,
+                  crash_rate_per_h=2.0, master_fail_rate_per_h=1.0,
+                  payload_rate_per_h=2.0, drift_rate_per_h=2.0)
+        assert (FaultSchedule.poisson(float(horizon), seed=seed, **kw).faults
+                == FaultSchedule.poisson(float(horizon), seed=seed,
+                                         **kw).faults)
+
+
+class TestFaultState:
+    def test_outage_scoping(self):
+        fs = FaultState()
+        fs.outage_until[("lisl", 2)] = 100.0
+        fs.outage_until[("lisl", None)] = 50.0
+        assert fs.outage_end("lisl", 2, 0.0) == 100.0   # cluster-scoped wins
+        assert fs.outage_end("lisl", 1, 0.0) == 50.0    # global applies
+        assert fs.outage_end("lisl", 1, 60.0) == 0.0    # expired
+        assert fs.outage_end("gs", 2, 0.0) == 0.0       # other link class
+
+    def test_crash_view(self):
+        fs = FaultState()
+        fs.crashed[3] = 500.0
+        assert fs.down(3, 100.0) and not fs.down(3, 500.0)
+        assert fs.down_sats(100.0) == [3] and fs.down_sats(501.0) == []
+
+    def test_payload_fault_one_shot_and_scoped(self):
+        fs = FaultState()
+        fs.payload_pending[(PAYLOAD_CORRUPT, 1)] = 1
+        fs.payload_pending[(PAYLOAD_LOSS, None)] = 1
+        assert fs.take_payload_fault(1) == PAYLOAD_CORRUPT
+        assert fs.take_payload_fault(1) == PAYLOAD_LOSS   # falls to global
+        assert fs.take_payload_fault(1) is None           # all consumed
+
+    def test_json_roundtrip(self):
+        fs = FaultState(max_retries=6, backoff0_s=15.0)
+        fs.outage_until[("gs", None)] = 80.0
+        fs.crashed[2] = 900.0
+        fs.payload_pending[(PAYLOAD_LOSS, 0)] = 2
+        fs.dropped = 1
+        fs2 = FaultState.from_dict(json.loads(json.dumps(fs.to_dict())))
+        assert fs2.to_dict() == fs.to_dict()
+        assert fs2.max_retries == 6 and fs2.backoff0_s == 15.0
+        assert fs2.outage_end("gs", 3, 0.0) == 80.0 and fs2.down(2, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Transport retry gate
+# ---------------------------------------------------------------------------
+
+def _tp(faults=None, obs=None):
+    led = EnergyLedger()
+    return led, Transport(led, LinkParams(), 1e6, obs=obs, faults=faults)
+
+
+class TestTransportFaultGate:
+    def test_empty_state_is_bitfree(self):
+        led_f, tp_f = _tp(faults=FaultState())
+        led_c, tp_c = _tp()
+        for tp in (tp_f, tp_c):
+            tp.gs(2, 5e5)
+            tp.intra(3, 1e6)
+            tp.inter(1, 2e6)
+        assert dataclasses.asdict(led_f) == dataclasses.asdict(led_c)
+
+    def test_outage_retries_charge_real_energy_then_deliver(self):
+        """200s LISL outage, 30s base backoff: attempts at +30,+90,+210
+        burn 3 full copies + 210s of retry wait, then the real copy
+        lands — 4x the clean energy, bit-exactly."""
+        fs = FaultState(max_retries=4, backoff0_s=30.0)
+        fs.outage_until[("lisl", None)] = 200.0
+        led_f, tp_f = _tp(faults=fs)
+        tp_f.intra(1, 1e6)
+        led_c, tp_c = _tp()
+        for _ in range(4):                     # same float-add sequence
+            tp_c.intra(1, 1e6)
+        assert led_f.intra_lisl_count == 4
+        assert led_f.lisl_energy_j == led_c.lisl_energy_j
+        assert led_f.waiting_time_s == 30.0 + 60.0 + 120.0
+        assert fs.dropped == 0
+
+    def test_capped_retries_drop_degraded(self):
+        """An outage longer than the whole backoff budget: max_retries
+        charged attempts, then the batch is DROPPED (no final copy)."""
+        fs = FaultState(max_retries=4, backoff0_s=30.0)
+        fs.outage_until[("gs", None)] = 1e9
+        led, tp = _tp(faults=fs)
+        tp.gs(1, 5e5)
+        assert led.gs_count == 4               # 4 failed copies, no 5th
+        assert led.waiting_time_s == 30.0 + 60.0 + 120.0 + 240.0
+        assert fs.dropped == 1
+
+    def test_payload_corruption_costs_one_retransmission(self):
+        fs = FaultState()
+        fs.payload_pending[(PAYLOAD_CORRUPT, None)] = 1
+        led_f, tp_f = _tp(faults=fs)
+        tp_f.intra(2, 1e6)                     # corrupted copy + resend
+        tp_f.intra(2, 1e6)                     # fault consumed: normal
+        led_c, tp_c = _tp()
+        for _ in range(3):
+            tp_c.intra(2, 1e6)
+        assert dataclasses.asdict(led_f) == dataclasses.asdict(led_c)
+
+    def test_mirror_reconciles_under_faults(self):
+        """Every retry joule/second hits the observer exactly once: the
+        mirror ledger stays bit-exact through outage retries, payload
+        retransmissions, and a degraded drop."""
+        from repro.obs import TracingObserver
+        obs = TracingObserver()
+        fs = FaultState(max_retries=3, backoff0_s=10.0)
+        fs.outage_until[("lisl", None)] = 25.0
+        fs.payload_pending[(PAYLOAD_LOSS, None)] = 1
+        led, tp = _tp(faults=fs, obs=obs)
+        tp.intra(2, 1e6)                       # retries through the outage
+        led.wall_clock_s = 1000.0
+        fs.outage_until[("gs", None)] = 1e9
+        tp.gs(1, 5e5)                          # capped -> drop
+        obs.mirror.wall_clock_s = led.wall_clock_s
+        rec = obs.reconcile(led)
+        assert rec["exact"], rec["fields"]
+        actions = {e["action"] for e in obs.tracer.events
+                   if e["kind"] == "recovery"}
+        assert {"retransmit", "retry", "drop"} <= actions
+
+
+class TestLedgerValidation:
+    @pytest.mark.parametrize("call", [
+        lambda led: led.add_intra(1, float("nan"), 0.1),
+        lambda led: led.add_inter(1, 0.1, -0.5),
+        lambda led: led.add_gs(-1, 0.1, 0.1),
+        lambda led: led.add_train(float("nan"), 1.0),
+        lambda led: led.add_wait(-1.0),
+        lambda led: led.add_wait(float("nan")),
+    ])
+    def test_nan_negative_rejected_at_entry(self, call):
+        led = EnergyLedger()
+        before = dataclasses.asdict(led)
+        with pytest.raises(ValueError, match="NaN/negative"):
+            call(led)
+        assert dataclasses.asdict(led) == before   # rejected atomically
+
+    def test_zero_is_legal(self):
+        led = EnergyLedger()
+        led.add_intra(0, 0.0, 0.0)
+        led.add_wait(0.0)
+        led.add_train(0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel extension + injector checkpointing
+# ---------------------------------------------------------------------------
+
+class TestEventQueueFaultKinds:
+    def test_recoveries_resolve_before_faults_at_equal_time(self):
+        q = EventQueue(seed=0)
+        q.push(10.0, CONTACT_OPEN, sat=1)
+        q.push(10.0, LINK_DOWN, link="lisl")
+        q.push(10.0, LINK_UP)
+        q.push(10.0, SAT_CRASH, sat=2)
+        kinds = [ev.kind for ev in q.pop_until(10.0)]
+        assert kinds == [LINK_UP, LINK_DOWN, SAT_CRASH, CONTACT_OPEN]
+
+    def test_pending_events_survive_checkpoint(self):
+        q = EventQueue(seed=5)
+        q.push(100.0, LINK_DOWN, cluster=1, link="lisl", duration_s=50.0)
+        q.push(150.0, LINK_UP, cluster=1, link="lisl")
+        q.push(100.0, SAT_CRASH, sat=3, duration_s=600.0)
+        sd = json.loads(json.dumps(q.state_dict()))
+        assert sd["pending"] == 3
+        q2 = EventQueue(seed=5)
+        q2.load_state_dict(sd)
+        a = [(e.t, e.kind, e.cluster, e.sat, e.payload)
+             for e in q.pop_until(1e9)]
+        b = [(e.t, e.kind, e.cluster, e.sat, e.payload)
+             for e in q2.pop_until(1e9)]
+        assert a == b
+
+    def test_load_rejects_unknown_kind(self):
+        q = EventQueue(seed=1)
+        q.push(5.0, LINK_DOWN)
+        sd = q.state_dict()
+        sd["events"][0][4]["kind"] = "alien_invasion"
+        q2 = EventQueue()
+        with pytest.raises(ValueError, match="unknown event kind "
+                                             "'alien_invasion'"):
+            q2.load_state_dict(sd)
+
+    @pytest.mark.parametrize("bad", [
+        "not-a-dict", {"seq": 0}, {"rng": {}},
+        {"seq": 0, "rng": {}, "events": [[1.0, 0, 0.0, 0]]},
+    ])
+    def test_load_rejects_malformed_state(self, bad):
+        q = EventQueue()
+        with pytest.raises(ValueError):
+            q.load_state_dict(bad)
+
+
+class _Bindable:
+    round_idx = 0
+
+
+class TestInjectorCheckpoint:
+    def _bound(self, sch):
+        inj = FaultInjector(sch)
+        inj.bind(None, None, _Bindable())
+        return inj
+
+    def test_snapshot_resumes_pending_future_events(self):
+        sch = FaultSchedule((LinkOutage(100.0, 50.0),
+                             SatCrash(400.0, 2, 300.0),
+                             MasterFailure(900.0, 0)))
+        inj = self._bound(sch)
+        inj.kernel.pop_until(200.0)            # mid-campaign
+        inj.state.outage_until[("lisl", None)] = 150.0
+        sd = json.loads(json.dumps(inj.state_dict()))
+        inj2 = FaultInjector(sch)
+        inj2.load_state_dict(sd)
+        assert inj2.state.to_dict() == inj.state.to_dict()
+        rest = [(e.t, e.kind) for e in inj.kernel.pop_until(1e9)]
+        rest2 = [(e.t, e.kind) for e in inj2.kernel.pop_until(1e9)]
+        # crash @400 + its reboot @700 + master fail @900 still pending
+        assert rest == rest2 and len(rest) == 3
+
+    def test_load_none_clears_reused_injector(self):
+        inj = self._bound(FaultSchedule((LinkOutage(10.0, 5.0),)))
+        inj.state.crashed[1] = 99.0
+        inj.load_state_dict(None)
+        assert len(inj.kernel) == 0 and not inj.state.crashed
+
+    def test_state_identity_stable_across_load(self):
+        """Transport views hold a reference to the injector's FaultState;
+        reset/load must mutate IN PLACE, never swap the object."""
+        inj = self._bound(smoke_schedule(seed=1))
+        view = inj.state
+        inj.load_state_dict(json.loads(json.dumps(inj.state_dict())))
+        assert inj.state is view
+        inj.load_state_dict(None)
+        assert inj.state is view
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 300), cut=st.integers(0, 3600))
+    def test_property_checkpoint_cut_is_exact(self, seed, cut):
+        """Splitting a campaign at ANY time and resuming from the
+        snapshot replays the identical remaining fault stream."""
+        sch = FaultSchedule.poisson(
+            3600.0, seed=seed, n_clusters=3, n_clients=6,
+            outage_rate_per_h=6.0, crash_rate_per_h=3.0,
+            master_fail_rate_per_h=2.0, payload_rate_per_h=3.0,
+            drift_rate_per_h=2.0)
+        whole = self._bound(sch)
+        full = [(e.t, e.kind, e.cluster, e.sat) for e in
+                whole.kernel.pop_until(1e9)]
+        split = self._bound(sch)
+        head = [(e.t, e.kind, e.cluster, e.sat) for e in
+                split.kernel.pop_until(float(cut))]
+        resumed = FaultInjector(sch)
+        resumed.load_state_dict(json.loads(json.dumps(split.state_dict())))
+        tail = [(e.t, e.kind, e.cluster, e.sat) for e in
+                resumed.kernel.pop_until(1e9)]
+        assert head + tail == full
+
+
+class TestSkipMany:
+    def test_force_skip_bumps_tau_only(self):
+        st_ = SkipOneState.init(4)
+        st_.phi[:] = 1.0
+        before_phi, before_kappa = st_.phi.copy(), st_.kappa.copy()
+        force_skip(st_, 2)
+        force_skip(st_, 2)
+        assert st_.tau[2] == 2 and st_.tau[[0, 1, 3]].sum() == 0
+        np.testing.assert_array_equal(st_.phi, before_phi)
+        np.testing.assert_array_equal(st_.kappa, before_kappa)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint hardening
+# ---------------------------------------------------------------------------
+
+class TestCkptHardening:
+    def test_crc_in_manifest_and_clean_roundtrip(self, tmp_path):
+        from repro.ckpt import load_pytree, save_pytree
+        tree = {"a": np.arange(12.0).reshape(3, 4), "b": np.ones(5)}
+        p = str(tmp_path / "t.npz")
+        save_pytree(tree, p)
+        with np.load(p) as z:
+            manifest = json.loads(str(z["manifest"]))
+        assert isinstance(manifest["crc32"], int)
+        out = load_pytree(p, tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      tree["a"])
+
+    def test_bitrot_detected(self, tmp_path):
+        """Same keys/shapes, different content, stale checksum — the
+        silent-corruption case crc32 exists for."""
+        from repro.ckpt import CheckpointCorrupt, load_pytree, save_pytree
+        tree = {"w": np.arange(6.0)}
+        p = str(tmp_path / "t.npz")
+        save_pytree(tree, p)
+        with np.load(p) as z:
+            manifest = str(z["manifest"])
+        np.savez(p, manifest=manifest, leaf_0=np.arange(6.0) + 1e-9)
+        with pytest.raises(CheckpointCorrupt, match="checksum mismatch"):
+            load_pytree(p, tree)
+
+    def test_torn_file_detected(self, tmp_path):
+        from repro.ckpt import CheckpointCorrupt, load_pytree, save_pytree
+        tree = {"w": np.zeros((64, 64))}
+        p = str(tmp_path / "t.npz")
+        save_pytree(tree, p)
+        data = open(p, "rb").read()
+        with open(p, "wb") as f:
+            f.write(data[:len(data) // 2])     # torn write
+        with pytest.raises(CheckpointCorrupt):
+            load_pytree(p, tree)
+
+    def _mini_state(self, round_idx):
+        import jax.numpy as jnp
+        from repro.core.session import SessionState
+        return SessionState(round_idx, {"w": jnp.arange(6.0) + round_idx},
+                            [SkipOneState.init(3)], np.array([0, 1]),
+                            jax.random.PRNGKey(7), EnergyLedger())
+
+    def test_fallback_to_last_good_round_boundary(self, tmp_path):
+        from repro.ckpt import load_latest_session, save_session
+        s1, s2 = self._mini_state(1), self._mini_state(2)
+        save_session(s1, str(tmp_path / "step_1"))
+        save_session(s2, str(tmp_path / "step_2"))
+        like = s1.cluster_models
+        st, path = load_latest_session(str(tmp_path), like)
+        assert st.round_idx == 2 and path.endswith("step_2")
+        # corrupt the newest shard: resume must fall back to step_1
+        with open(tmp_path / "step_2" / "models.npz", "wb") as f:
+            f.write(b"garbage")
+        st, path = load_latest_session(str(tmp_path), like)
+        assert st.round_idx == 1 and path.endswith("step_1")
+        np.testing.assert_array_equal(np.asarray(st.cluster_models["w"]),
+                                      np.arange(6.0) + 1)
+        # nothing loadable at all
+        with open(tmp_path / "step_1" / "models.npz", "wb") as f:
+            f.write(b"garbage")
+        st, path = load_latest_session(str(tmp_path), like)
+        assert st is None and path is None
+
+    def test_meta_schema_unchanged_without_faults(self, tmp_path):
+        from repro.ckpt import save_session
+        save_session(self._mini_state(1), str(tmp_path / "step_1"))
+        with open(tmp_path / "step_1" / "meta.json") as f:
+            meta = json.load(f)
+        assert "faults" not in meta
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: golden parity + recovery demo
+# ---------------------------------------------------------------------------
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_engine.json")
+
+
+class TestEngineUnderFaults:
+    def test_empty_schedule_bit_identical_to_golden(self):
+        """THE golden-path acceptance: attaching an EMPTY FaultSchedule
+        leaves the CroSatFL ledger bit-identical to the pinned golden
+        (i.e. identical to an unattached run)."""
+        from golden_capture import build_setup, session_config
+        from repro.core.session import Session
+        env, model = build_setup()
+        cfg = session_config(model)
+        _, led, _ = Session(cfg, env, model,
+                            faults=FaultSchedule()).run()
+        with open(GOLDEN) as f:
+            want = json.load(f)["CroSatFL"]["ledger"]
+        got = dataclasses.asdict(led)
+        assert set(got) == set(want)
+        for k, v in want.items():
+            assert got[k] == v, (k, got[k], v)
+
+    def test_masterfailure_outage_round_recovers(self):
+        """The ISSUE's recovery demo: a round hit by MasterFailure +
+        LISL outage + crash + payload corruption completes, the failover
+        is in the trace, retries are charged to the ledger, and the
+        trace mirror still reconciles bit-exactly."""
+        from repro.faults.chaos import build_engine, tiny_setup
+        from repro.obs import TracingObserver
+        env, model = tiny_setup(seed=0)
+        sch = FaultSchedule((MasterFailure(0.0, 0),
+                             LinkOutage(0.0, 200.0),
+                             SatCrash(0.0, 1, 1e9),
+                             PayloadCorruption(0.0)))
+        obs = TracingObserver()
+        eng = build_engine("CroSatFL", env, model, rounds=2, seed=0,
+                           observer=obs, faults=sch)
+        _, led, _ = eng.run()                  # completing == no deadlock
+        assert obs.reconcile(led)["exact"]
+        recov = [e for e in obs.tracer.events if e["kind"] == "recovery"]
+        assert any(e["action"] == "failover" and e["cluster"] == 0
+                   for e in recov)
+        assert obs.metrics.total("recoveries", action="retry") >= 1
+        assert obs.metrics.total("wait_s", cause="retry") > 0
+        assert obs.metrics.total("recoveries", action="skip_crashed") >= 1
+        assert obs.metrics.total("faults") >= 4
+        # retries are charged to the REAL ledger: the backoff component
+        # sits inside waiting_time_s (and mirror exactness above proves
+        # every retry joule/second landed exactly once — a clean-twin
+        # comparison would be ill-posed, since failover legitimately
+        # moves masters and with them the GS window waits)
+        retry_wait = obs.metrics.total("wait_s", cause="retry")
+        assert 0 < retry_wait <= led.waiting_time_s
+
+    def test_fault_timeline_in_chrome_trace(self, tmp_path):
+        from repro.faults.chaos import build_engine, tiny_setup
+        from repro.obs import TracingObserver
+        env, model = tiny_setup(seed=0)
+        obs = TracingObserver()
+        build_engine("CroSatFL", env, model, rounds=1, seed=0,
+                     observer=obs,
+                     faults=FaultSchedule((MasterFailure(0.0, 0),))).run()
+        track_meta = [e for e in obs.tracer.chrome_events()
+                      if e.get("name") == "thread_name"
+                      and e["args"]["name"] == "faults"]
+        assert track_meta, "fault timeline track missing from export"
