@@ -76,16 +76,23 @@ class BenchSetup:
 
 
 def run_crosatfl(setup: BenchSetup, eval_every: bool = True,
-                 observer=None, executor=None, faults=None):
+                 observer=None, executor=None, faults=None,
+                 aggregator=None, quorum=None):
     """``executor`` overrides the round execution mode (repro.fl.exec:
     "sequential" / "batched" / "sharded"); None keeps the default.
     ``faults`` attaches a repro.faults schedule/injector (None = the
-    fault-free golden path)."""
+    fault-free golden path). ``aggregator`` picks a merge-time robust
+    aggregator (repro.fl.robust; None = bit-exact FedAvg default) and
+    ``quorum`` a minimum valid-participation fraction per cluster."""
     import dataclasses
     env, model = setup.build()
     cfg = setup.session_config(model)
     if executor is not None:
         cfg = dataclasses.replace(cfg, executor=executor)
+    if aggregator is not None:
+        cfg = dataclasses.replace(cfg, aggregator=aggregator)
+    if quorum is not None:
+        cfg = dataclasses.replace(cfg, quorum=quorum)
     sess = Session(cfg, env, model, observer=observer, faults=faults)
     eval_fn = (lambda p, r: model.evaluate(p)) if eval_every else None
     return sess.run(eval_fn=eval_fn)

@@ -1,0 +1,136 @@
+"""Table-II-style fault sensitivity sweep: accuracy + overhead vs rate.
+
+    PYTHONPATH=src python -m benchmarks.faults_sweep --smoke
+
+Sweeps CroSatFL over (a) Poisson outage/crash rates and (b)
+Gilbert-Elliott burst intensities (``p_g2b``), each against the
+zero-rate clean baseline, and reports per-cell:
+
+* final accuracy (graceful-degradation curve vs fault rate),
+* energy and latency **overhead** relative to the clean run (retry
+  joules and backoff seconds are real costs — DESIGN.md §13),
+* retry / dropped-transfer counts from the fault state.
+
+The sweep runs the default bit-parity FedAvg path — the point is the
+cost of *recovering*, not of defending; the silent-corruption defense
+curve lives in ``repro.faults.chaos``. Rows land in
+``results/BENCH_faults.json`` and print as CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import RESULTS, BenchSetup, print_csv, run_crosatfl
+from repro.faults import FaultSchedule
+from repro.obs import get_logger
+
+log = get_logger("benchmarks.faults")
+
+# (label, expected events PER SESSION) — the sweep measures the clean
+# session's sim duration first, then scales each Poisson rate so the
+# same cell means the same fault pressure at smoke scale (sim seconds)
+# and paper scale (sim hours)
+POISSON_CELLS = (
+    ("poisson-0x", dict(outages=0.0, crashes=0.0)),
+    ("poisson-1x", dict(outages=4.0, crashes=1.0)),
+    ("poisson-3x", dict(outages=12.0, crashes=3.0)),
+)
+GE_CELLS = (("ge-calm", 0.05), ("ge-bursty", 0.25))
+
+
+def _schedule(label: str, horizon_s: float, seed: int, n_clusters: int,
+              n_clients: int):
+    per_h = 3600.0 / horizon_s            # 1 event/session -> rate/hour
+    for name, kw in POISSON_CELLS:
+        if name == label:
+            return FaultSchedule.poisson(
+                horizon_s, seed=seed, n_clusters=n_clusters,
+                n_clients=n_clients,
+                outage_rate_per_h=kw["outages"] * per_h,
+                mean_outage_s=horizon_s / 20.0,
+                crash_rate_per_h=kw["crashes"] * per_h,
+                mean_down_s=horizon_s / 5.0)
+    for name, p_g2b in GE_CELLS:
+        if name == label:
+            # ~40 burst-chain steps across the session regardless of scale
+            return FaultSchedule.gilbert_elliott(
+                horizon_s, seed=seed, p_g2b=p_g2b, p_b2g=0.5,
+                step_s=horizon_s / 40.0)
+    raise KeyError(label)
+
+
+def run_sweep(setup: BenchSetup, out: str = "BENCH_faults") -> list[dict]:
+    from repro.obs import TracingObserver
+
+    labels = [n for n, _ in POISSON_CELLS] + [n for n, _ in GE_CELLS]
+    # clean pre-run fixes the session's sim horizon so every fault cell
+    # lands its events *inside* the session, whatever the setup scale
+    _, led0, _ = run_crosatfl(setup, eval_every=False)
+    horizon = float(led0.wall_clock_s)
+    log.info(f"clean session horizon: {horizon:.3g} sim s")
+    rows, base = [], None
+    for label in labels:
+        sch = _schedule(label, horizon, setup.seed, setup.k_max,
+                        setup.n_clients)
+        obs = TracingObserver()
+        _, ledger, hist = run_crosatfl(setup, eval_every=True,
+                                       observer=obs, faults=sch)
+        acc = float(hist[-1]["acc"]) if hist else float("nan")
+        row = {"cell": label, "acc": acc,
+               "energy_j": float(ledger.total_energy_j),
+               "latency_s": float(ledger.wall_clock_s),
+               "retries": int(obs.metrics.total("recoveries",
+                                                action="retry")),
+               "drops": int(obs.metrics.total("recoveries",
+                                              action="drop"))}
+        if label == "poisson-0x":
+            base = row
+        # overhead relative to the clean zero-rate cell (first row)
+        row["energy_overhead"] = row["energy_j"] / base["energy_j"] - 1.0
+        row["latency_overhead"] = (row["latency_s"] / base["latency_s"]
+                                   - 1.0)
+        log.info(f"{label:12s} acc={acc:.3f} "
+                 f"E+{row['energy_overhead'] * 100:.1f}% "
+                 f"T+{row['latency_overhead'] * 100:.1f}% "
+                 f"retries={row['retries']} drops={row['drops']}")
+        rows.append(row)
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{out}.json")
+    with open(path, "w") as f:
+        json.dump({"setup": {"dataset": setup.dataset,
+                             "n_clients": setup.n_clients,
+                             "rounds": setup.rounds, "seed": setup.seed},
+                   "rows": rows}, f, indent=1, sort_keys=True)
+    log.info(f"wrote {path}")
+    print_csv(rows)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fault-rate sensitivity sweep (accuracy + overhead)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI profile: tiny setup, 3 rounds")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        setup = BenchSetup(dataset="eurosat-sim", n_clients=8, n_train=400,
+                           n_test=100, rounds=args.rounds or 3,
+                           local_epochs=1, k_max=4, seed=args.seed)
+    else:
+        setup = BenchSetup(dataset="eurosat-sim", n_clients=40,
+                           rounds=args.rounds or 40, seed=args.seed)
+    rows = run_sweep(setup)
+    # contract: every cell completes with a finite accuracy, and the
+    # clean cell pays zero retry overhead
+    ok = (all(r["acc"] == r["acc"] for r in rows)
+          and rows[0]["retries"] == 0 and rows[0]["drops"] == 0)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,13 +43,16 @@ def smoke(measured_cost: bool = False, trace: bool = False,
     from repro.fl.baselines import BASELINES
     from repro.fl.engine import SCENARIO_NAMES
 
-    from repro.faults import smoke_schedule
+    from repro.faults import corruption_schedule, smoke_schedule
 
     # executor-layer cells (repro.fl.exec): CroSatFL through the batched
     # fleet path on both model families — image CNN and the reduced
     # repro.models transformer; plus the fault-injection cell (CroSatFL
     # under the repro.faults smoke campaign — recovery paths in the
-    # benchmark entry point, not just the chaos harness)
+    # benchmark entry point, not just the chaos harness) and the robust
+    # cell (median aggregation + quorum gate under seeded silent
+    # corruption — the Byzantine-defense path in the benchmark entry
+    # point, not just the chaos harness)
     exec_cells = {
         "CroSatFL-ExecBatched":
             lambda obs: run_crosatfl(setup, eval_every=False, observer=obs,
@@ -60,6 +63,13 @@ def smoke(measured_cost: bool = False, trace: bool = False,
         "CroSatFL-Faulted":
             lambda obs: run_crosatfl(setup, eval_every=False, observer=obs,
                                      faults=smoke_schedule(
+                                         seed=setup.seed,
+                                         n_clusters=setup.k_max,
+                                         n_clients=setup.n_clients)),
+        "CroSatFL-Robust":
+            lambda obs: run_crosatfl(setup, eval_every=False, observer=obs,
+                                     aggregator="median", quorum=0.6,
+                                     faults=corruption_schedule(
                                          seed=setup.seed,
                                          n_clusters=setup.k_max,
                                          n_clients=setup.n_clients)),

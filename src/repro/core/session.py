@@ -54,6 +54,10 @@ class SessionConfig:
     seed: int = 0
     batched_exec: bool = False       # DEPRECATED: use executor="batched"
     executor: Any = None             # round execution mode (repro.fl.exec)
+    aggregator: Any = "fedavg"       # merge-time robustness (repro.fl.robust)
+    quorum: Any = None               # min valid fraction per cluster commit
+    retry_base_s: Optional[float] = None   # transport retry overrides
+    retry_max_attempts: Optional[int] = None
     skip_one: skipone.SkipOneParams = field(default_factory=skipone.SkipOneParams)
     starmask: StarMaskParams = field(default_factory=StarMaskParams)
 
@@ -62,7 +66,10 @@ class SessionConfig:
                             local_epochs=self.local_epochs,
                             c_flop=self.c_flop, model_bits=self.model_bits,
                             seed=self.seed, batched_exec=self.batched_exec,
-                            executor=self.executor)
+                            executor=self.executor,
+                            aggregator=self.aggregator, quorum=self.quorum,
+                            retry_base_s=self.retry_base_s,
+                            retry_max_attempts=self.retry_max_attempts)
 
 
 class Session:

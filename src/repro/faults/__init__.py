@@ -13,15 +13,17 @@ Recovery policies live with the behavior they guard: transport retries
 in ``fl/engine/transport.py``, master failover + skip-many in
 ``fl/engine/engine.py``, checkpoint fallback in ``ckpt/store.py``.
 """
-from repro.faults.model import (GS, LISL, ClockDrift, FaultInjector,
-                                FaultSchedule, FaultState, LinkOutage,
-                                MasterFailure, PayloadCorruption,
-                                PayloadLoss, SatCrash, SatReboot,
-                                as_injector, smoke_schedule)
+from repro.faults.model import (GS, LISL, SILENT_MODES, ClockDrift,
+                                FaultInjector, FaultSchedule, FaultState,
+                                LinkOutage, MasterFailure,
+                                PayloadCorruption, PayloadLoss, SatCrash,
+                                SatReboot, SilentCorruption, as_injector,
+                                corruption_schedule, smoke_schedule)
 
 __all__ = [
-    "GS", "LISL", "ClockDrift", "FaultInjector", "FaultSchedule",
-    "FaultState", "LinkOutage", "MasterFailure", "PayloadCorruption",
-    "PayloadLoss", "SatCrash", "SatReboot", "as_injector",
+    "GS", "LISL", "SILENT_MODES", "ClockDrift", "FaultInjector",
+    "FaultSchedule", "FaultState", "LinkOutage", "MasterFailure",
+    "PayloadCorruption", "PayloadLoss", "SatCrash", "SatReboot",
+    "SilentCorruption", "as_injector", "corruption_schedule",
     "smoke_schedule",
 ]

@@ -36,7 +36,8 @@ import sys
 import jax
 import numpy as np
 
-from repro.faults.model import FaultSchedule, smoke_schedule
+from repro.faults.model import (FaultSchedule, corruption_schedule,
+                                smoke_schedule)
 from repro.obs import get_logger
 
 log = get_logger("faults.chaos")
@@ -47,6 +48,16 @@ log = get_logger("faults.chaos")
 PRESETS = ("CroSatFL", "CroSatFL-SemiSync", "CroSatFL-EventSync")
 
 CHANCE_ACC = 0.10   # eurosat-sim is 10-class; graceful > chance floor
+
+# silent-corruption campaign (DESIGN.md §14): same schedule, three
+# aggregators. FedAvg has breakdown point 0 — one NaN lane poisons the
+# cross-aggregation — while median/trimmed-mean hold as long as
+# corrupted lanes stay a minority.
+CORRUPT_AGGS = ("fedavg", "median", "trimmed_mean")
+QUORUM_FRAC = 0.6     # with ~2 sats/cluster a crashed sat -> 0.5 < 0.6
+ROBUST_MARGIN = 0.30  # pinned: robust aggs must beat FedAvg by this
+# (empirical gap on the smoke setup is ~0.9: FedAvg's merge goes NaN ->
+# ~chance accuracy, median/trimmed-mean stay at the clean ~0.99)
 
 
 def tiny_setup(seed: int = 0, n_clients: int = 8, n_train: int = 400,
@@ -70,13 +81,15 @@ def tiny_setup(seed: int = 0, n_clients: int = 8, n_train: int = 400,
 
 
 def build_engine(preset: str, env, model, *, rounds: int = 3,
-                 seed: int = 0, observer=None, faults=None):
+                 seed: int = 0, observer=None, faults=None,
+                 aggregator="fedavg", quorum=None):
     from repro.core.starmask import StarMaskParams
     from repro.fl.engine import (EngineConfig, make_crosatfl,
                                  make_scenario)
 
     cfg = EngineConfig(rounds=rounds, local_epochs=1, c_flop=5e7,
-                       model_bits=model.model_bits(), seed=seed)
+                       model_bits=model.model_bits(), seed=seed,
+                       aggregator=aggregator, quorum=quorum)
     sm = StarMaskParams(k_max=4, m_min=2)
     if preset == "CroSatFL":
         return make_crosatfl(cfg, env, model, starmask=sm,
@@ -164,6 +177,61 @@ def run_preset(preset: str, seed: int = 0, rounds: int = 3,
             "dropped_transfers": int(eng.faults.state.dropped)}
 
 
+def run_corruption(seed: int = 0, rounds: int = 3,
+                   out_dir: str | None = None,
+                   preset: str = "CroSatFL") -> dict:
+    """Silent-corruption campaign: one seeded schedule (two NaN-splat
+    lanes + a crashed sat holding one cluster below quorum + a Poisson
+    tail), run under each aggregator in ``CORRUPT_AGGS`` with the same
+    quorum gate. Checks that the corruption reaches the merge, that the
+    mirror ledger stays bit-exact (corruption is a value-layer fault —
+    it must never touch accounting), that quorum/degraded events land in
+    the trace, and that the robust aggregators beat FedAvg's final
+    accuracy by ``ROBUST_MARGIN``."""
+    from repro.obs import TracingObserver
+
+    env, model = tiny_setup(seed=seed)
+    ev = lambda p, r: model.evaluate(p)   # noqa: E731
+    checks: dict = {}
+    accs: dict[str, float] = {}
+    for agg in CORRUPT_AGGS:
+        sch = corruption_schedule(seed=seed, n_clusters=4, n_clients=8)
+        jsonl = (os.path.join(out_dir, f"corrupt_{agg}.jsonl")
+                 if out_dir else None)
+        obs = TracingObserver(jsonl)
+        eng = build_engine(preset, env, model, rounds=rounds, seed=seed,
+                           observer=obs, faults=sch,
+                           aggregator=agg, quorum=QUORUM_FRAC)
+        _, led, hist = eng.run(eval_fn=ev, eval_every=rounds)
+        accs[agg] = _final_acc(hist)
+        checks[f"mirror_exact_{agg}"] = obs.reconcile(led)["exact"]
+        qevents = [e for e in obs.tracer.events if e["kind"] == "quorum"]
+        checks[f"quorum_in_trace_{agg}"] = len(qevents) >= 1
+        checks[f"degraded_counted_{agg}"] = (
+            eng.quorum is not None and eng.quorum.degraded >= 1
+            and any(not e["ok"] for e in qevents))
+        checks[f"corruption_applied_{agg}"] = any(
+            e["kind"] == "fault" and e["fkind"] == "silent_corrupt_applied"
+            for e in obs.tracer.events)
+        if agg != "fedavg":
+            # the robust path must have actually *rejected* the NaN
+            # lanes, not merely happened to dodge them
+            checks[f"nonfinite_rejected_{agg}"] = (
+                obs.metrics.total("robust_rejects", reason="nonfinite")
+                >= 1)
+        if out_dir:
+            obs.tracer.to_chrome_trace(
+                os.path.join(out_dir, f"corrupt_{agg}.trace.json"))
+
+    base = accs["fedavg"] if np.isfinite(accs["fedavg"]) else 0.0
+    for agg in CORRUPT_AGGS[1:]:
+        checks[f"{agg}_beats_fedavg"] = (
+            np.isfinite(accs[agg]) and accs[agg] - base >= ROBUST_MARGIN)
+    return {"preset": preset, "aggregators": list(CORRUPT_AGGS),
+            "quorum": QUORUM_FRAC, "margin": ROBUST_MARGIN,
+            "acc": accs, "ok": all(checks.values()), "checks": checks}
+
+
 def run_campaign(presets=PRESETS, seed: int = 0, rounds: int = 3,
                  out_dir: str = "results/chaos") -> int:
     os.makedirs(out_dir, exist_ok=True)
@@ -178,8 +246,15 @@ def run_campaign(presets=PRESETS, seed: int = 0, rounds: int = 3,
                  f"faults={res['faults_applied']} "
                  f"recoveries={res['recovery_actions']}")
         results.append(res)
+    log.info(f"chaos: silent-corruption campaign (seed={seed})")
+    corrupt = run_corruption(seed=seed, rounds=rounds, out_dir=out_dir)
+    for name, passed in corrupt["checks"].items():
+        log.info(f"  {'ok ' if passed else 'BAD'} {name}")
+    log.info("  acc " + " ".join(f"{a}={v:.3f}"
+                                 for a, v in corrupt["acc"].items()))
     report = {"seed": seed, "rounds": rounds,
-              "ok": all(r["ok"] for r in results), "presets": results}
+              "ok": all(r["ok"] for r in results) and corrupt["ok"],
+              "presets": results, "corruption": corrupt}
     path = os.path.join(out_dir, "chaos_report.json")
     with open(path, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)

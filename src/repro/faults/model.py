@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.sim.events import (CLOCK_DRIFT, LINK_DOWN, LINK_UP, MASTER_FAIL,
                               PAYLOAD_CORRUPT, PAYLOAD_LOSS, SAT_CRASH,
-                              SAT_REBOOT, EventQueue)
+                              SAT_REBOOT, SILENT_CORRUPT, EventQueue)
 
 LISL, GS = "lisl", "gs"   # link classes (Transport: intra/inter -> lisl)
 
@@ -99,6 +99,40 @@ class PayloadLoss:
     cluster: Optional[int] = None
 
 
+SILENT_MODES = ("sign_flip", "large_scale", "nan_splat", "bit_noise")
+
+
+@dataclass(frozen=True)
+class SilentCorruption:
+    """A delivered update from ``cluster`` (seeded pick when None) is
+    perturbed PAST the transport checksum — the link saw a valid
+    payload, but the values are poison (radiation bit flips, stuck
+    compute, adversarial member). The injector stashes the descriptor;
+    the engine applies it to the fresh cluster model between training
+    and the pacing merge, so it reaches the aggregation layer exactly
+    like a real silent fault would. ``mode``:
+
+    * ``sign_flip``   — every weight negated
+    * ``large_scale`` — weights multiplied by ``scale``
+    * ``nan_splat``   — the whole lane becomes NaN
+    * ``bit_noise``   — a seeded ~1% of float32 elements get one random
+      mantissa/exponent/sign bit XOR'd (the literal radiation model)
+
+    The corruption is a pure function of the descriptor (per-leaf keys
+    fold the leaf index into ``PRNGKey(seed)``), so list and stacked
+    execution paths — and checkpoint resumes — corrupt identically."""
+    t: float
+    cluster: Optional[int] = None
+    mode: str = "sign_flip"
+    scale: float = 100.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in SILENT_MODES:
+            raise ValueError(f"mode must be one of {SILENT_MODES}, "
+                             f"got {self.mode!r}")
+
+
 @dataclass(frozen=True)
 class ClockDrift:
     """Cluster ``cluster``'s local clock slews by ``skew_s``; the
@@ -110,7 +144,8 @@ class ClockDrift:
 
 _KIND = {LinkOutage: LINK_DOWN, SatCrash: SAT_CRASH, SatReboot: SAT_REBOOT,
          MasterFailure: MASTER_FAIL, PayloadCorruption: PAYLOAD_CORRUPT,
-         PayloadLoss: PAYLOAD_LOSS, ClockDrift: CLOCK_DRIFT}
+         PayloadLoss: PAYLOAD_LOSS, ClockDrift: CLOCK_DRIFT,
+         SilentCorruption: SILENT_CORRUPT}
 
 
 # ---------------------------------------------------------------------------
@@ -150,12 +185,16 @@ class FaultSchedule:
                 master_fail_rate_per_h: float = 0.0,
                 payload_rate_per_h: float = 0.0,
                 drift_rate_per_h: float = 0.0, mean_skew_s: float = 5.0,
+                silent_rate_per_h: float = 0.0,
+                silent_scale: float = 100.0,
                 max_retries: int = 4,
                 backoff0_s: float = 30.0) -> "FaultSchedule":
         """Independent Poisson arrival streams per fault family over
         ``[0, horizon_s)``; exponential durations; uniform targets. One
         private generator, consumed in a fixed family order — the whole
-        campaign is a pure function of the arguments."""
+        campaign is a pure function of the arguments. The silent family
+        draws AFTER every PR-9 family (and draws nothing at rate 0), so
+        pre-existing schedules stay bit-identical."""
         rng = np.random.default_rng(seed)
         faults: list = []
 
@@ -190,6 +229,13 @@ class FaultSchedule:
             faults.append(ClockDrift(
                 t, int(rng.integers(max(n_clusters, 1))),
                 float(rng.exponential(mean_skew_s))))
+        for t in arrivals(silent_rate_per_h):
+            kc = (None if n_clusters == 0 or rng.random() < 0.5
+                  else int(rng.integers(n_clusters)))
+            mode = SILENT_MODES[int(rng.integers(len(SILENT_MODES)))]
+            faults.append(SilentCorruption(
+                t, kc, mode, scale=silent_scale,
+                seed=int(rng.integers(2 ** 31 - 1))))
         return cls(tuple(faults), seed=seed, max_retries=max_retries,
                    backoff0_s=backoff0_s)
 
@@ -197,11 +243,21 @@ class FaultSchedule:
     def gilbert_elliott(cls, horizon_s: float, seed: int = 0, *,
                         link: str = LISL, cluster: Optional[int] = None,
                         p_g2b: float = 0.02, p_b2g: float = 0.5,
-                        step_s: float = 60.0, max_retries: int = 4,
+                        step_s: float = 60.0, mode: str = "outage",
+                        corrupt_mode: str = "sign_flip",
+                        max_retries: int = 4,
                         backoff0_s: float = 30.0) -> "FaultSchedule":
         """Two-state (Good/Bad) Markov burst chain sampled on a
-        ``step_s`` grid; each maximal Bad run becomes one LinkOutage —
-        the classic bursty-loss channel, here at link granularity."""
+        ``step_s`` grid. ``mode="outage"`` (default, byte-identical to
+        the PR-9 generator): each maximal Bad run becomes one
+        LinkOutage — the classic bursty-loss channel at link
+        granularity. ``mode="silent"``: every Bad step instead emits one
+        seeded ``SilentCorruption`` of ``corrupt_mode`` — the bursty
+        radiation-environment channel (South Atlantic Anomaly passes)
+        the checksum cannot see."""
+        if mode not in ("outage", "silent"):
+            raise ValueError(f"mode must be 'outage' or 'silent', "
+                             f"got {mode!r}")
         rng = np.random.default_rng(seed)
         faults: list = []
         bad, run_start = False, 0.0
@@ -209,14 +265,19 @@ class FaultSchedule:
         while t < horizon_s:
             if bad:
                 if rng.random() < p_b2g:
-                    faults.append(LinkOutage(run_start, t - run_start,
-                                             link, cluster))
+                    if mode == "outage":
+                        faults.append(LinkOutage(run_start, t - run_start,
+                                                 link, cluster))
                     bad = False
             else:
                 if rng.random() < p_g2b:
                     bad, run_start = True, t
+            if bad and mode == "silent":
+                faults.append(SilentCorruption(
+                    t, cluster, corrupt_mode,
+                    seed=int(rng.integers(2 ** 31 - 1))))
             t += step_s
-        if bad:
+        if bad and mode == "outage":
             faults.append(LinkOutage(run_start, horizon_s - run_start,
                                      link, cluster))
         return cls(tuple(faults), seed=seed, max_retries=max_retries,
@@ -246,6 +307,27 @@ def smoke_schedule(seed: int = 0, *, n_clusters: int = 4,
     return FaultSchedule(explicit + tail.faults, seed=seed)
 
 
+def corruption_schedule(seed: int = 0, *, n_clusters: int = 4,
+                        n_clients: int = 8, crash_sat: int = 1,
+                        horizon_s: float = 4000.0) -> FaultSchedule:
+    """The silent-corruption campaign (faults/chaos.py, CI): a session-long
+    SatCrash (so one cluster sits below quorum every round — the
+    degraded-mode path demonstrably fires) plus NaN-splat silent
+    corruption on clusters 0 AND 1 at t=0 (two poisoned lanes: even if
+    the crashed satellite's quorum-gated cluster absorbs one, the other
+    reaches the merge — plain FedAvg provably degrades) and a seeded
+    Poisson tail of mixed-mode silent faults."""
+    explicit = (
+        SatCrash(0.0, crash_sat, 1e9),
+        SilentCorruption(0.0, 0, "nan_splat", seed=seed),
+        SilentCorruption(0.0, 1, "nan_splat", seed=seed + 1),
+    )
+    tail = FaultSchedule.poisson(
+        horizon_s, seed=seed, n_clusters=n_clusters, n_clients=n_clients,
+        silent_rate_per_h=3.0)
+    return FaultSchedule(explicit + tail.faults, seed=seed)
+
+
 # ---------------------------------------------------------------------------
 # Live view
 # ---------------------------------------------------------------------------
@@ -267,12 +349,16 @@ class FaultState:
         # pending one-shot payload faults: (kind, cluster|None) -> count
         self.payload_pending: dict = {}
         self.dropped = 0              # degraded-mode drops (capped retries)
+        # pending silent corruptions: descriptor dicts the engine
+        # consumes between training and the merge (DESIGN.md §14)
+        self.silent_pending: list = []
 
     def reset(self) -> None:
         self.outage_until.clear()
         self.crashed.clear()
         self.payload_pending.clear()
         self.dropped = 0
+        self.silent_pending.clear()
 
     # -- queries (Transport / engine) ----------------------------------------
     def outage_end(self, link: str, kc: Optional[int], t: float) -> float:
@@ -323,6 +409,7 @@ class FaultState:
                                                   -1 if kv[0][1] is None
                                                   else kv[0][1])) if n > 0],
             "dropped": int(self.dropped),
+            "silent": [dict(d) for d in self.silent_pending],
         }
 
     def load(self, d: dict) -> None:
@@ -339,12 +426,63 @@ class FaultState:
             {(kind, None if kc is None else int(kc)): int(n)
              for kind, kc, n in d.get("payload", [])})
         self.dropped = int(d.get("dropped", 0))
+        # absent on pre-silent-corruption checkpoints: default empty
+        self.silent_pending.extend(dict(x) for x in d.get("silent", []))
 
     @classmethod
     def from_dict(cls, d: dict) -> "FaultState":
         fs = cls()
         fs.load(d)
         return fs
+
+
+_BIT_NOISE_FRAC = 0.01   # seeded fraction of elements hit by bit_noise
+
+
+def _corrupt_tree(tree, d: dict):
+    """Apply one silent-corruption descriptor to a single model pytree.
+
+    A pure function of (tree, descriptor): per-leaf keys fold the leaf
+    index into ``PRNGKey(seed)``, so corrupting lane k of a stacked
+    result and corrupting element k of a list result produce identical
+    values — list/stacked executor parity is preserved under faults.
+    Non-floating leaves pass through untouched.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    mode = d["mode"]
+    scale = float(d.get("scale", 100.0))
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if not jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            out.append(leaf)
+            continue
+        leaf = jnp.asarray(leaf)
+        if mode == "sign_flip":
+            out.append(-leaf)
+        elif mode == "large_scale":
+            out.append((leaf * scale).astype(leaf.dtype))
+        elif mode == "nan_splat":
+            out.append(jnp.full_like(leaf, jnp.nan))
+        elif mode == "bit_noise":
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(int(d.get("seed", 0))), i)
+            k_hit, k_bit = jax.random.split(key)
+            bits = jax.lax.bitcast_convert_type(
+                leaf.astype(jnp.float32), jnp.uint32)
+            hit = jax.random.bernoulli(k_hit, _BIT_NOISE_FRAC, leaf.shape)
+            pos = jax.random.randint(k_bit, leaf.shape, 0, 32)
+            flip = jnp.where(hit,
+                             jnp.left_shift(jnp.uint32(1),
+                                            pos.astype(jnp.uint32)),
+                             jnp.uint32(0))
+            out.append(jax.lax.bitcast_convert_type(
+                bits ^ flip, jnp.float32).astype(leaf.dtype))
+        else:                        # pragma: no cover - descriptor checked
+            raise ValueError(f"unknown silent-corruption mode {mode!r}")
+    return jax.tree.unflatten(treedef, out)
 
 
 # ---------------------------------------------------------------------------
@@ -398,6 +536,9 @@ class FaultInjector:
         elif isinstance(f, ClockDrift):
             self.kernel.push(f.t, kind, cluster=f.cluster,
                              skew_s=float(f.skew_s))
+        elif isinstance(f, SilentCorruption):
+            self.kernel.push(f.t, kind, cluster=f.cluster, mode=f.mode,
+                             scale=float(f.scale), seed=int(f.seed))
         else:
             raise TypeError(f"unknown fault type {type(f).__name__}")
 
@@ -439,6 +580,13 @@ class FaultInjector:
         elif ev.kind in (PAYLOAD_CORRUPT, PAYLOAD_LOSS):
             key = (ev.kind, ev.cluster)
             fs.payload_pending[key] = fs.payload_pending.get(key, 0) + 1
+        elif ev.kind == SILENT_CORRUPT:
+            # past the checksum: stash the descriptor; the engine applies
+            # it to the delivered cluster model before the merge
+            fs.silent_pending.append(
+                {"cluster": ev.cluster, "mode": ev.payload["mode"],
+                 "scale": float(ev.payload["scale"]),
+                 "seed": int(ev.payload["seed"])})
         elif ev.kind == CLOCK_DRIFT:
             # re-sync cost: latency-only, through the one accounting
             # entry point so the observer mirror stays bit-exact
@@ -491,6 +639,48 @@ class FaultInjector:
                              skipped=len(forced),
                              sats=[int(sel.ids[li]) for li in forced])
         return len(forced)
+
+    def corrupt_result(self, ctx, model, result, sels):
+        """Apply every pending ``SilentCorruption`` to this round's
+        delivered cluster models (the executor's fresh ``result``,
+        list OR stacked) — AFTER training, BEFORE the pacing merge:
+        the link-layer checksum never saw anything wrong, so the
+        poisoned update reaches the aggregation layer. Pure value
+        transform: no ledger, wall-clock, or engine-RNG touch (target
+        picks for cluster=None descriptors come from a private
+        generator seeded by the descriptor), so attaching corruption
+        cannot perturb accounting — the mirror ledger reconcile stays
+        bit-exact by construction."""
+        fs = self.state
+        if not fs.silent_pending:
+            return result
+        pending, fs.silent_pending = list(fs.silent_pending), []
+        K = len(sels)
+        is_list = isinstance(result, list)
+        if is_list:
+            result = list(result)       # never mutate the executor's list
+        for d in pending:
+            kc = d.get("cluster")
+            if kc is None or not 0 <= int(kc) < K:
+                pick = np.random.default_rng(int(d.get("seed", 0)))
+                kc = int(pick.integers(max(K, 1)))
+            kc = int(kc)
+            if K == 0:
+                continue
+            if is_list:
+                result[kc] = _corrupt_tree(result[kc], d)
+            else:
+                import jax
+                lane = jax.tree.map(lambda l: l[kc], result)
+                lane = _corrupt_tree(lane, d)
+                result = jax.tree.map(
+                    lambda l, v: l.at[kc].set(v.astype(l.dtype)),
+                    result, lane)
+            if ctx.obs is not None:
+                ctx.obs.fault("silent_corrupt_applied",
+                              float(ctx.ledger.wall_clock_s), cluster=kc,
+                              mode=d["mode"])
+        return result
 
     # -- checkpointing -------------------------------------------------------
     def state_dict(self) -> dict:

@@ -63,6 +63,20 @@ class EngineConfig:
     it still maps to the batched path (with its old silent sequential
     fallback for models without a fleet surface) via a shim in
     ``repro.fl.exec.resolve_executor``, which warns.
+
+    ``aggregator`` selects the Byzantine-robust merge estimator
+    (repro.fl.robust, DESIGN.md §14): "fedavg" (default; identity
+    pass-through — bit-parity with the historical merges), "median",
+    "trimmed_mean", "norm_clip", "krum", or a ``RobustAggregator``
+    instance. ``quorum`` gates each cluster's commit on a minimum
+    fraction of valid delivered updates: None (off, the default), a
+    min-fraction float, or a ``QuorumPolicy`` instance.
+
+    ``retry_base_s`` / ``retry_max_attempts`` override the Transport
+    retry policy under faults (base backoff seconds of the
+    ``base * 2^attempt`` schedule / the attempt cap). ``None`` (default)
+    keeps the attached ``FaultSchedule``'s knobs — golden ledgers stay
+    bit-for-bit.
     """
     rounds: int = 40
     local_epochs: int = 10
@@ -71,6 +85,10 @@ class EngineConfig:
     seed: int = 0
     batched_exec: bool = False
     executor: Any = None
+    aggregator: Any = "fedavg"
+    quorum: Any = None
+    retry_base_s: Optional[float] = None
+    retry_max_attempts: Optional[int] = None
 
 
 @dataclass
@@ -155,6 +173,11 @@ class EngineContext:
     ``None`` when observability is disabled — every hook site guards with
     ``if ctx.obs is not None`` so the disabled path costs one pointer
     comparison and the golden ledgers stay bit-for-bit (DESIGN.md §10).
+
+    ``robust``/``quorum`` are the resolved ``RobustAggregator`` /
+    ``QuorumPolicy`` (repro.fl.robust, DESIGN.md §14) every pacing merge
+    routes through; the fedavg/None defaults make ``apply_robustness`` a
+    pass-through after two attribute reads.
     """
     cfg: EngineConfig
     env: Any
@@ -165,6 +188,8 @@ class EngineContext:
     et_full: np.ndarray              # (n,) per-round train joules
     hw_penalty: np.ndarray           # (n,) Skip-One hardware-rarity term
     obs: Any = None                  # EngineObserver | None
+    robust: Any = None               # RobustAggregator | None
+    quorum: Any = None               # QuorumPolicy | None
 
     @property
     def ledger(self) -> EnergyLedger:

@@ -101,6 +101,22 @@ class RoundEngine:
             from repro.faults import as_injector
             faults = as_injector(faults)
         self.faults = faults
+        # Byzantine-robust merge + quorum gate (repro.fl.robust,
+        # DESIGN.md §14). The fedavg/None defaults make every pacing
+        # merge a pass-through — golden bit-parity by construction
+        from repro.fl.robust import resolve_aggregator, resolve_quorum
+        self.robust = resolve_aggregator(getattr(cfg, "aggregator",
+                                                 "fedavg"))
+        self.quorum = resolve_quorum(getattr(cfg, "quorum", None))
+        if self.faults is not None:
+            # configurable retry policy: EngineConfig knobs override the
+            # schedule's; None keeps them (golden ledgers bit-for-bit).
+            # FaultState.reset() preserves these, and a resumed
+            # snapshot's own values win on load (they recorded the run)
+            if getattr(cfg, "retry_base_s", None) is not None:
+                self.faults.state.backoff0_s = float(cfg.retry_base_s)
+            if getattr(cfg, "retry_max_attempts", None) is not None:
+                self.faults.state.max_retries = int(cfg.retry_max_attempts)
         self.name = name
         self.executor = resolve_executor(cfg, model)   # repro.fl.exec
         self.rng = np.random.default_rng(cfg.seed)
@@ -119,6 +135,7 @@ class RoundEngine:
                                 faults=None if self.faults is None
                                 else self.faults.state),
             rng=self.rng, obs=self.observer,
+            robust=self.robust, quorum=self.quorum,
             tt_full=t_train(env.n_samples, cfg.c_flop, self._alpha,
                             cfg.local_epochs),
             et_full=e_train(env.n_samples, cfg.c_flop, env.profiles,
@@ -140,6 +157,12 @@ class RoundEngine:
         with annotate(f"exec:{ex.name}"):
             result = ex.train_clusters(self._ctx, self.last_plan, state,
                                        sels, subs, r)
+        if self.faults is not None:
+            # silent corruption lands HERE — after training, before the
+            # merge: the checksum saw a valid payload, the values are
+            # poison (DESIGN.md §14). No-op without pending descriptors
+            result = self.faults.corrupt_result(self._ctx, self.model,
+                                                result, sels)
         return ex.fold(self._ctx, self.pacing, state, result, sels, r)
 
     # -- session -------------------------------------------------------------

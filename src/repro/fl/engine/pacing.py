@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.engine.base import EngineContext, RoundSelection
+from repro.fl.robust import apply_robustness
 
 
 def _bcast(vec, leaf):
@@ -96,11 +97,12 @@ class SyncPacing:
 
     def merge(self, ctx: EngineContext, model, state, new_models: list,
               sels: list, round_idx: int):
-        return model.stack(new_models)
+        return apply_robustness(ctx, model, state,
+                                model.stack(new_models), sels)
 
     def merge_stacked(self, ctx: EngineContext, model, state, new_stacked,
                       sels: list, round_idx: int):
-        return new_stacked
+        return apply_robustness(ctx, model, state, new_stacked, sels)
 
     def advance(self, barriers: list) -> float:
         return max(barriers, default=0.0)
@@ -181,6 +183,7 @@ class SemiSyncPacing:
 
     def merge(self, ctx: EngineContext, model, state, new_models: list,
               sels: list, round_idx: int):
+        new_models = apply_robustness(ctx, model, state, new_models, sels)
         barriers, D = self._close_round(ctx, sels)
         K = len(new_models)
         old = model.unstack(state.cluster_models, K)
@@ -209,6 +212,7 @@ class SemiSyncPacing:
         take their fresh model via a per-cluster ``where``, stragglers keep
         the old row and stash the fresh one, last round's stash folds in
         with weight beta."""
+        new_stacked = apply_robustness(ctx, model, state, new_stacked, sels)
         barriers, D = self._close_round(ctx, sels)
         K = len(sels)
         on_time = barriers <= D if barriers.size else np.zeros(K, bool)
@@ -302,6 +306,7 @@ class AsyncPacing:
 
     def merge(self, ctx: EngineContext, model, state, new_models: list,
               sels: list, round_idx: int):
+        new_models = apply_robustness(ctx, model, state, new_models, sels)
         K = len(new_models)
         alphas = self.staleness_weights(np.asarray(self._barriers))
         self._observe_merge(ctx, alphas)
@@ -313,6 +318,7 @@ class AsyncPacing:
 
     def merge_stacked(self, ctx: EngineContext, model, state, new_stacked,
                       sels: list, round_idx: int):
+        new_stacked = apply_robustness(ctx, model, state, new_stacked, sels)
         alphas = self.staleness_weights(np.asarray(self._barriers)
                                         ).astype(np.float32)
         self._observe_merge(ctx, alphas)

@@ -1,0 +1,348 @@
+"""Byzantine-robust aggregation + quorum gating (DESIGN.md §14).
+
+The transport checksum catches faults the *link* can see — a corrupted
+payload is discarded and retransmitted (repro.faults, DESIGN.md §13).
+It cannot catch a participant that trained on garbage: radiation-flipped
+weight bits, a stuck accelerator, or an adversarial member deliver a
+syntactically valid update whose *values* are poison. One such cluster
+model entering the cross-aggregation mix contaminates every cluster it
+is averaged with (NaNs spread unconditionally; large-norm updates drown
+the honest mass). The defense therefore lives at the MERGE, not the
+link: the lanes being folded each round are the K delivered fresh
+cluster models, and a ``RobustAggregator`` decides what actually commits.
+
+Two orthogonal pieces, both threaded through every ``PacingPolicy``
+merge (list and stacked paths) by ``apply_robustness``:
+
+* ``RobustAggregator`` — ``fedavg`` (identity pass-through: each cluster
+  keeps its own fresh model, exactly the historical semantics — the
+  bit-parity default), coordinate-wise ``median``, ``trimmed_mean``,
+  ``norm_clip`` (per-lane delta clipping against the median clean norm;
+  the only estimator that preserves lane identity), and ``krum`` /
+  multi-Krum (``m > 1``). Non-finite lanes are masked out *before* the
+  estimator runs — median/mean would otherwise propagate the very NaNs
+  they exist to reject — and each masked lane emits an
+  ``obs.robust_reject`` event.
+* ``QuorumPolicy`` — gates each cluster's commit on a minimum fraction
+  of valid delivered member updates. Below quorum the cluster carries
+  its previous model forward (a counted *degraded* round); above it the
+  fresh delta is reweighted by the participation fraction, so a cluster
+  that lost half its members under skip-many/crash force-skips moves
+  half as far (the ROADMAP's quorum-aware merge weights).
+
+Everything here transforms MODEL VALUES only: no ledger field, RNG
+stream, or wall-clock is touched, so the mirror-ledger reconcile stays
+bit-exact under any aggregator, and with the default
+``aggregator="fedavg"``/``quorum=None`` every merge early-outs on a
+couple of attribute reads — the golden ledgers stay bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _lane_finite_mask(stacked, K: int) -> np.ndarray:
+    """(K,) bool: lane k is True iff EVERY element of every leaf row k is
+    finite. One device sync for the whole pytree."""
+    flags = None
+    for leaf in jax.tree.leaves(stacked):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        f = jnp.isfinite(leaf).reshape(leaf.shape[0], -1).all(axis=1)
+        flags = f if flags is None else flags & f
+    if flags is None:
+        return np.ones(K, bool)
+    return np.asarray(flags)
+
+
+def _bcast_rows(vec, leaf):
+    """(K,) -> (K, 1, ..., 1) broadcastable against a (K, ...) leaf."""
+    return jnp.asarray(vec).reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def _broadcast_lane(stacked, lane, K: int):
+    """Replace every row of ``stacked`` with the single model ``lane``."""
+    return jax.tree.map(
+        lambda s, v: jnp.broadcast_to(v.astype(s.dtype)[None],
+                                      s.shape),
+        stacked, lane)
+
+
+class RobustAggregator:
+    """Base protocol: ``robustify`` maps the stacked fresh cluster models
+    to the stacked models that actually commit.
+
+    ``valid`` is the (K,) bool lane mask computed upstream (False =
+    non-finite, already rejected); estimators must consume only valid
+    lanes and fall back to ``old_stacked`` when none survive.
+    ``identity=True`` marks pass-through aggregators so the engine's
+    default path stays pointer-comparison-free.
+    """
+
+    name = "robust"
+    identity = False
+
+    def robustify(self, old_stacked, new_stacked, valid: np.ndarray,
+                  obs=None):
+        raise NotImplementedError
+
+
+class FedAvgAggregator(RobustAggregator):
+    """Pass-through: each cluster commits its own fresh model (the
+    historical merge semantics, bit-for-bit). Exists so that
+    ``EngineConfig.aggregator`` always names a real object."""
+
+    name = "fedavg"
+    identity = True
+
+    def robustify(self, old_stacked, new_stacked, valid, obs=None):
+        return new_stacked
+
+
+def _valid_rows(new_stacked, valid: np.ndarray):
+    """Gather the valid lanes into a fresh (n_valid, ...) pytree."""
+    idx = np.flatnonzero(valid)
+    return jax.tree.map(lambda l: l[idx], new_stacked), idx
+
+
+class MedianAggregator(RobustAggregator):
+    """Coordinate-wise median over the valid lanes; every cluster commits
+    the consensus (breakdown point f < n/2)."""
+
+    name = "median"
+
+    def robustify(self, old_stacked, new_stacked, valid, obs=None):
+        if not valid.any():
+            return old_stacked
+        rows, _ = _valid_rows(new_stacked, valid)
+        med = jax.tree.map(lambda l: jnp.median(l, axis=0), rows)
+        return _broadcast_lane(new_stacked, med, len(valid))
+
+
+class TrimmedMeanAggregator(RobustAggregator):
+    """Coordinate-wise trimmed mean: sort the valid lanes per coordinate,
+    drop ``floor(trim_frac * n)`` from each end (clamped so at least one
+    value survives), and average the rest."""
+
+    name = "trimmed_mean"
+
+    def __init__(self, trim_frac: float = 0.2):
+        if not 0.0 <= trim_frac < 0.5:
+            raise ValueError(f"trim_frac must be in [0, 0.5), "
+                             f"got {trim_frac}")
+        self.trim_frac = float(trim_frac)
+
+    def robustify(self, old_stacked, new_stacked, valid, obs=None):
+        if not valid.any():
+            return old_stacked
+        rows, _ = _valid_rows(new_stacked, valid)
+        n = int(valid.sum())
+        k = min(int(self.trim_frac * n), (n - 1) // 2)
+
+        def tmean(l):
+            s = jnp.sort(l, axis=0)
+            return jnp.mean(s[k:n - k], axis=0)
+
+        return _broadcast_lane(new_stacked, jax.tree.map(tmean, rows),
+                               len(valid))
+
+
+class NormClipAggregator(RobustAggregator):
+    """Per-lane update clipping: each lane's delta (fresh - old) is
+    scaled down to at most ``mult`` x the median valid delta norm. The
+    only stock estimator that preserves lane identity — honest clusters
+    commit their own models untouched; a large-scale corrupted lane is
+    tamed instead of discarded. Non-finite lanes revert to their old
+    model (a clipped NaN is still a NaN)."""
+
+    name = "norm_clip"
+
+    def __init__(self, mult: float = 2.0):
+        if mult <= 0.0:
+            raise ValueError(f"mult must be > 0, got {mult}")
+        self.mult = float(mult)
+
+    def robustify(self, old_stacked, new_stacked, valid, obs=None):
+        K = len(valid)
+        sq = None
+        for o, nw in zip(jax.tree.leaves(old_stacked),
+                         jax.tree.leaves(new_stacked)):
+            d = (nw.astype(jnp.float32) - o.astype(jnp.float32))
+            contrib = jnp.sum(d.reshape(K, -1) ** 2, axis=1)
+            sq = contrib if sq is None else sq + contrib
+        norms = np.sqrt(np.asarray(sq, np.float64))
+        if not valid.any():
+            return old_stacked
+        thresh = self.mult * float(np.median(norms[valid]))
+        # scale in (0, 1]: 1.0 for lanes within threshold; invalid lanes
+        # get scale 0 (commit the old model)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            scale = np.where(norms > thresh,
+                             np.where(norms > 0, thresh / norms, 1.0), 1.0)
+        scale = np.where(valid, scale, 0.0)
+        if obs is not None:
+            for kc in np.flatnonzero(valid & (norms > thresh)):
+                obs.robust_reject(int(kc), "norm_clip",
+                                  norm=float(norms[kc]),
+                                  thresh=float(thresh))
+        sc = scale.astype(np.float32)
+        return jax.tree.map(
+            lambda o, nw: jnp.where(
+                _bcast_rows(sc, o) >= 1.0, nw,
+                (o + _bcast_rows(sc, o) * (nw - o)).astype(o.dtype)),
+            old_stacked, new_stacked)
+
+
+class KrumAggregator(RobustAggregator):
+    """(multi-)Krum over the valid lanes: score each lane by the sum of
+    its ``n - f - 2`` smallest squared distances to the other lanes and
+    commit the mean of the ``m`` best-scored lanes. With fewer than 3
+    valid lanes the scores are degenerate; fall back to the mean of all
+    valid lanes."""
+
+    name = "krum"
+
+    def __init__(self, f: int = 1, m: int = 1):
+        if f < 0 or m < 1:
+            raise ValueError(f"need f >= 0 and m >= 1, got f={f} m={m}")
+        self.f, self.m = int(f), int(m)
+
+    def robustify(self, old_stacked, new_stacked, valid, obs=None):
+        if not valid.any():
+            return old_stacked
+        rows, idx = _valid_rows(new_stacked, valid)
+        n = len(idx)
+        flat = jnp.concatenate(
+            [l.reshape(n, -1).astype(jnp.float32)
+             for l in jax.tree.leaves(rows)], axis=1)
+        if n < 3:
+            sel = np.arange(n)
+        else:
+            d2 = np.asarray(jnp.sum(
+                (flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1),
+                np.float64)
+            np.fill_diagonal(d2, np.inf)
+            closest = max(1, n - self.f - 2)
+            scores = np.sort(d2, axis=1)[:, :closest].sum(axis=1)
+            sel = np.argsort(scores, kind="stable")[:min(self.m, n)]
+        if obs is not None:
+            for j in range(n):
+                if j not in sel:
+                    obs.robust_reject(int(idx[j]), "krum")
+        chosen = jax.tree.map(lambda l: jnp.mean(l[np.sort(sel)], axis=0),
+                              rows)
+        return _broadcast_lane(new_stacked, chosen, len(valid))
+
+
+AGGREGATORS = {
+    "fedavg": FedAvgAggregator,
+    "median": MedianAggregator,
+    "trimmed_mean": TrimmedMeanAggregator,
+    "norm_clip": NormClipAggregator,
+    "krum": KrumAggregator,
+}
+
+
+def resolve_aggregator(spec) -> RobustAggregator:
+    """``EngineConfig.aggregator`` -> aggregator instance: a registry
+    name, an instance, or None (-> fedavg pass-through)."""
+    if spec is None:
+        return FedAvgAggregator()
+    if isinstance(spec, RobustAggregator):
+        return spec
+    if isinstance(spec, str):
+        try:
+            return AGGREGATORS[spec]()
+        except KeyError:
+            raise KeyError(f"unknown aggregator {spec!r}; "
+                           f"choose from {sorted(AGGREGATORS)}") from None
+    raise TypeError("aggregator must be a name, RobustAggregator "
+                    f"instance, or None, got {type(spec).__name__}")
+
+
+class QuorumPolicy:
+    """Commit gate on the fraction of valid delivered member updates.
+
+    ``fraction`` for a cluster = trained / engaged from its
+    ``RoundSelection`` (1.0 for empty clusters — nothing was owed).
+    ``degraded`` counts below-quorum carry-forward rounds across the
+    session (surfaced in reports and the chaos harness).
+    """
+
+    def __init__(self, min_frac: float = 0.5):
+        if not 0.0 < min_frac <= 1.0:
+            raise ValueError(f"min_frac must be in (0, 1], got {min_frac}")
+        self.min_frac = float(min_frac)
+        self.degraded = 0
+
+    def fractions(self, sels) -> np.ndarray:
+        out = np.empty(len(sels))
+        for kc, sel in enumerate(sels):
+            engaged = len(sel.ids)
+            out[kc] = (float(sel.mask.sum()) / engaged if engaged
+                       else 1.0)
+        return out
+
+
+def resolve_quorum(spec) -> Optional[QuorumPolicy]:
+    """``EngineConfig.quorum`` -> None | QuorumPolicy (a float is the
+    minimum fraction)."""
+    if spec is None or isinstance(spec, QuorumPolicy):
+        return spec
+    if isinstance(spec, (int, float)) and not isinstance(spec, bool):
+        return QuorumPolicy(float(spec))
+    raise TypeError("quorum must be a min-fraction float, QuorumPolicy, "
+                    f"or None, got {type(spec).__name__}")
+
+
+def apply_robustness(ctx, model, state, fresh, sels):
+    """Run the configured aggregator + quorum gate over this round's
+    fresh cluster models, called at the TOP of every pacing merge.
+
+    ``fresh`` may be the list the sequential executor produced or the
+    stacked (K, ...) pytree of the batched/sharded paths; the same
+    container type comes back so merge code downstream is unchanged.
+    With the default fedavg aggregator and no quorum this is a
+    pass-through after two attribute reads (golden bit-parity).
+    """
+    robust = getattr(ctx, "robust", None)
+    quorum = getattr(ctx, "quorum", None)
+    if (robust is None or robust.identity) and quorum is None:
+        return fresh
+    K = len(sels)
+    is_list = isinstance(fresh, list)
+    stacked = model.stack(fresh) if is_list else fresh
+    old = state.cluster_models
+    obs = getattr(ctx, "obs", None)
+
+    if robust is not None and not robust.identity:
+        valid = _lane_finite_mask(stacked, K)
+        if obs is not None:
+            for kc in np.flatnonzero(~valid):
+                obs.robust_reject(int(kc), "nonfinite")
+        stacked = robust.robustify(old, stacked, valid, obs=obs)
+
+    if quorum is not None:
+        fracs = quorum.fractions(sels)
+        ok = fracs >= quorum.min_frac
+        quorum.degraded += int((~ok).sum())
+        if obs is not None:
+            for kc in range(K):
+                obs.quorum(kc, float(fracs[kc]), bool(ok[kc]))
+        # below quorum: carry the old model forward (degraded round);
+        # above: move by the participation fraction — a cluster that
+        # delivered 70% of its members commits 70% of its delta. Full
+        # quorum keeps the fresh model VERBATIM (no float detour).
+        coeff = np.where(ok, fracs, 0.0).astype(np.float32)
+        stacked = jax.tree.map(
+            lambda o, nw: jnp.where(
+                _bcast_rows(coeff, o) >= 1.0, nw,
+                (o + _bcast_rows(coeff, o)
+                 * (nw - o)).astype(o.dtype)),
+            old, stacked)
+
+    return model.unstack(stacked, K) if is_list else stacked

@@ -92,6 +92,20 @@ class EngineObserver:
         the charged cost (retry energy, backoff waits) already went
         through ``comm``/``wait`` — never mirror these."""
 
+    def robust_reject(self, kc: Optional[int], reason: str,
+                      **info) -> None:
+        """The robust aggregation layer (repro.fl.robust, DESIGN.md §14)
+        rejected or tamed cluster ``kc``'s delivered update this merge:
+        ``reason`` in {nonfinite, norm_clip, krum}. Value-layer
+        observability only — robust aggregation never touches the
+        ledger, so implementations must never mirror these."""
+
+    def quorum(self, kc: int, frac: float, ok: bool) -> None:
+        """Quorum gate verdict for cluster ``kc`` at this merge:
+        ``frac`` is the valid-delivered fraction, ``ok`` False when the
+        cluster fell below quorum and carries its model forward as a
+        degraded round. Same no-mirror contract as ``robust_reject``."""
+
     def note(self, name: str, **fields) -> None:
         """Free-form instant (master migration, gossip consensus, ...)."""
 
@@ -217,6 +231,19 @@ class TracingObserver(EngineObserver):
         self.tracer.emit("recovery", action=action, sim_t=float(sim_t),
                          cluster=cluster, sat=sat, round=self._round,
                          **info)
+
+    def robust_reject(self, kc, reason, **info):
+        self.metrics.count("robust_rejects", 1, reason=reason)
+        self.tracer.emit("robust_reject", round=self._round,
+                         cluster=None if kc is None else int(kc),
+                         reason=reason, **info)
+
+    def quorum(self, kc, frac, ok):
+        if not ok:
+            self.metrics.count("quorum_degraded", 1, cluster=kc)
+        self.metrics.observe("quorum_frac", float(frac))
+        self.tracer.emit("quorum", round=self._round, cluster=int(kc),
+                         frac=float(frac), ok=int(ok))
 
     def note(self, name, **fields):
         self.tracer.emit("note", name=name, **fields)

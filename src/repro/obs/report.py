@@ -32,7 +32,8 @@ def summarize(events: list[dict]) -> dict:
          "gs_bits": 0.0, "lisl_bits": 0.0,
          "wait_s": 0.0, "sim_time_s": 0.0,
          "round_latencies": [], "wait_by_cause": {}, "sim_events": {},
-         "faults": {}, "recoveries": {}}
+         "faults": {}, "recoveries": {},
+         "robust_rejects": {}, "degraded_rounds": 0, "quorum_checks": 0}
     for ev in events:
         kind = ev["kind"]
         if kind == "session_start":
@@ -62,6 +63,13 @@ def summarize(events: list[dict]) -> dict:
         elif kind == "recovery":
             ac = ev.get("action", "?")
             s["recoveries"][ac] = s["recoveries"].get(ac, 0) + 1
+        elif kind == "robust_reject":
+            rs = ev.get("reason", "?")
+            s["robust_rejects"][rs] = s["robust_rejects"].get(rs, 0) + 1
+        elif kind == "quorum":
+            s["quorum_checks"] += 1
+            if not ev.get("ok"):
+                s["degraded_rounds"] += 1
         elif kind == "round_end":
             s["rounds"] += 1
             s["round_latencies"].append(ev["sim_dur"])
@@ -69,6 +77,10 @@ def summarize(events: list[dict]) -> dict:
             s["sim_time_s"] = ev["sim_t"]
     s["total_j"] = (s["train_j"] + s["intra_j"] + s["inter_j"]
                     + s["gs_j"])
+    # degraded-mode surfacing (DESIGN.md §14): capped-retry payload
+    # drops were previously only a ledger counter; quorum-gated
+    # carry-forward rounds are new — both get first-class columns
+    s["drops"] = s["recoveries"].get("drop", 0)
     return s
 
 
@@ -99,6 +111,7 @@ _COLS = [("method", "algo", "s"), ("rounds", "rounds", "d"),
          ("inter J", "inter_j", ".3g"), ("GS J", "gs_j", ".3g"),
          ("total J", "total_j", ".3g"), ("GS msgs", "gs_comm", "d"),
          ("LISL msgs", None, "d"), ("wait s", "wait_s", ".3g"),
+         ("drops", "drops", "d"), ("degraded", "degraded_rounds", "d"),
          ("sim s", "sim_time_s", ".4g")]
 
 
@@ -145,6 +158,14 @@ def render(paths: list[str]) -> str:
             rs = ", ".join(f"{k}={v}" for k, v in
                            sorted(s["recoveries"].items()))
             out.append(f"  recovery actions: {rs}")
+        if s["robust_rejects"]:
+            rj = ", ".join(f"{k}={v}" for k, v in
+                           sorted(s["robust_rejects"].items()))
+            out.append(f"  robust rejects: {rj}")
+        if s["quorum_checks"]:
+            out.append(f"  quorum: {s['quorum_checks']} checks, "
+                       f"{s['degraded_rounds']} degraded carry-forward "
+                       f"rounds")
     return "\n".join(out)
 
 

@@ -55,6 +55,10 @@ SCHEMA: dict[str, dict[str, tuple]] = {
               "cluster": (int,), "sat": (int,)},
     "recovery": {"action": (str,), "sim_t": _NUM, "round": (int,),
                  "cluster": (int,), "sat": (int,)},
+    "robust_reject": {"reason": (str,), "round": (int,),
+                      "cluster": (int,)},
+    "quorum": {"frac": _NUM, "ok": (int,), "round": (int,),
+               "cluster": (int,)},
     "round_end": {"round": (int,), "sim_t": _NUM, "sim_dur": _NUM,
                   "host_dur": _NUM},
     "session_end": {"sim_t": _NUM, "ledger": (dict,)},
@@ -212,6 +216,22 @@ class SpanTracer:
                     "ph": "i", "pid": 1, "tid": tid(1, "faults"),
                     "name": ev.get("fkind") or ev.get("action"),
                     "s": "t", "ts": ev["sim_t"] * 1e6,
+                    "args": {k: v for k, v in ev.items()
+                             if k not in ("v", "kind", "t_host")}})
+            elif kind in ("robust_reject", "quorum"):
+                # value-layer robustness timeline: instants on one
+                # "robust" track (no sim_t of their own — merges land at
+                # the round boundary, so anchor at the host clock's
+                # trace position via the round_start convention: use 0
+                # when no round context exists)
+                if kind == "quorum" and ev.get("ok"):
+                    continue          # only degraded verdicts plot
+                name = (ev.get("reason") if kind == "robust_reject"
+                        else f"quorum degraded c{ev.get('cluster')}")
+                out.append({
+                    "ph": "i", "pid": 1, "tid": tid(1, "robust"),
+                    "name": name, "s": "t",
+                    "ts": ev["t_host"] * 1e6,
                     "args": {k: v for k, v in ev.items()
                              if k not in ("v", "kind", "t_host")}})
             elif kind == "phase":

@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.fl.engine.pacing import (SyncPacing, _bcast, _charge_train,
                                     _combine, weights_from_staleness)
+from repro.fl.robust import apply_robustness
 from repro.sim.clocks import ClockSet
 from repro.sim.events import (CONTACT_CLOSE, CONTACT_OPEN, MERGE_COMMIT,
                               STRAGGLER_TIMEOUT, TRAIN_DONE, TRANSFER_DONE,
@@ -355,6 +356,7 @@ class EventAsyncPacing:
             ctx.obs.async_merge(kc, int(ranks[kc]), float(alphas[kc]))
 
     def merge(self, ctx, model, state, new_models, sels, round_idx):
+        new_models = apply_robustness(ctx, model, state, new_models, sels)
         K = len(new_models)
         alphas, ranks = self._merge_weights(ctx)
         self._observe_merge(ctx, alphas, ranks)
@@ -366,6 +368,8 @@ class EventAsyncPacing:
 
     def merge_stacked(self, ctx, model, state, new_stacked, sels,
                       round_idx):
+        new_stacked = apply_robustness(ctx, model, state, new_stacked,
+                                       sels)
         alphas, ranks = self._merge_weights(ctx)
         self._observe_merge(ctx, alphas, ranks)
         al = alphas.astype(np.float32)

@@ -52,6 +52,7 @@ MASTER_FAIL = "master_fail"
 PAYLOAD_CORRUPT = "payload_corrupt"
 PAYLOAD_LOSS = "payload_loss"
 CLOCK_DRIFT = "clock_drift"
+SILENT_CORRUPT = "silent_corrupt"
 
 # Physical resolution order for co-timed events (smaller pops first).
 # Fault kinds extend the total order at negative priorities so the
@@ -61,6 +62,7 @@ CLOCK_DRIFT = "clock_drift"
 # DOWN, never a lost fault. Existing kinds keep their exact values: the
 # golden event order of the physical drivers is untouched.
 PRIORITY = {
+    SILENT_CORRUPT: -9,
     LINK_UP: -8,
     SAT_REBOOT: -7,
     LINK_DOWN: -6,

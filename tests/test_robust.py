@@ -1,0 +1,486 @@
+"""Byzantine-robust aggregation + quorum gating (DESIGN.md §14).
+
+Covers the repro.fl.robust estimators as units, the quorum commit gate,
+``apply_robustness`` over both merge container types, silent-corruption
+determinism across the list and stacked executor paths, the transport
+retry-policy overrides, and — via mini_hypothesis/hypothesis — the
+permutation-invariance and breakdown-point properties that make
+median/trimmed-mean actual defenses where plain averaging is not.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # pragma: no cover - env dep
+    from mini_hypothesis import given, settings, strategies as st
+
+from repro.fl.robust import (AGGREGATORS, FedAvgAggregator, KrumAggregator,
+                             MedianAggregator, NormClipAggregator,
+                             QuorumPolicy, TrimmedMeanAggregator,
+                             _lane_finite_mask, apply_robustness,
+                             resolve_aggregator, resolve_quorum)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tree(seed, shape=(3, 2)):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, shape), "b": jnp.zeros(shape[-1:])}
+
+
+def _lanes(K, seed0=0):
+    return _stack([_tree(seed0 + i) for i in range(K)])
+
+
+class _Sel:
+    """RoundSelection stand-in: just the ids/mask the quorum reads."""
+
+    def __init__(self, engaged, trained):
+        self.ids = np.arange(engaged)
+        self.mask = np.zeros(engaged, bool)
+        self.mask[:trained] = True
+
+
+class _Ctx:
+    def __init__(self, robust=None, quorum=None, obs=None):
+        self.robust, self.quorum, self.obs = robust, quorum, obs
+
+
+class _Obs:
+    def __init__(self):
+        self.rejects, self.quorums = [], []
+
+    def robust_reject(self, kc, reason, **info):
+        self.rejects.append((kc, reason))
+
+    def quorum(self, kc, frac, ok):
+        self.quorums.append((kc, frac, ok))
+
+
+class _Model:
+    def stack(self, params_list):
+        return _stack(params_list)
+
+    def unstack(self, stacked, k):
+        return [jax.tree.map(lambda x: x[i], stacked) for i in range(k)]
+
+
+class _State:
+    def __init__(self, cluster_models):
+        self.cluster_models = cluster_models
+
+
+# ---------------------------------------------------------------------------
+# aggregator units
+# ---------------------------------------------------------------------------
+
+class TestAggregators:
+    def test_fedavg_is_identity(self):
+        old, new = _lanes(4), _lanes(4, 10)
+        agg = FedAvgAggregator()
+        assert agg.identity
+        assert agg.robustify(old, new, np.ones(4, bool)) is new
+
+    def test_median_broadcasts_consensus(self):
+        old, new = _lanes(5), _lanes(5, 10)
+        out = MedianAggregator().robustify(old, new, np.ones(5, bool))
+        ref = jnp.median(new["w"], axis=0)
+        for k in range(5):
+            assert np.allclose(out["w"][k], ref)
+
+    def test_median_ignores_invalid_lane(self):
+        old, new = _lanes(5), _lanes(5, 10)
+        bad = jax.tree.map(lambda l: l.at[2].set(jnp.nan), new)
+        mask = _lane_finite_mask(bad, 5)
+        assert mask.tolist() == [True, True, False, True, True]
+        out = MedianAggregator().robustify(old, bad, mask)
+        assert np.isfinite(np.asarray(out["w"])).all()
+        ref = jnp.median(new["w"][np.array([0, 1, 3, 4])], axis=0)
+        assert np.allclose(out["w"][0], ref)
+
+    def test_all_invalid_falls_back_to_old(self):
+        old, new = _lanes(3), _lanes(3, 10)
+        none = np.zeros(3, bool)
+        for agg in (MedianAggregator(), TrimmedMeanAggregator(),
+                    NormClipAggregator(), KrumAggregator()):
+            out = agg.robustify(old, new, none)
+            assert np.array_equal(np.asarray(out["w"]),
+                                  np.asarray(old["w"])), agg.name
+
+    def test_trimmed_mean_drops_extremes(self):
+        old = _lanes(5)
+        rows = [_tree(i) for i in range(5)]
+        rows[0] = jax.tree.map(lambda l: l + 1e6, rows[0])   # poisoned
+        new = _stack(rows)
+        out = TrimmedMeanAggregator(0.2).robustify(
+            old, new, np.ones(5, bool))
+        clean = np.stack([np.asarray(r["w"]) for r in rows[1:]])
+        assert np.asarray(out["w"]).max() <= clean.max() + 1e-5
+
+    def test_norm_clip_preserves_honest_lanes_and_tames_outlier(self):
+        old = _lanes(5)
+        rows = [jax.tree.map(lambda l: l + 0.1, _tree(i))
+                for i in range(5)]
+        rows[3] = jax.tree.map(lambda l: l + 1e4, rows[3])
+        new = _stack(rows)
+        obs = _Obs()
+        out = NormClipAggregator(mult=2.0).robustify(
+            old, new, np.ones(5, bool), obs=obs)
+        for k in (0, 1, 2, 4):    # honest lanes commit verbatim
+            assert np.array_equal(np.asarray(out["w"][k]),
+                                  np.asarray(new["w"][k]))
+        d_out = float(jnp.linalg.norm(out["w"][3] - old["w"][3]))
+        d_in = float(jnp.linalg.norm(new["w"][3] - old["w"][3]))
+        assert d_out < d_in / 10
+        assert (3, "norm_clip") in obs.rejects
+
+    def test_krum_rejects_outlier(self):
+        old = _lanes(5)
+        rows = [jax.tree.map(lambda l: l * 0.01, _tree(i))
+                for i in range(5)]
+        rows[2] = jax.tree.map(lambda l: l + 50.0, rows[2])
+        new = _stack(rows)
+        obs = _Obs()
+        out = KrumAggregator(f=1, m=1).robustify(
+            old, new, np.ones(5, bool), obs=obs)
+        assert (2, "krum") in obs.rejects
+        assert float(np.abs(np.asarray(out["w"])).max()) < 1.0
+
+    def test_registry_and_resolvers(self):
+        assert sorted(AGGREGATORS) == ["fedavg", "krum", "median",
+                                       "norm_clip", "trimmed_mean"]
+        assert resolve_aggregator(None).identity
+        agg = MedianAggregator()
+        assert resolve_aggregator(agg) is agg
+        with pytest.raises(KeyError, match="unknown aggregator"):
+            resolve_aggregator("nope")
+        with pytest.raises(TypeError):
+            resolve_aggregator(3.0)
+        with pytest.raises(ValueError):
+            TrimmedMeanAggregator(0.5)
+        with pytest.raises(ValueError):
+            NormClipAggregator(0.0)
+        with pytest.raises(ValueError):
+            KrumAggregator(m=0)
+
+
+# ---------------------------------------------------------------------------
+# quorum gate
+# ---------------------------------------------------------------------------
+
+class TestQuorum:
+    def test_fractions(self):
+        q = QuorumPolicy(0.5)
+        fr = q.fractions([_Sel(2, 2), _Sel(2, 1), _Sel(4, 1), _Sel(0, 0)])
+        assert fr.tolist() == [1.0, 0.5, 0.25, 1.0]
+
+    def test_resolve(self):
+        assert resolve_quorum(None) is None
+        q = resolve_quorum(0.6)
+        assert isinstance(q, QuorumPolicy) and q.min_frac == 0.6
+        assert resolve_quorum(q) is q
+        with pytest.raises(TypeError):
+            resolve_quorum(True)
+        with pytest.raises(ValueError):
+            QuorumPolicy(0.0)
+
+    def test_below_quorum_carries_old_forward(self):
+        old, new = _lanes(3), _lanes(3, 10)
+        q = QuorumPolicy(0.6)
+        ctx = _Ctx(quorum=q, obs=_Obs())
+        sels = [_Sel(2, 2), _Sel(2, 1), _Sel(2, 2)]   # cluster 1 at 0.5
+        out = apply_robustness(ctx, _Model(), _State(old), new, sels)
+        assert np.array_equal(np.asarray(out["w"][1]),
+                              np.asarray(old["w"][1]))
+        assert np.array_equal(np.asarray(out["w"][0]),
+                              np.asarray(new["w"][0]))
+        assert q.degraded == 1
+        assert (1, 0.5, False) in ctx.obs.quorums
+
+    def test_partial_quorum_reweights_delta(self):
+        old, new = _lanes(4), _lanes(4, 10)
+        ctx = _Ctx(quorum=QuorumPolicy(0.5), obs=_Obs())
+        sels = [_Sel(2, 2), _Sel(4, 3), _Sel(2, 2), _Sel(2, 2)]
+        out = apply_robustness(ctx, _Model(), _State(old), new, sels)
+        want = old["w"][1] + 0.75 * (new["w"][1] - old["w"][1])
+        assert np.allclose(np.asarray(out["w"][1]), np.asarray(want))
+
+    def test_full_quorum_is_verbatim(self):
+        old, new = _lanes(3), _lanes(3, 10)
+        ctx = _Ctx(quorum=QuorumPolicy(0.5))
+        sels = [_Sel(2, 2)] * 3
+        out = apply_robustness(ctx, _Model(), _State(old), new, sels)
+        assert np.array_equal(np.asarray(out["w"]), np.asarray(new["w"]))
+
+
+# ---------------------------------------------------------------------------
+# apply_robustness plumbing
+# ---------------------------------------------------------------------------
+
+class TestApplyRobustness:
+    def test_default_path_returns_same_object(self):
+        new = _lanes(3, 10)
+        ctx = _Ctx(robust=FedAvgAggregator(), quorum=None)
+        out = apply_robustness(ctx, _Model(), _State(_lanes(3)), new,
+                               [_Sel(2, 2)] * 3)
+        assert out is new    # pointer-free early-out: golden bit-parity
+
+    def test_list_and_stacked_agree(self):
+        old = _lanes(4)
+        rows = [_tree(10 + i) for i in range(4)]
+        rows[1] = jax.tree.map(lambda l: jnp.full_like(l, jnp.nan),
+                               rows[1])
+        sels = [_Sel(2, 2)] * 4
+        model = _Model()
+        outs = []
+        for fresh in (list(rows), _stack(rows)):
+            ctx = _Ctx(robust=MedianAggregator(), quorum=QuorumPolicy(0.5),
+                       obs=_Obs())
+            out = apply_robustness(ctx, model, _State(old), fresh, sels)
+            if isinstance(out, list):
+                assert len(out) == 4
+                out = _stack(out)
+            outs.append(np.asarray(out["w"]))
+        assert np.array_equal(outs[0], outs[1])
+
+    def test_nonfinite_reject_events(self):
+        old = _lanes(3)
+        rows = [_tree(10 + i) for i in range(3)]
+        rows[2] = jax.tree.map(lambda l: l * jnp.inf, rows[2])
+        ctx = _Ctx(robust=TrimmedMeanAggregator(), obs=_Obs())
+        apply_robustness(ctx, _Model(), _State(old), _stack(rows),
+                         [_Sel(2, 2)] * 3)
+        assert (2, "nonfinite") in ctx.obs.rejects
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis / mini_hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(3, 8), seed=st.integers(0, 100))
+def test_permutation_invariance(n, seed):
+    """Median/trimmed-mean consensus must not depend on lane order."""
+    rng = np.random.default_rng(seed)
+    rows = [_tree(int(rng.integers(1000))) for _ in range(n)]
+    perm = rng.permutation(n)
+    valid = np.ones(n, bool)
+    old = _lanes(n)
+    for agg in (MedianAggregator(), TrimmedMeanAggregator(0.2)):
+        a = agg.robustify(old, _stack(rows), valid)
+        b = agg.robustify(old, _stack([rows[i] for i in perm]), valid)
+        assert np.array_equal(np.asarray(a["w"][0]),
+                              np.asarray(b["w"][0])), agg.name
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 8), seed=st.integers(0, 100))
+def test_fedavg_bit_parity_property(n, seed):
+    """With no corrupted lanes the fedavg path returns the inputs
+    untouched — the exact object, any n, any seed."""
+    rows = [_tree(seed + i) for i in range(n)]
+    new = _stack(rows)
+    ctx = _Ctx(robust=FedAvgAggregator())
+    out = apply_robustness(ctx, _Model(), _State(_lanes(n)), new,
+                           [_Sel(2, 2)] * n)
+    assert out is new
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(3, 9), seed=st.integers(0, 100),
+       scale=st.floats(1e3, 1e8))
+def test_breakdown_point(n, seed, scale):
+    """With f poisoned lanes inside each estimator's tolerance (f < n/2
+    for the median, f <= trim count for the trimmed mean), the consensus
+    stays inside the honest coordinate envelope; the plain lane mean
+    (what FedAvg's cross-aggregation mixes) is dragged out by a single
+    poisoned lane."""
+    rng = np.random.default_rng(seed)
+    base = [_tree(int(rng.integers(1000))) for _ in range(n)]
+    trim = TrimmedMeanAggregator(0.34)
+    cases = ((MedianAggregator(), (n - 1) // 2),
+             (trim, min(int(trim.trim_frac * n), (n - 1) // 2)))
+    for agg, f in cases:
+        rows = list(base)
+        honest = np.stack([np.asarray(r["w"]) for r in rows[f:]])
+        lo, hi = honest.min(), honest.max()
+        for i in range(f):
+            rows[i] = jax.tree.map(lambda l: l + scale, rows[i])
+        new, valid, old = _stack(rows), np.ones(n, bool), _lanes(n)
+        out = np.asarray(agg.robustify(old, new, valid)["w"][0])
+        assert out.min() >= lo - 1e-4 and out.max() <= hi + 1e-4, agg.name
+        if f:   # the undefended average has breakdown point 0
+            assert float(jnp.mean(new["w"], axis=0).max()) > hi + 1.0
+
+
+# ---------------------------------------------------------------------------
+# silent corruption: injector mechanics + schedule generators
+# ---------------------------------------------------------------------------
+
+class TestSilentCorruption:
+    def _pending(self, mode, cluster=1, seed=7):
+        return {"cluster": cluster, "mode": mode, "scale": 100.0,
+                "seed": seed}
+
+    @pytest.mark.parametrize("mode", ["sign_flip", "large_scale",
+                                      "nan_splat", "bit_noise"])
+    def test_list_and_stacked_corruption_agree(self, mode):
+        from repro.faults import FaultSchedule, as_injector
+
+        # lanes big enough that the 1% bit_noise mode certainly flips
+        # something (P(no flip) ~ 0.99^2048)
+        rows = [_tree(20 + i, shape=(64, 32)) for i in range(4)]
+        sels = [_Sel(2, 2)] * 4
+        outs = []
+        for fresh in (list(rows), _stack(rows)):
+            inj = as_injector(FaultSchedule())
+            inj.state.silent_pending.append(self._pending(mode))
+            out = inj.corrupt_result(_Ctx(), _Model(), fresh, sels)
+            if isinstance(out, list):
+                out = _stack(out)
+            outs.append(np.asarray(out["w"]))
+        if mode == "nan_splat":
+            assert np.isnan(outs[0][1]).all() and np.isnan(outs[1][1]).all()
+            assert np.isfinite(outs[0][0]).all()
+        else:
+            assert np.array_equal(outs[0], outs[1])
+            assert not np.array_equal(outs[0][1], np.asarray(rows[1]["w"]))
+            # untargeted lanes untouched, bit-for-bit
+            assert np.array_equal(outs[0][0], np.asarray(rows[0]["w"]))
+
+    def test_corruption_consumes_pending_and_spares_input(self):
+        from repro.faults import FaultSchedule, as_injector
+
+        rows = [_tree(30 + i) for i in range(3)]
+        keep = np.asarray(rows[0]["w"]).copy()
+        inj = as_injector(FaultSchedule())
+        inj.state.silent_pending.append(self._pending("sign_flip",
+                                                      cluster=0))
+        out = inj.corrupt_result(_Ctx(), _Model(), list(rows),
+                                 [_Sel(2, 2)] * 3)
+        assert inj.state.silent_pending == []
+        assert np.array_equal(np.asarray(rows[0]["w"]), keep)
+        assert np.array_equal(np.asarray(out[0]["w"]), -keep)
+
+    def test_state_roundtrip_carries_pending(self):
+        from repro.faults.model import FaultState
+
+        fs = FaultState()
+        fs.silent_pending.append(self._pending("bit_noise"))
+        fs2 = FaultState()
+        fs2.load(fs.to_dict())
+        assert fs2.silent_pending == fs.silent_pending
+        fs2.reset()
+        assert fs2.silent_pending == []
+
+    def test_poisson_silent_family(self):
+        from repro.faults import FaultSchedule, SilentCorruption
+
+        a = FaultSchedule.poisson(4000.0, seed=3, n_clusters=4,
+                                  silent_rate_per_h=20.0)
+        b = FaultSchedule.poisson(4000.0, seed=3, n_clusters=4,
+                                  silent_rate_per_h=20.0)
+        assert a.faults == b.faults    # pure function of the arguments
+        silent = [f for f in a.faults if isinstance(f, SilentCorruption)]
+        assert silent and all(f.mode in ("sign_flip", "large_scale",
+                                         "nan_splat", "bit_noise")
+                              for f in silent)
+        none = FaultSchedule.poisson(4000.0, seed=3, n_clusters=4)
+        assert not any(isinstance(f, SilentCorruption)
+                       for f in none.faults)
+
+    def test_gilbert_elliott_silent_mode(self):
+        from repro.faults import FaultSchedule, LinkOutage, SilentCorruption
+
+        sch = FaultSchedule.gilbert_elliott(
+            2000.0, seed=1, p_g2b=0.4, mode="silent",
+            corrupt_mode="bit_noise")
+        kinds = {type(f) for f in sch.faults}
+        assert kinds == {SilentCorruption}
+        out = FaultSchedule.gilbert_elliott(2000.0, seed=1, p_g2b=0.4)
+        assert {type(f) for f in out.faults} == {LinkOutage}
+        with pytest.raises(ValueError):
+            FaultSchedule.gilbert_elliott(100.0, mode="nope")
+
+    def test_trace_events_validate(self):
+        from repro.obs import TracingObserver
+        from repro.obs.trace import validate_event
+
+        obs = TracingObserver()
+        obs.robust_reject(2, "nonfinite")
+        obs.robust_reject(None, "norm_clip", norm=3.0, thresh=1.0)
+        obs.quorum(1, 0.5, False)
+        obs.quorum(0, 1.0, True)
+        for ev in obs.tracer.events:
+            assert validate_event(ev) == [], ev
+        assert obs.metrics.total("robust_rejects") == 2
+        assert obs.metrics.total("quorum_degraded") == 1
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+class TestEngineIntegration:
+    def test_golden_parity_with_explicit_fedavg(self):
+        from golden_capture import build_setup, session_config
+        from repro.core.session import Session
+
+        golden = json.load(open(os.path.join(os.path.dirname(__file__),
+                                             "golden_engine.json")))
+        env, model = build_setup()
+        cfg = dataclasses.replace(session_config(model),
+                                  aggregator="fedavg")
+        _, led, _ = Session(cfg, env, model).run()
+        assert dataclasses.asdict(led) == golden["CroSatFL"]["ledger"]
+
+    def test_retry_overrides_reach_fault_state(self):
+        from repro.faults import FaultSchedule
+        from repro.faults.chaos import build_engine, tiny_setup
+
+        env, model = tiny_setup()
+        eng = build_engine("CroSatFL", env, model, rounds=1,
+                           faults=FaultSchedule())
+        assert eng.faults.state.backoff0_s == 30.0       # schedule default
+        assert eng.faults.state.max_retries == 4
+        import repro.fl.engine as fe
+        cfg = fe.EngineConfig(rounds=1, local_epochs=1, c_flop=5e7,
+                              model_bits=model.model_bits(),
+                              retry_base_s=5.0, retry_max_attempts=9)
+        eng2 = fe.make_crosatfl(cfg, env, model, faults=FaultSchedule())
+        assert eng2.faults.state.backoff0_s == 5.0
+        assert eng2.faults.state.max_retries == 9
+        eng2.faults.state.reset()          # bind()'s reset must not undo it
+        assert eng2.faults.state.backoff0_s == 5.0
+        assert eng2.faults.state.max_retries == 9
+
+    def test_fedavg_poisoned_median_survives(self):
+        from repro.faults import corruption_schedule
+        from repro.faults.chaos import build_engine, tiny_setup
+
+        env, model = tiny_setup()
+        models = {}
+        for agg in ("fedavg", "median"):
+            eng = build_engine("CroSatFL", env, model, rounds=2,
+                               faults=corruption_schedule(),
+                               aggregator=agg, quorum=0.6)
+            models[agg], _, _ = eng.run()
+            if agg == "median":
+                assert eng.quorum.degraded >= 1
+        fed = np.concatenate([np.asarray(l).ravel() for l in
+                              jax.tree.leaves(models["fedavg"])])
+        med = np.concatenate([np.asarray(l).ravel() for l in
+                              jax.tree.leaves(models["median"])])
+        assert not np.isfinite(fed).all()    # NaN lane spread undefended
+        assert np.isfinite(med).all()        # consensus filtered it
